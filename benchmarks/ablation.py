@@ -1,0 +1,63 @@
+"""Paper Table 3/4 + Appendix B analogue: pipeline ablations.
+
+* two-stage (sketch -> reason) vs one-stage TL generation: the one-stage
+  backend manifests the paper's two failure modes; the validator's catch
+  rate is the paper's "none of the existing LLMs generate correct TL code
+  in a single stage" result, mechanised.
+* development-cost table: TL pipeline wall-clock from spec to validated
+  Pallas kernel (the paper's "10 mins vs months" row — here milliseconds,
+  since the generator is deterministic).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.llm import OneStageBackend
+from repro.core.pipeline import generate_attention_kernel
+from repro.core.spec import AttnSpec
+from repro.core.target import get_target
+from repro.core.tl.parser import parse
+from repro.core.tl.validator import validate
+from .common import CsvOut
+
+SPECS = {
+    "mha-128": AttnSpec.mha(16, 128),
+    "gqa-128": AttnSpec.gqa(32, 8, 128),
+    "mqa-64": AttnSpec.mqa(32, 64),
+    "mla": AttnSpec.mla(16),
+    "mha-window": AttnSpec.mha(16, 64, window=512),
+}
+
+
+def run():
+    out = CsvOut(["spec", "mode", "valid", "caught_codes", "gen_ms"])
+    for name, spec in SPECS.items():
+        # two-stage (the paper's workflow)
+        t0 = time.perf_counter()
+        kern = generate_attention_kernel(spec, 1024, 1024)
+        dt = (time.perf_counter() - t0) * 1e3
+        errs = [d.code for d in kern.diagnostics if d.is_error]
+        out.row(name, "two-stage", int(not errs), ";".join(errs) or "-",
+                f"{dt:.1f}")
+        # one-stage ablation: both Appendix-B failure modes
+        for failure in ("reshape_omission", "gemm_layout_error"):
+            backend = OneStageBackend(failure)
+            t0 = time.perf_counter()
+            txt = backend.generate_tl_code(spec, 1024, 1024,
+                                           get_target("v5e"))
+            prog = parse(txt)
+            prog.meta["stage"] = "code"
+            prog.outputs = ("O",)
+            from repro.core.reason import reason_parameters
+            from repro.core.sketch import generate_sketch
+            prog.params = reason_parameters(
+                generate_sketch(spec), spec, q_len=1024, kv_len=1024).params
+            codes = sorted({d.code for d in validate(prog) if d.is_error})
+            dt = (time.perf_counter() - t0) * 1e3
+            out.row(name, f"one-stage/{failure}", 0, ";".join(codes),
+                    f"{dt:.1f}")
+
+
+if __name__ == "__main__":
+    run()

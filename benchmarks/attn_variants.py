@@ -1,0 +1,67 @@
+"""Paper Table 1 analogue: MHA/GQA/MQA x seqlen x causal.
+
+Columns:
+  naive_ms     — materialised-scores einsum attention (the "vanilla LLM"
+                 implementation; what DeepSeek-V3 produced in the paper)
+  tl_ms        — the TL-generated kernel (Pallas interpret on CPU)
+  xla_flash_ms — the same TL blocking through XLA (the model compile path)
+  est_v5e_tflops — autotuner roofline projection for the TL kernel on v5e
+  paper convention FLOPs: 4*s^2*d*h (halved for causal)
+
+Sequence lengths are scaled down from the paper's 512..16k to keep CPU
+runtime sane; pass --full for the paper grid.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.spec import AttnSpec
+from repro.kernels import ops, ref
+from .common import CsvOut, paper_flops, timeit
+
+
+def run(full: bool = False):
+    seqlens = [512, 1024, 2048, 4096, 8192, 16384] if full else [256, 512, 1024]
+    total_tokens = 16384 if full else 2048  # paper: batch*seq = 16k
+    out = CsvOut(["variant", "causal", "seqlen", "head_dim", "naive_ms",
+                  "tl_ms", "xla_flash_ms", "est_v5e_tflops",
+                  "paper_gflops"])
+    rng = np.random.default_rng(0)
+    for head_dim, heads in [(64, 16), (128, 8)] if not full else [(64, 32), (128, 16)]:
+        for variant, kvh in [("mha", heads), ("gqa", max(1, heads // 4)),
+                             ("mqa", 1)]:
+            for causal in (True, False):
+                for s in seqlens:
+                    b = max(1, total_tokens // s)
+                    q = jnp.asarray(rng.standard_normal(
+                        (b, heads, s, head_dim)) * 0.5, jnp.float32)
+                    k = jnp.asarray(rng.standard_normal(
+                        (b, kvh, s, head_dim)) * 0.5, jnp.float32)
+                    v = jnp.asarray(rng.standard_normal(
+                        (b, kvh, s, head_dim)) * 0.5, jnp.float32)
+
+                    t_naive = timeit(lambda: ref.attention(
+                        q, k, v, causal=causal))
+                    t_tl = timeit(lambda: ops.flash_attention(
+                        q, k, v, causal=causal))
+                    from repro.models.attention import xla_flash
+                    t_xla = timeit(lambda: xla_flash(
+                        q, k, v, causal=causal, scale=head_dim ** -0.5,
+                        chunk=512))
+                    spec = AttnSpec(variant=variant, num_q_heads=heads,
+                                    num_kv_heads=kvh, head_dim=head_dim,
+                                    causal=causal)
+                    tune = autotune.tune(spec, s, s, "v5e")
+                    est = tune.efficiency * 197.0
+                    out.row(variant, int(causal), s, head_dim,
+                            f"{t_naive*1e3:.1f}", f"{t_tl*1e3:.1f}",
+                            f"{t_xla*1e3:.1f}", f"{est:.1f}",
+                            f"{paper_flops(s, head_dim, heads, b, causal)/1e9:.1f}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

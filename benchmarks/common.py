@@ -1,0 +1,45 @@
+"""Shared benchmark utilities.
+
+This container has no GPU/TPU, so absolute TFLOPS are not measurable.
+Each benchmark reports, per configuration:
+
+  * CPU wall-clock (interpret/XLA-CPU) — for *relative* comparisons that
+    mirror the paper's table layout (TL kernel vs naive vs reference), and
+  * the analytic v5e projection from the autotuner's roofline model
+    (``est_tflops``) — the number comparable to the paper's TFLOPS columns.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock seconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def paper_flops(seqlen: int, head_dim: int, heads: int, batch: int = 1,
+                causal: bool = False) -> float:
+    """The paper's convention: 4 * seqlen^2 * head_dim * heads."""
+    f = 4.0 * seqlen * seqlen * head_dim * heads * batch
+    return f / 2 if causal else f
+
+
+class CsvOut:
+    def __init__(self, header: list[str]):
+        self.header = header
+        print(",".join(header))
+
+    def row(self, *vals):
+        print(",".join(str(v) for v in vals))

@@ -1,0 +1,44 @@
+"""Paper Table 6 analogue: datatype portability (FP8 MHA).
+
+The paper's case study generates an FP8 MHA kernel for L40S — a dtype no
+hand library supported — by swapping the hardware description in the
+translation prompt.  Here the same portability lever is the
+:class:`TPUTarget` descriptor: describe a v6e-class part (fp8-capable MXU,
+2x bf16 throughput) and the *same TL pipeline* re-reasons block sizes and
+re-projects the roofline; the kernel itself is validated in interpret mode
+at bf16 numerics (no fp8 hardware here — documented in DESIGN.md A4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import autotune
+from repro.core.pipeline import generate_attention_kernel
+from repro.core.reason import _vmem_bytes
+from repro.core.spec import AttnSpec
+from repro.core.target import get_target
+from .common import CsvOut
+
+
+def run():
+    out = CsvOut(["seqlen", "dtype", "target", "BM", "BN", "onchip_kb",
+                  "est_tflops", "valid"])
+    v6e = get_target("v6e")
+    peak_fp8 = v6e.peak_bf16_tflops * 2  # fp8 MXU rate on v6e-class parts
+    for s in (512, 1024, 2048, 4096, 8192, 16384):
+        for dtype, tgt, peak in (("bf16", "v5e", 197.0),
+                                 ("bf16", "v6e", v6e.peak_bf16_tflops),
+                                 ("fp8", "v6e", peak_fp8)):
+            spec = AttnSpec.mha(16, 128, dtype=dtype)
+            kern = generate_attention_kernel(spec, s, s, target=tgt)
+            tune = autotune.tune(spec, s, s, tgt)
+            onchip = _vmem_bytes(spec, tune.blocks.bm, tune.blocks.bn)
+            est = tune.efficiency * peak
+            errs = [d for d in kern.diagnostics if d.is_error]
+            out.row(s, dtype, tgt, tune.blocks.bm, tune.blocks.bn,
+                    f"{onchip/1024:.0f}", f"{est:.1f}", int(not errs))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Paper Table 5 analogue: vanilla/CoT-style implementation vs LLM-TL.
+
+The paper's "vanilla LLM" and "+CoT" rows are unoptimised implementations
+(materialised scores, no blocking/fusion); "+LLM-TL" is the generated fused
+kernel.  Here the same comparison is made structurally:
+
+  naive      — materialised S = QK^T softmax einsum (O(s^2) memory)
+  tl_kernel  — TL pipeline output (blocked, fused, online softmax)
+
+reporting peak intermediate bytes (the OOM column of Table 1/5: naive OOMs
+at 16k in the paper) and the v5e roofline projection.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import autotune
+from repro.core.reason import _vmem_bytes
+from repro.core.spec import AttnSpec
+from repro.kernels import ops, ref
+from .common import CsvOut, timeit
+
+
+def run(full: bool = False):
+    seqlens = [512, 1024, 2048, 4096, 8192, 16384] if full else [256, 512, 1024, 2048]
+    heads, d = 16, 64
+    out = CsvOut(["seqlen", "naive_ms", "tl_ms", "naive_peak_mb",
+                  "tl_onchip_kb", "est_v5e_tflops"])
+    rng = np.random.default_rng(0)
+    for s in seqlens:
+        b = max(1, 2048 // s)
+        q = jnp.asarray(rng.standard_normal((b, heads, s, d)) * 0.5,
+                        jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, heads, s, d)) * 0.5,
+                        jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, heads, s, d)) * 0.5,
+                        jnp.float32)
+        t_naive = timeit(lambda: ref.attention(q, k, v, causal=True))
+        t_tl = timeit(lambda: ops.flash_attention(q, k, v, causal=True))
+        naive_peak = b * heads * s * s * 4          # materialised scores
+        spec = AttnSpec.mha(heads, d)
+        tune = autotune.tune(spec, s, s, "v5e")
+        onchip = _vmem_bytes(spec, tune.blocks.bm, tune.blocks.bn)
+        out.row(s, f"{t_naive*1e3:.1f}", f"{t_tl*1e3:.1f}",
+                f"{naive_peak/2**20:.1f}", f"{onchip/2**10:.1f}",
+                f"{tune.efficiency*197.0:.1f}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

@@ -1,0 +1,48 @@
+"""Render the 40-cell x 2-mesh roofline table from results/dryrun.json
+(produced by repro.launch.dryrun) as the EXPERIMENTS.md §Roofline table."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.roofline.report import HEADER
+
+
+def fmt_row(r) -> str:
+    if r["status"] == "skip":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — "
+                f"| — | — | — |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — "
+                f"| — | — | — |")
+    t = r["roofline"]
+    fits = "" if r["memory_per_device_gib"] <= 16 else " **(>16G)**"
+    return (f"| {t['arch']} | {t['shape']} | {t['mesh']} | "
+            f"{t['compute_s']*1e3:.0f} | {t['memory_s']*1e3:.0f} | "
+            f"{t['collective_s']*1e3:.0f} | {t['dominant']} | "
+            f"{t['useful_ratio']:.2f} | {t['roofline_frac']:.3f} | "
+            f"{r['memory_per_device_gib']:.1f}{fits} |")
+
+
+def run(path: str = "results/dryrun.json"):
+    if not os.path.exists(path):
+        print(f"(no {path}; run python -m repro.launch.dryrun --all "
+              f"--both-meshes --out {path})")
+        return
+    rows = json.load(open(path))
+    order = {"16x16": 0, "2x16x16": 1}
+    rows.sort(key=lambda r: (order.get(r["mesh"], 9), r["arch"], r["shape"]))
+    print(HEADER.replace("roofline frac |", "roofline frac | mem/dev GiB |")
+          .replace("|---|---|---|---|---|---|---|---|---|",
+                   "|---|---|---|---|---|---|---|---|---|---|"))
+    for r in rows:
+        print(fmt_row(r))
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"\n{len(ok)} compiled cells, "
+          f"{sum(1 for r in rows if r['status'] == 'skip')} documented skips, "
+          f"{sum(1 for r in rows if r['status'] == 'error')} errors")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one section per paper table/figure.
+
+  Table 1  -> attn_variants   (MHA/GQA/MQA x seqlen x causal)
+  Table 2  -> mla             (MLA latent kernel vs naive)
+  Table 5  -> naive_vs_tl     (vanilla implementation vs TL pipeline)
+  Table3/4/App.B -> ablation  (one-stage vs two-stage, dev cost)
+  Dry-run  -> roofline_table  (40 cells x 2 meshes from results/dryrun.json)
+
+``python -m benchmarks.run [--full] [--only <name>]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale seqlens (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (ablation, attn_variants, fp8_case_study, mla,
+                   naive_vs_tl, nsa_window, roofline_table)
+    sections = [
+        ("attn_variants (paper Table 1)", lambda: attn_variants.run(args.full)),
+        ("mla (paper Table 2)", lambda: mla.run(args.full)),
+        ("naive_vs_tl (paper Table 5)", lambda: naive_vs_tl.run(args.full)),
+        ("ablation (paper Tables 3/4, App. B)", ablation.run),
+        ("fp8_case_study (paper Table 6)", fp8_case_study.run),
+        ("nsa_window (paper Table 9)", lambda: nsa_window.run(args.full)),
+        ("roofline_table baseline (results/dryrun.json)",
+         lambda: roofline_table.run("results/dryrun.json")),
+        ("roofline_table optimized (results/dryrun_opt.json)",
+         lambda: roofline_table.run("results/dryrun_opt.json")),
+    ]
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        fn()
+        print(f"----- {name}: {time.perf_counter()-t0:.1f}s -----")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end driver: train a ~100M-param llama-style model on the
+synthetic pipeline with checkpointing and fault tolerance.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 200
+
+The config is a scaled deepseek-7b family member (~103M params).  On this
+CPU container ~200 steps of batch 8 x seq 256 takes a while; pass smaller
+--steps for a smoke run.  Loss drops from ~ln(V) toward the entropy of the
+synthetic Markov stream — the curve is printed at the end.
+"""
+
+import argparse
+import dataclasses
+
+from repro.launch.train import run
+from repro.models.config import ModelConfig
+from repro.models import registry
+
+
+CFG_100M = ModelConfig(
+    name="llama-100m", family="dense",
+    num_layers=8, d_model=512, num_q_heads=8, num_kv_heads=4,
+    d_ff=2048, vocab_size=32768, head_dim=64, dtype="f32",
+    rope_theta=10000.0,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    # register the config on the fly so launch.train can find it
+    registry._MODULES["llama-100m"] = "deepseek_7b"  # module for reduced()
+    import repro.configs.deepseek_7b as m
+    orig = m.CONFIG
+    m.CONFIG = CFG_100M
+    try:
+        n = CFG_100M.param_count()
+        print(f"[example] llama-100m: {n/1e6:.1f}M params")
+        losses = run("llama-100m", reduced=False, steps=args.steps,
+                     batch=args.batch, seq=args.seq,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=50, lr=1e-3,
+                     log_every=10)
+    finally:
+        m.CONFIG = orig
+    k = max(1, len(losses) // 10)
+    smooth = [sum(losses[i:i + k]) / len(losses[i:i + k])
+              for i in range(0, len(losses), k)]
+    print("[example] smoothed loss curve:",
+          " -> ".join(f"{l:.3f}" for l in smooth))
+    assert losses[-1] < losses[0]
+    print("[example] OK — loss decreased")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""QiMeng-Attention reproduction: TL-generated attention operators inside a
+multi-pod JAX training/serving framework (see DESIGN.md)."""
+
+__version__ = "0.1.0"

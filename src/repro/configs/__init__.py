@@ -1,0 +1,16 @@
+"""One module per assigned architecture; each exports CONFIG (the exact
+published geometry) and reduced() (a same-family small config for CPU smoke
+tests).  See repro.models.registry for lookup."""
+
+ARCH_IDS = [
+    "deepseek-v2-lite-16b",
+    "qwen3-moe-235b-a22b",
+    "deepseek-7b",
+    "llama3-405b",
+    "mistral-nemo-12b",
+    "deepseek-coder-33b",
+    "musicgen-large",
+    "llama-3.2-vision-90b",
+    "jamba-1.5-large-398b",
+    "rwkv6-1.6b",
+]

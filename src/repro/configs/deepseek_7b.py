@@ -1,0 +1,19 @@
+"""DeepSeek-LLM 7B — dense llama-arch MHA.  [arXiv:2401.02954; hf]
+30L d=4096, 32 heads (kv=32 -> MHA), ff 11008, vocab 102400."""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b", family="dense",
+    num_layers=30, d_model=4096, num_q_heads=32, num_kv_heads=32,
+    d_ff=11008, vocab_size=102400, head_dim=128,
+    rope_theta=10000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="deepseek-7b-smoke", num_layers=2, d_model=64,
+        num_q_heads=4, num_kv_heads=4, d_ff=128, vocab_size=512,
+        head_dim=16, dtype="f32", max_seq_len=128)

@@ -1,0 +1,23 @@
+"""DeepSeek-Coder 33B — dense llama-arch GQA.  [arXiv:2401.14196; hf]
+62L d=7168, 56 q heads / 8 kv heads (head_dim 128), ff 19200, vocab 32256."""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b", family="dense",
+    num_layers=62, d_model=7168, num_q_heads=56, num_kv_heads=8,
+    d_ff=19200, vocab_size=32256, head_dim=128,
+    rope_theta=100000.0,
+    # 56 heads don't divide the 16-wide TP axis; pad to 64 zero-masked
+    # heads (exact semantics) instead of replicating attention 16x --
+    # EXPERIMENTS.md #Perf hillclimb A.
+    pad_q_heads_to=64,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="deepseek-coder-smoke", num_layers=2, d_model=64,
+        num_q_heads=6, num_kv_heads=2, d_ff=128, vocab_size=512,
+        head_dim=16, pad_q_heads_to=8, dtype="f32", max_seq_len=128)

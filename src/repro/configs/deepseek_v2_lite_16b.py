@@ -1,0 +1,33 @@
+"""DeepSeek-V2-Lite (15.7B total / 2.4B active) — MLA + fine-grained MoE.
+
+[arXiv:2405.04434; hf:deepseek-ai/DeepSeek-V2-Lite]  27L d=2048, 16 heads,
+MLA kv_lora=512 rope=64 (no q compression in Lite), MoE 64 routed top-6 +
+2 shared (expert ff 1408), first layer dense (ff 10944), vocab 102400.
+The assignment header's "160 routed" is the V2-full figure; the bracketed
+Lite source values are used (DESIGN.md §Arch-applicability).
+
+This is the paper's own MLA arch (Table 2 workload).
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    num_layers=27, d_model=2048, num_q_heads=16, num_kv_heads=16,
+    d_ff=10944, vocab_size=102400, head_dim=128,
+    mla=True, kv_lora_rank=512, q_lora_rank=0, rope_head_dim=64,
+    nope_head_dim=128, v_head_dim=128,
+    moe=True, num_experts=64, num_shared_experts=2, top_k=6,
+    moe_d_ff=1408, moe_every=1, first_k_dense=1,
+    rope_theta=10000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="deepseek-v2-lite-16b-smoke", num_layers=3, d_model=64,
+        num_q_heads=4, num_kv_heads=4, d_ff=128, vocab_size=512,
+        head_dim=16, kv_lora_rank=32, rope_head_dim=16, nope_head_dim=16,
+        v_head_dim=16, num_experts=8, top_k=2, num_shared_experts=1,
+        moe_d_ff=32, first_k_dense=1, dtype="f32", max_seq_len=128)

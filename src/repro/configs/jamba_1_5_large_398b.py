@@ -1,0 +1,30 @@
+"""Jamba-1.5-Large (398B total / 94B active) — Mamba+attention 1:7 hybrid
+with MoE every 2nd layer.  [arXiv:2403.19887; hf:ai21labs/AI21-Jamba-1.5-Large]
+72L d=8192; attn layers GQA 64/8 (head_dim 128); MoE 16 experts top-2
+(expert ff 24576); Mamba state 16, expand 2; vocab 65536.
+
+Paper-technique applicability: the 9 attention layers use the TL-generated
+flash kernel; the 63 Mamba layers are attention-free (chunked scan).
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    num_layers=72, d_model=8192, num_q_heads=64, num_kv_heads=8,
+    d_ff=24576, vocab_size=65536, head_dim=128,
+    hybrid_period=8, mamba_state=16, mamba_expand=2, mamba_conv=4,
+    moe=True, num_experts=16, num_shared_experts=0, top_k=2,
+    moe_d_ff=24576, moe_every=2,
+    rope_theta=10000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="jamba-smoke", num_layers=4, d_model=64,
+        num_q_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+        head_dim=16, hybrid_period=4, mamba_state=8,
+        num_experts=4, top_k=2, moe_d_ff=64, moe_every=2,
+        dtype="f32", max_seq_len=128)

@@ -1,0 +1,20 @@
+"""Llama-3.1 405B — largest dense; GQA kv=8, 128k vocab.
+[arXiv:2407.21783; unverified]  126L d=16384, 128 q heads / 8 kv heads,
+ff 53248, vocab 128256."""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense",
+    num_layers=126, d_model=16384, num_q_heads=128, num_kv_heads=8,
+    d_ff=53248, vocab_size=128256, head_dim=128,
+    rope_theta=500000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="llama3-405b-smoke", num_layers=3, d_model=64,
+        num_q_heads=8, num_kv_heads=2, d_ff=192, vocab_size=512,
+        head_dim=16, dtype="f32", max_seq_len=128)

@@ -1,0 +1,27 @@
+"""Llama-3.2-Vision 90B — dense GQA backbone with cross-attention image
+layers every 5th layer.  [hf:meta-llama/Llama-3.2-90B-Vision; unverified]
+100L d=8192, 64/8 heads, ff 28672, vocab 128256.
+
+Vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (B, num_patches, vision_d); the cross-attn
+layers consume them directly.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    num_layers=100, d_model=8192, num_q_heads=64, num_kv_heads=8,
+    d_ff=28672, vocab_size=128256, head_dim=128,
+    cross_attn_period=5, vision_d=1280, num_patches=1600,
+    rope_theta=500000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="llama-vision-smoke", num_layers=5, d_model=64,
+        num_q_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+        head_dim=16, cross_attn_period=5, vision_d=32, num_patches=16,
+        dtype="f32", max_seq_len=128)

@@ -1,0 +1,20 @@
+"""Mistral-Nemo 12B — dense GQA kv=8, 128k context.
+[hf:mistralai/Mistral-Nemo-Base-2407]  40L d=5120, 32/8 heads, head_dim
+128, ff 14336, vocab 131072."""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b", family="dense",
+    num_layers=40, d_model=5120, num_q_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=131072, head_dim=128,
+    rope_theta=1000000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="mistral-nemo-smoke", num_layers=2, d_model=64,
+        num_q_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+        head_dim=16, dtype="f32", max_seq_len=128)

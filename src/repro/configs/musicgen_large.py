@@ -1,0 +1,25 @@
+"""MusicGen-Large — decoder-only transformer over EnCodec tokens.
+[arXiv:2306.05284; hf:facebook/musicgen-large]  48L d=2048, 32 MHA heads
+(head_dim 64), ff 8192, vocab 2048 (EnCodec codebook).
+
+Modality frontend is a STUB per the assignment: ``input_specs()`` provides
+token ids in the EnCodec code space (the audio tokenizer is out of scope);
+the backbone is the deliverable.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    num_layers=48, d_model=2048, num_q_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=2048, head_dim=64,
+    rope_theta=10000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="musicgen-smoke", num_layers=2, d_model=64,
+        num_q_heads=4, num_kv_heads=4, d_ff=128, vocab_size=128,
+        head_dim=16, dtype="f32", max_seq_len=128)

@@ -1,0 +1,25 @@
+"""Qwen3-MoE 235B-A22B — GQA kv=4, 128 routed experts top-8, no shared.
+
+[hf:Qwen/Qwen3-235B-A22B (per-assignment hf:Qwen/Qwen3-30B-A3B family)]
+94L d=4096, 64 q heads / 4 kv heads, head_dim 128, expert ff 1536,
+vocab 151936.  All layers MoE.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    num_layers=94, d_model=4096, num_q_heads=64, num_kv_heads=4,
+    d_ff=1536, vocab_size=151936, head_dim=128,
+    moe=True, num_experts=128, num_shared_experts=0, top_k=8,
+    moe_d_ff=1536, moe_every=1,
+    rope_theta=1000000.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="qwen3-moe-smoke", num_layers=2, d_model=64,
+        num_q_heads=8, num_kv_heads=2, d_ff=96, vocab_size=512, head_dim=16,
+        num_experts=8, top_k=2, moe_d_ff=96, dtype="f32", max_seq_len=128)

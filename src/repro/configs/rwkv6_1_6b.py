@@ -1,0 +1,24 @@
+"""RWKV-6 "Finch" 1.6B — attention-free linear recurrence with
+data-dependent decay.  [arXiv:2404.05892; unverified]
+24L d=2048, ff 7168 (channel-mix), vocab 65536, head_dim 64.
+
+Paper-technique applicability: NONE (attention-free) — implemented with
+the chunked linear-scan kernel instead; noted in DESIGN.md.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    num_layers=24, d_model=2048, num_q_heads=32, num_kv_heads=32,
+    d_ff=7168, vocab_size=65536, head_dim=64,
+    rwkv=True, rwkv_head_dim=64,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="rwkv6-smoke", num_layers=2, d_model=64,
+        num_q_heads=4, num_kv_heads=4, d_ff=128, vocab_size=256,
+        head_dim=16, rwkv_head_dim=16, dtype="f32", max_seq_len=128)

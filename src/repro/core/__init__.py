@@ -1,0 +1,9 @@
+"""The paper's contribution: the LLM-TL thinking language, the 2-stage
+TL-code generation/translation workflow, and the self-optimizing attention
+kernel pipeline (sketch -> reason -> validate -> translate)."""
+
+from .autotune import tune  # noqa: F401
+from .llm import DeterministicBackend, GeneratorBackend, OneStageBackend  # noqa: F401
+from .pipeline import GeneratedKernel, cached_kernel, generate_attention_kernel  # noqa: F401
+from .spec import AttnSpec  # noqa: F401
+from .target import TARGETS, TPUTarget, get_target  # noqa: F401

@@ -1,0 +1,117 @@
+"""Analytic block-size autotuner — the paper's "Parameter Analysis and
+Reasoning" made into an explicit self-optimizing search.
+
+The paper's LLM reasons block sizes from the GPU spec in one shot.  Here the
+same decision is a deterministic search over MXU-aligned (BM, BN) candidates
+scored by a three-term napkin model per (q-tile, kv-tile) step:
+
+  compute  = 2*BM*BN*(Dqk+Dv) / peak_flops          (MXU work)
+  memory   = BN*(Dqk+Dv)*bytes / hbm_bw             (KV tile DMA; Q amortised)
+  overhead = fixed per-grid-step cost               (Mosaic loop/DMA setup)
+
+The step time is max(compute, memory) + overhead; the score divides useful
+FLOPs (padding-discounted) by that.  Candidates whose working set exceeds
+the VMEM budget are rejected — exactly the constraint the validator enforces
+post-hoc (E004).  Results are cached per (spec, shape, target).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from .reason import BlockConfig, _vmem_bytes
+from .spec import AttnSpec
+from .target import TPUTarget, dtype_bytes, get_target
+
+# fixed per-grid-step overhead (s): DMA descriptor setup + loop bookkeeping.
+# Calibrated so that 128x128 tiles on v5e land near published flash kernels'
+# sweet spot; only relative ordering matters for the search.
+_STEP_OVERHEAD_S = 2.0e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    blocks: BlockConfig
+    est_time_s: float
+    efficiency: float          # useful-FLOPs / (peak * est_time)
+    candidates_tried: int
+    table: tuple = ()          # (bm, bn, est_time, eff) rows for reports
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def estimate_time(spec: AttnSpec, q_len: int, kv_len: int, bm: int, bn: int,
+                  target: TPUTarget) -> float:
+    """Total napkin time for one (batch, head) attention instance."""
+
+    dqk, dv = spec.qk_dim, spec.v_dim
+    in_b = dtype_bytes(spec.dtype)
+    tq = _ceil_div(q_len, bm)
+    tkv = _ceil_div(kv_len, bn)
+    if spec.window is not None:
+        # sliding window: only ~ceil(W/BN)+1 KV tiles are live per q tile
+        per_q = min(tkv, _ceil_div(spec.window, bn) + 1)
+        live_steps = tq * per_q
+    elif spec.causal and spec.mode == "full" and q_len == kv_len:
+        # causal block-skip: roughly half the (q, kv) tiles are live
+        live_steps = sum(_ceil_div((qi * bm + bm), bn) for qi in range(tq))
+        live_steps = min(live_steps, tq * tkv)
+    else:
+        live_steps = tq * tkv
+
+    flops_per_step = 2.0 * bm * bn * (dqk + dv)
+    bytes_per_step = bn * (dqk + dv) * in_b          # KV fetch dominates
+    q_bytes = tq * bm * dqk * in_b                    # Q fetched once per row-tile
+
+    compute = flops_per_step / (target.peak_bf16_tflops * 1e12)
+    memory = bytes_per_step / (target.hbm_gbps * 1e9)
+    t = live_steps * (max(compute, memory) + _STEP_OVERHEAD_S)
+    t += q_bytes / (target.hbm_gbps * 1e9)
+    return t
+
+
+def useful_flops(spec: AttnSpec, q_len: int, kv_len: int) -> float:
+    return spec.attention_flops(1, q_len, kv_len) / spec.num_q_heads
+
+
+@functools.lru_cache(maxsize=512)
+def _tune_cached(spec: AttnSpec, q_len: int, kv_len: int,
+                 target_name: str) -> TuneResult:
+    target = get_target(target_name)
+    sub = 8
+    bm_cands = [bm for bm in (8, 16, 32, 64, 128, 256, 512)
+                if bm <= max(sub, _ceil_div(q_len, sub) * sub)]
+    bn_cands = [bn for bn in (128, 256, 512, 1024)
+                if bn <= max(128, _ceil_div(kv_len, 128) * 128)]
+
+    best: tuple[float, BlockConfig] | None = None
+    rows = []
+    uf = useful_flops(spec, q_len, kv_len)
+    for bm in bm_cands:
+        for bn in bn_cands:
+            if _vmem_bytes(spec, bm, bn) > target.vmem_budget:
+                continue
+            # padding waste discount
+            pad = (_ceil_div(q_len, bm) * bm / q_len) * \
+                  (_ceil_div(kv_len, bn) * bn / kv_len)
+            t = estimate_time(spec, q_len, kv_len, bm, bn, target) * pad
+            eff = uf / (target.peak_bf16_tflops * 1e12 * t)
+            rows.append((bm, bn, t, eff))
+            if best is None or t < best[0]:
+                best = (t, BlockConfig(bm, bn))
+    if best is None:
+        raise ValueError(
+            f"no (BM, BN) candidate fits VMEM for {spec} on {target.name}")
+    t, blocks = best
+    return TuneResult(blocks=blocks, est_time_s=t,
+                      efficiency=uf / (target.peak_bf16_tflops * 1e12 * t),
+                      candidates_tried=len(rows), table=tuple(rows))
+
+
+def tune(spec: AttnSpec, q_len: int, kv_len: int,
+         target: TPUTarget | str = "v5e") -> TuneResult:
+    name = target if isinstance(target, str) else target.name
+    return _tune_cached(spec, q_len, kv_len, name)

@@ -1,0 +1,78 @@
+"""Generator backends for the 2-stage TL workflow.
+
+The paper drives both stages with an LLM prompted by the Listings-3/4
+prompts.  This container is offline, so the default backend is the
+deterministic rule engine (:mod:`repro.core.sketch` / :mod:`repro.core
+.reason`) — see DESIGN.md assumption A1.  The interface is text-in/text-out
+TL, exactly the artifact an LLM produces, so a hosted-model backend drops in
+without touching the validator or translators.
+
+``OneStageBackend`` reproduces the paper's Appendix-B ablation: it skips the
+sketch stage and emits TL code directly, manifesting the reshape-omission /
+GEMM-layout failure modes that the validator then rejects.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol
+
+from .reason import BlockConfig, reason_parameters
+from .sketch import generate_sketch, generate_sketch_text
+from .spec import AttnSpec
+from .target import TPUTarget
+from .tl.ast import TLProgram
+from .tl.parser import parse
+
+
+class GeneratorBackend(Protocol):
+    """The two LLM-driven steps of the paper's workflow, as an interface."""
+
+    def generate_sketch(self, spec: AttnSpec) -> str:
+        """Stage 1a: user requirement -> TL Sketch text."""
+        ...
+
+    def reason_parameters(self, sketch_text: str, spec: AttnSpec,
+                          q_len: int, kv_len: int, target: TPUTarget,
+                          blocks: BlockConfig | None) -> str:
+        """Stage 1b: TL Sketch -> complete TL Code text."""
+        ...
+
+
+class DeterministicBackend:
+    """Rule-driven implementation of both stages (the default)."""
+
+    def generate_sketch(self, spec: AttnSpec) -> str:
+        return generate_sketch_text(spec)
+
+    def reason_parameters(self, sketch_text: str, spec: AttnSpec,
+                          q_len: int, kv_len: int, target: TPUTarget,
+                          blocks: BlockConfig | None = None) -> str:
+        from .tl.printer import to_text
+
+        sketch = parse(sketch_text, name=f"{spec.variant}_fwd_sketch")
+        sketch.meta["stage"] = "sketch"
+        prog = reason_parameters(sketch, spec, q_len=q_len, kv_len=kv_len,
+                                 target=target, blocks=blocks)
+        return to_text(prog)
+
+
+class OneStageBackend(DeterministicBackend):
+    """Ablation: emit TL code in a single pass, with the characteristic
+    one-stage defects the paper documents (App. B)."""
+
+    def __init__(self, failure: str = "reshape_omission"):
+        if failure not in ("reshape_omission", "gemm_layout_error"):
+            raise ValueError(failure)
+        self.failure = failure
+
+    def generate_tl_code(self, spec: AttnSpec, q_len: int, kv_len: int,
+                         target: TPUTarget) -> str:
+        from .tl.printer import to_text
+
+        sketch = generate_sketch(spec)
+        prog = reason_parameters(
+            sketch, spec, q_len=q_len, kv_len=kv_len, target=target,
+            omit_reshape=self.failure == "reshape_omission",
+            gemm_layout_bug=self.failure == "gemm_layout_error",
+        )
+        return to_text(prog)

@@ -1,0 +1,135 @@
+"""End-to-end TL workflow — the paper's Figure 3 as a function.
+
+``generate_attention_kernel(spec, q_len, kv_len)`` runs:
+
+  1. *TL Sketch generation* (backend; deterministic by default),
+  2. *Parameter analysis & reasoning* (+ the analytic autotuner for block
+     sizes — the self-optimizing loop),
+  3. *validation* (statement-level checks; Appendix-B failure modes),
+  4. *translation* to both backends: the Pallas TPU kernel and the pure-jnp
+     oracle.
+
+The returned :class:`GeneratedKernel` carries every intermediate artifact
+(sketch text, TL code text, diagnostics, block config) so tests, benchmarks
+and docs can show the whole derivation — the paper's Figure 1(c) pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+from . import autotune
+from .llm import DeterministicBackend, GeneratorBackend
+from .reason import BlockConfig
+from .spec import AttnSpec
+from .target import TPUTarget, get_target
+from .tl.ast import TLProgram
+from .tl.parser import parse
+from .tl.printer import to_text
+from .tl.validator import Diagnostic, check, validate
+from .translate.jnp_backend import translate_jnp
+from .translate.pallas_backend import translate_pallas
+
+
+@dataclasses.dataclass
+class GeneratedKernel:
+    spec: AttnSpec
+    q_len: int
+    kv_len: int
+    target: TPUTarget
+    blocks: BlockConfig
+    sketch_text: str
+    tl_text: str
+    program: TLProgram
+    diagnostics: list[Diagnostic]
+    pallas_fn: Callable                 # batched (B, H, M, D) kernel
+    oracle_fn: Callable                 # single-head 2-D oracle
+    tune: Optional[autotune.TuneResult]
+
+    def __call__(self, *args):
+        return self.pallas_fn(*args)
+
+
+def generate_attention_kernel(
+    spec: AttnSpec,
+    q_len: int,
+    kv_len: int,
+    *,
+    target: TPUTarget | str = "v5e",
+    backend: Optional[GeneratorBackend] = None,
+    blocks: Optional[BlockConfig] = None,
+    interpret: bool = True,
+    causal_block_skip: bool = True,
+    strict: bool = True,
+) -> GeneratedKernel:
+    """Generate a fused attention kernel for ``spec`` via the TL workflow."""
+
+    if isinstance(target, str):
+        target = get_target(target)
+    backend = backend or DeterministicBackend()
+
+    # decode attends to the whole cache — no causal masking inside the tile
+    sketch_spec = spec
+    if spec.mode == "decode" and spec.causal:
+        sketch_spec = dataclasses.replace(spec, causal=False)
+
+    tr = None
+    if blocks is None:
+        tr = autotune.tune(sketch_spec, q_len, kv_len, target)
+        blocks = tr.blocks
+
+    # Stage 1a: sketch (text — the LLM exchange format)
+    sketch_text = backend.generate_sketch(sketch_spec)
+
+    # Stage 1b: parameter reasoning -> complete TL code (text)
+    tl_text = backend.reason_parameters(
+        sketch_text, sketch_spec, q_len, kv_len, target, blocks)
+
+    # Parse + validate (per-statement checking is what makes the paper's
+    # workflow reliable; E-diagnostics abort translation)
+    prog = parse(tl_text, name=f"{spec.variant}_{spec.mode}")
+    # re-attach the parameter environment (text comments carry it for humans;
+    # the authoritative binding comes from the reasoning stage)
+    reasoned = _reparse_params(sketch_spec, q_len, kv_len, target, blocks, backend)
+    prog.params = reasoned.params
+    prog.inputs = reasoned.inputs
+    prog.outputs = ("O",)
+    prog.meta = dict(reasoned.meta)
+    diags = validate(prog, target)
+    if strict:
+        check(prog, target)
+
+    pallas_fn = translate_pallas(
+        prog, interpret=interpret, causal_block_skip=causal_block_skip)
+    oracle_fn = translate_jnp(prog)
+
+    return GeneratedKernel(
+        spec=spec, q_len=q_len, kv_len=kv_len, target=target, blocks=blocks,
+        sketch_text=sketch_text, tl_text=tl_text, program=prog,
+        diagnostics=diags, pallas_fn=pallas_fn, oracle_fn=oracle_fn, tune=tr)
+
+
+def _reparse_params(spec, q_len, kv_len, target, blocks, backend):
+    """Recover the authoritative parameter binding for the parsed text.
+
+    The deterministic backend can hand us the AST directly; an LLM backend
+    only exchanges text, so parameters are re-derived through the same
+    reasoning entry point (they are a pure function of spec/shape/blocks).
+    """
+    from .reason import reason_parameters
+    from .sketch import generate_sketch
+
+    return reason_parameters(generate_sketch(spec), spec, q_len=q_len,
+                             kv_len=kv_len, target=target, blocks=blocks)
+
+
+@functools.lru_cache(maxsize=256)
+def cached_kernel(spec: AttnSpec, q_len: int, kv_len: int,
+                  target_name: str = "v5e", interpret: bool = True,
+                  causal_block_skip: bool = True) -> GeneratedKernel:
+    """lru-cached kernel factory used by the model layer."""
+    return generate_attention_kernel(
+        spec, q_len, kv_len, target=target_name, interpret=interpret,
+        causal_block_skip=causal_block_skip)

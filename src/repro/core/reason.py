@@ -1,0 +1,223 @@
+"""Stage 1b — Parameter Analysis and Reasoning (paper §3.2.2).
+
+Takes a TL *Sketch* and produces complete *TL Code* by
+
+  1. allocating every global tensor the copies refer to (``Allocate ... in
+     global (M, HeadDim) with offset bh``),
+  2. expanding each ``Copy`` with its block shape and tile coordinate
+     (``Copy K (BN, HeadDim) in coordinate [L = i] from global to shared``),
+  3. declaring the register-tier intermediates (accumulator, online-softmax
+     running max/denominator, score tile),
+  4. inserting the **Reshape** between the two fused GEMMs — the paper's
+     critical fusion statement (mma_C -> mma_A on Tensor Cores; on the MXU
+     the f32 accumulator tile must be re-declared/cast as an input-dtype
+     operand tile), and
+  5. binding the symbolic parameter environment (M, N, BM, BN, Tkv, ...).
+
+``omit_reshape=True`` / ``gemm_layout_bug=True`` reproduce the paper's
+Appendix-B one-stage failure modes (Listing 1 / Listing 2) so the validator
+tests can demonstrate they are caught.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Optional
+
+from .spec import AttnSpec
+from .target import TPUTarget, get_target
+from .tl.ast import (
+    Allocate,
+    ComputeGEMM,
+    ComputeOp,
+    Copy,
+    ForLoop,
+    MemSpace,
+    Reshape,
+    Statement,
+    TLProgram,
+)
+
+LANE = 128
+
+
+class ReasonError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Block-size decision produced here or by the autotuner."""
+
+    bm: int
+    bn: int
+
+    def as_params(self) -> dict:
+        return {"BM": self.bm, "BN": self.bn}
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def default_blocks(spec: AttnSpec, q_len: int, kv_len: int,
+                   target: TPUTarget) -> BlockConfig:
+    """MXU/VMEM-aware default blocking (the reasoning stage's napkin math).
+
+    BM/BN want to be MXU-aligned (128) and the working set
+    ``BM*Dqk + 2*BN*(Dqk+Dv) + BM*BN + BM*Dv`` (bf16/f32 mix, double-buffered
+    KV) must fit the VMEM budget.  For short sequences shrink to the padded
+    length instead of wasting compute on padding.
+    """
+
+    sub = 8  # f32 sublane; accumulators are f32
+    bm = min(_round_up(q_len, sub), 128 if spec.qk_dim > 256 else 256)
+    bn = min(_round_up(kv_len, LANE), 512)
+    while _vmem_bytes(spec, bm, bn) > target.vmem_budget and bn > LANE:
+        bn //= 2
+    while _vmem_bytes(spec, bm, bn) > target.vmem_budget and bm > sub:
+        bm //= 2
+    return BlockConfig(bm=bm, bn=bn)
+
+
+def _vmem_bytes(spec: AttnSpec, bm: int, bn: int) -> int:
+    in_b = 2 if spec.dtype in ("bf16", "f16", "fp8") else 4
+    q = bm * spec.qk_dim * in_b
+    kv = 2 * bn * (spec.qk_dim + spec.v_dim) * in_b  # double-buffered K,V
+    s = bm * bn * 4
+    acc = bm * spec.v_dim * 4
+    ml = 2 * bm * LANE * 4
+    return q + kv + s + acc + ml
+
+
+# ---------------------------------------------------------------------------
+
+
+def reason_parameters(
+    sketch: TLProgram,
+    spec: AttnSpec,
+    *,
+    q_len: int,
+    kv_len: int,
+    target: TPUTarget | str = "v5e",
+    blocks: Optional[BlockConfig] = None,
+    omit_reshape: bool = False,
+    gemm_layout_bug: bool = False,
+) -> TLProgram:
+    """Expand a TL Sketch into complete TL Code (see module docstring)."""
+
+    if isinstance(target, str):
+        target = get_target(target)
+    if blocks is None:
+        blocks = default_blocks(spec, q_len, kv_len, target)
+
+    mla = spec.variant == "mla"
+    dq_sym = "Dq" if mla else "HeadDim"   # score-GEMM contraction width
+    dv_sym = "R" if mla else "HeadDim"    # value width
+
+    params: dict = {
+        "M": q_len,
+        "N": kv_len,
+        "BM": blocks.bm,
+        "BN": blocks.bn,
+        "Tkv": -(-kv_len // blocks.bn),
+        "LANE": LANE,
+        "QOFF": kv_len - q_len,  # bottom-right causal alignment (FA-2)
+        "sm_scale": spec.scale(),
+    }
+    if mla:
+        params["R"] = spec.kv_lora_rank
+        params["Rr"] = spec.rope_head_dim
+        params["Dq"] = spec.kv_lora_rank + spec.rope_head_dim
+    else:
+        params["HeadDim"] = spec.head_dim
+    if spec.window is not None:
+        params["W"] = spec.window
+
+    body = copy.deepcopy(sketch.body)
+
+    # (1)+(3) allocations ----------------------------------------------------
+    allocs: list[Statement] = []
+    if mla:
+        allocs += [
+            Allocate("Q", MemSpace.GLOBAL, ("M", dq_sym), spec.dtype, offset="bh"),
+            Allocate("C", MemSpace.GLOBAL, ("N", dq_sym), spec.dtype, offset="b"),
+        ]
+    else:
+        allocs += [
+            Allocate("Q", MemSpace.GLOBAL, ("M", dq_sym), spec.dtype, offset="bh"),
+            Allocate("K", MemSpace.GLOBAL, ("N", dq_sym), spec.dtype, offset="bh_kv"),
+            Allocate("V", MemSpace.GLOBAL, ("N", dv_sym), spec.dtype, offset="bh_kv"),
+        ]
+    allocs += [
+        Allocate("O", MemSpace.GLOBAL, ("M", dv_sym), spec.dtype, offset="bh"),
+        Allocate("acc", MemSpace.REGISTER, ("BM", dv_sym), "f32"),
+        Allocate("m", MemSpace.REGISTER, ("BM", "LANE"), "f32"),
+        Allocate("l", MemSpace.REGISTER, ("BM", "LANE"), "f32"),
+        Allocate("S", MemSpace.REGISTER, ("BM", "BN"), "f32"),
+    ]
+
+    # (2) copy expansion -----------------------------------------------------
+    def _expand(stmts: list[Statement], loop_var: Optional[str]) -> None:
+        for idx, s in enumerate(stmts):
+            if isinstance(s, ForLoop):
+                _expand(s.body, s.var)
+                continue
+            if not isinstance(s, Copy):
+                continue
+            coord = loop_var if loop_var is not None else "q"
+            if s.name == "Q":
+                stmts[idx] = Copy("Q", s.src, s.dst, ("BM", dq_sym), {"L": "q"})
+            elif s.name in ("K", "C"):
+                stmts[idx] = Copy(s.name, s.src, s.dst, ("BN", dq_sym), {"L": coord})
+            elif s.name == "V":
+                stmts[idx] = Copy("V", s.src, s.dst, ("BN", dv_sym), {"L": coord})
+            elif s.name == "O":
+                stmts[idx] = Copy("O", s.src, s.dst, ("BM", dv_sym), {"L": "q"})
+            else:
+                raise ReasonError(f"sketch copies unknown tensor {s.name!r}")
+
+    _expand(body, None)
+
+    # (4) reshape insertion between fused GEMMs ------------------------------
+    # Find, inside each loop body, a GEMM whose A-operand is produced by an
+    # earlier compute chained from a previous GEMM, and insert the layout
+    # re-declaration the MXU fusion requires.
+    def _insert_reshape(stmts: list[Statement]) -> None:
+        for s in stmts:
+            if isinstance(s, ForLoop):
+                _insert_reshape(s.body)
+        produced_by_gemm: set[str] = set()
+        i = 0
+        while i < len(stmts):
+            s = stmts[i]
+            if isinstance(s, ComputeGEMM):
+                if s.a.name in produced_by_gemm and not omit_reshape:
+                    stmts.insert(i, Reshape(s.a.name, "mma_C", "mma_A"))
+                    i += 1
+                produced_by_gemm.add(s.out)
+            elif isinstance(s, ComputeOp) and s.out:
+                if any(a in produced_by_gemm for a in s.args):
+                    produced_by_gemm.add(s.out)
+            i += 1
+
+    _insert_reshape(body)
+
+    if gemm_layout_bug:
+        # Appendix-B Listing 2: drop the formal transpose notation on K.
+        for s in TLProgram("tmp", body).walk():
+            if isinstance(s, ComputeGEMM) and s.b.transposed:
+                object.__setattr__(s.b, "transposed", False)
+
+    prog = TLProgram(
+        name=sketch.name.replace("_sketch", "") + "_tl",
+        body=allocs + body,
+        params=params,
+        inputs=tuple(a.name for a in allocs
+                     if a.space is MemSpace.GLOBAL and a.name != "O"),
+        outputs=("O",),
+        meta={**sketch.meta, "stage": "code", "blocks": blocks,
+              "target": target.name},
+    )
+    return prog

@@ -1,0 +1,89 @@
+"""Stage 1a — TL Sketch generation (paper §3.2.1).
+
+A *sketch* captures only the semantic execution flow: which tensors move
+between memory tiers and which computations fuse at which tier.  It has no
+block sizes, no coordinates, no ``Allocate`` statements and — critically for
+the paper's Appendix-B ablation — no ``Reshape`` between the two fused GEMMs.
+Those are all added by the *Parameter Analysis and Reasoning* stage
+(:mod:`repro.core.reason`).
+
+The generator is deterministic (DESIGN.md assumption A1): the sketches below
+are the canonical optimisation logic for each attention family, expressed in
+exactly the TL statement forms of the paper's listings.  A real-LLM backend
+can replace this module behind :class:`repro.core.llm.GeneratorBackend` —
+the downstream validator and translator consume the same TL text either way.
+"""
+
+from __future__ import annotations
+
+from .spec import AttnSpec
+from .tl.ast import TLProgram
+from .tl.parser import parse
+
+# ---------------------------------------------------------------------------
+# Canonical sketches.  Fusion is expressed the paper's way: consecutive
+# Compute statements at the same tier with no intervening Copy.
+# ---------------------------------------------------------------------------
+
+_FLASH_FWD = """
+// TL Sketch: fused flash attention forward ({variant})
+Copy Q from global to shared
+for i = 0:Tkv
+    Copy K from global to shared
+    Copy V from global to shared
+    Compute GEMM Q_shared, K_shared.T and get S
+    Compute Scale S, sm_scale and get S
+{mask}    Compute Online_softmax S, m, l, acc and get P
+    Compute GEMM P, V_shared and accumulate acc
+end
+Compute Divide acc, l and get acc
+Compute Cast acc and get O
+Copy O from register to global
+"""
+
+_MLA_FWD = """
+// TL Sketch: fused MLA latent attention forward (absorbed QK^T / WV)
+Copy Q from global to shared
+for i = 0:Tkv
+    Copy C from global to shared
+    Compute GEMM Q_shared, C_shared.T and get S
+    Compute Scale S, sm_scale and get S
+{mask}    Compute Online_softmax S, m, l, acc and get P
+    Compute Slice C_shared, 0, R and get Cn
+    Compute GEMM P, Cn and accumulate acc
+end
+Compute Divide acc, l and get acc
+Compute Cast acc and get O
+Copy O from register to global
+"""
+
+_MASK_CAUSAL = "    Compute Mask_causal S, q, i\n"
+_MASK_WINDOW = "    Compute Mask_window S, q, i, W\n"
+
+
+class SketchError(ValueError):
+    pass
+
+
+def generate_sketch_text(spec: AttnSpec) -> str:
+    """Emit the TL Sketch for ``spec`` as TL text (the LLM-exchange format)."""
+
+    if spec.variant == "mla":
+        template = _MLA_FWD
+    else:
+        template = _FLASH_FWD
+
+    mask = ""
+    if spec.causal:
+        mask += _MASK_CAUSAL
+    if spec.window is not None:
+        mask += _MASK_WINDOW
+    return template.format(variant=spec.variant, mask=mask).strip() + "\n"
+
+
+def generate_sketch(spec: AttnSpec) -> TLProgram:
+    name = f"{spec.variant}_{'decode' if spec.mode == 'decode' else 'fwd'}_sketch"
+    prog = parse(generate_sketch_text(spec), name=name)
+    prog.meta["spec"] = spec
+    prog.meta["stage"] = "sketch"
+    return prog

@@ -1,0 +1,108 @@
+"""Attention operator specifications — the *user requirement* input to the
+paper's workflow (Figure 3: "User Requirements" -> TL Sketch).
+
+An :class:`AttnSpec` describes *what* attention operator is wanted (variant,
+head geometry, masking, mode); the TL pipeline decides *how* (blocking,
+fusion, online softmax) and the translation backend decides the low-level
+realisation.  This mirrors the paper's separation of optimization logic from
+implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+VARIANTS = ("mha", "gqa", "mqa", "mla")
+MODES = ("full", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    variant: str = "mha"
+    num_q_heads: int = 16
+    num_kv_heads: int = 16
+    head_dim: int = 128
+    causal: bool = True
+    window: Optional[int] = None       # sliding-window size (None = global)
+    mode: str = "full"                 # "full" (train/prefill) | "decode"
+    # MLA-only geometry (DeepSeek-V2/V3): latent KV rank + decoupled RoPE dim
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    dtype: str = "bf16"
+    sm_scale: Optional[float] = None
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(f"variant {self.variant!r} not in {VARIANTS}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.variant == "mha" and self.num_q_heads != self.num_kv_heads:
+            raise ValueError("MHA requires num_q_heads == num_kv_heads")
+        if self.variant == "mqa" and self.num_kv_heads != 1:
+            raise ValueError("MQA requires num_kv_heads == 1")
+        if self.variant == "gqa" and self.num_q_heads % self.num_kv_heads:
+            raise ValueError("GQA requires num_q_heads % num_kv_heads == 0")
+
+    @property
+    def q_per_kv(self) -> int:
+        """Query heads per KV head (GQA group size; 1 for MHA)."""
+        if self.variant == "mla":
+            return self.num_q_heads
+        return self.num_q_heads // self.num_kv_heads
+
+    @property
+    def qk_dim(self) -> int:
+        """Contraction width of the score GEMM."""
+        if self.variant == "mla":
+            return self.kv_lora_rank + self.rope_head_dim
+        return self.head_dim
+
+    @property
+    def v_dim(self) -> int:
+        """Width of the value operand of the second GEMM."""
+        if self.variant == "mla":
+            return self.kv_lora_rank
+        return self.head_dim
+
+    def scale(self) -> float:
+        if self.sm_scale is not None:
+            return self.sm_scale
+        if self.variant == "mla":
+            # DeepSeek scales by the *pre-absorption* per-head qk dim
+            # (qk_nope_head_dim + rope dim = 128 + 64 in V2/V3).
+            return 1.0 / math.sqrt(128 + self.rope_head_dim)
+        return 1.0 / math.sqrt(self.head_dim)
+
+    # convenience constructors ------------------------------------------------
+    @staticmethod
+    def mha(heads: int = 16, head_dim: int = 128, **kw) -> "AttnSpec":
+        return AttnSpec(variant="mha", num_q_heads=heads, num_kv_heads=heads,
+                        head_dim=head_dim, **kw)
+
+    @staticmethod
+    def gqa(q_heads: int, kv_heads: int, head_dim: int = 128, **kw) -> "AttnSpec":
+        return AttnSpec(variant="gqa", num_q_heads=q_heads,
+                        num_kv_heads=kv_heads, head_dim=head_dim, **kw)
+
+    @staticmethod
+    def mqa(q_heads: int, head_dim: int = 128, **kw) -> "AttnSpec":
+        return AttnSpec(variant="mqa", num_q_heads=q_heads, num_kv_heads=1,
+                        head_dim=head_dim, **kw)
+
+    @staticmethod
+    def mla(q_heads: int = 128, kv_lora_rank: int = 512,
+            rope_head_dim: int = 64, **kw) -> "AttnSpec":
+        kw.setdefault("head_dim", 128)
+        return AttnSpec(variant="mla", num_q_heads=q_heads, num_kv_heads=1,
+                        kv_lora_rank=kv_lora_rank, rope_head_dim=rope_head_dim,
+                        **kw)
+
+    def attention_flops(self, batch: int, q_len: int, kv_len: int) -> float:
+        """Paper's FLOP convention: 4 * seq^2 * head_dim * heads (2 GEMMs)."""
+        per_head = 2.0 * q_len * kv_len * (self.qk_dim + self.v_dim)
+        total = batch * self.num_q_heads * per_head
+        if self.causal and self.mode == "full" and q_len == kv_len:
+            total *= 0.5
+        return total

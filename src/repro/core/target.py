@@ -1,0 +1,100 @@
+"""Hardware target descriptors consumed by the TL translation stage.
+
+The paper's translation stage takes "the necessary execution information
+... for the specific hardware architecture" (CuTe MMA/Copy atoms on GPU).
+On TPU the analogous information is the memory-hierarchy geometry (VMEM
+capacity, lane/sublane tiling) and the MXU systolic-array shape.  The
+translator and the autotuner both read a :class:`TPUTarget` instead of
+hard-coding any of these, which is what makes the pipeline portable across
+TPU generations the way the paper's prompt-swapping makes it portable
+across GPU generations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+_DTYPE_BYTES = {
+    "f32": 4, "float32": 4,
+    "bf16": 2, "bfloat16": 2,
+    "f16": 2, "float16": 2,
+    "fp8": 1, "f8_e4m3": 1, "f8_e5m2": 1,
+    "int8": 1, "i8": 1,
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    return _DTYPE_BYTES[dtype.lower()]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUTarget:
+    """Geometry + throughput description of one TPU core.
+
+    ``sublane`` is the second-minor tile dimension for f32; narrower dtypes
+    pack 2x/4x into the same physical tile (bf16 -> 16, int8/fp8 -> 32).
+    """
+
+    name: str
+    vmem_bytes: int = 16 * 2**20          # v5e: 16 MiB VMEM per core
+    hbm_bytes: int = 16 * 2**30           # v5e: 16 GiB HBM per chip
+    mxu: tuple[int, int] = (128, 128)     # systolic array shape
+    lane: int = 128                       # minor-dim tile
+    sublane_f32: int = 8                  # second-minor tile at 4 bytes
+    peak_bf16_tflops: float = 197.0       # per-chip peak
+    hbm_gbps: float = 819.0               # HBM bandwidth GB/s
+    ici_gbps: float = 50.0                # per-link ICI bandwidth GB/s
+    supported_dtypes: tuple[str, ...] = ("f32", "bf16", "int8")
+    # fraction of VMEM the autotuner may plan into (leave room for Mosaic's
+    # own double-buffering of pipelined operands)
+    vmem_budget_frac: float = 0.5
+
+    def sublane(self, dtype: str) -> int:
+        return self.sublane_f32 * (4 // max(1, dtype_bytes(dtype) // 1)) \
+            if dtype_bytes(dtype) < 4 else self.sublane_f32
+
+    def min_tile(self, dtype: str) -> tuple[int, int]:
+        """Minimum (second-minor, minor) tile for ``dtype``."""
+        packing = 4 // dtype_bytes(dtype)
+        return (self.sublane_f32 * max(1, packing), self.lane)
+
+    def supports(self, dtype: str) -> bool:
+        return dtype.lower() in self.supported_dtypes
+
+    @property
+    def vmem_budget(self) -> int:
+        return int(self.vmem_bytes * self.vmem_budget_frac)
+
+
+# Registry of targets the translator knows how to describe.  ``cpu-interp``
+# mirrors v5e geometry but marks kernels for interpret-mode execution (this
+# container); fp8 is listed for v6e-style parts the way the paper's case
+# study extends to FP8 on L40S.
+TARGETS: dict[str, TPUTarget] = {
+    "v5e": TPUTarget(name="v5e"),
+    "v5p": TPUTarget(
+        name="v5p",
+        vmem_bytes=16 * 2**20,
+        hbm_bytes=95 * 2**30,
+        peak_bf16_tflops=459.0,
+        hbm_gbps=2765.0,
+        ici_gbps=100.0,
+    ),
+    "v6e": TPUTarget(
+        name="v6e",
+        vmem_bytes=32 * 2**20,
+        hbm_bytes=32 * 2**30,
+        peak_bf16_tflops=918.0,
+        hbm_gbps=1640.0,
+        supported_dtypes=("f32", "bf16", "int8", "fp8"),
+    ),
+    "cpu-interp": TPUTarget(name="cpu-interp"),
+}
+
+
+def get_target(name: str) -> TPUTarget:
+    try:
+        return TARGETS[name]
+    except KeyError:
+        raise KeyError(f"unknown target {name!r}; known: {sorted(TARGETS)}") from None

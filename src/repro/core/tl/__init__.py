@@ -1,0 +1,22 @@
+from .ast import (  # noqa: F401
+    Allocate,
+    ComputeGEMM,
+    ComputeOp,
+    Copy,
+    ForLoop,
+    If,
+    MemSpace,
+    Reshape,
+    Statement,
+    TensorRef,
+    TLProgram,
+)
+from .parser import TLSyntaxError, parse  # noqa: F401
+from .printer import to_text  # noqa: F401
+from .validator import (  # noqa: F401
+    Diagnostic,
+    TLValidationError,
+    base_name,
+    check,
+    validate,
+)

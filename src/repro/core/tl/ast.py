@@ -1,0 +1,179 @@
+"""LLM-TL abstract syntax tree.
+
+The paper's Thinking Language (LLM-TL) abstracts an operator's execution on
+an accelerator into two statement families — ``Copy`` (data movement between
+memory tiers) and ``Compute`` (tile computations) — plus the support
+statements ``Allocate``, ``Reshape``, ``For`` and ``If`` that appear in the
+paper's listings.  A :class:`TLProgram` is an ordered list of statements with
+a symbolic parameter environment (``BM``, ``BN``, ``HeadDim``, ...).
+
+Dimensions are symbolic strings resolved against ``TLProgram.params`` so the
+same program text can be re-parameterised by the autotuner (the paper's
+"Parameter Analysis and Reasoning" stage) without regenerating the sketch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterator, Optional, Sequence, Union
+
+
+class MemSpace(enum.Enum):
+    """TPU re-grounding of the paper's GPU memory tiers (DESIGN.md §2)."""
+
+    GLOBAL = "global"      # HBM
+    SHARED = "shared"      # VMEM
+    REGISTER = "register"  # VREG-resident tile values / VMEM scratch accumulators
+
+    def __str__(self) -> str:  # pragma: no cover - trivial
+        return self.value
+
+
+# A dimension is either a literal int or a symbolic name like "BM".
+Dim = Union[int, str]
+
+
+def resolve_dim(dim: Dim, params: dict) -> int:
+    if isinstance(dim, int):
+        return dim
+    if isinstance(dim, str) and dim.isdigit():
+        return int(dim)
+    if dim in params:
+        return int(params[dim])
+    raise KeyError(f"unbound TL dimension {dim!r}; params={sorted(params)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorRef:
+    """A named tensor, optionally marked transposed (paper: ``K_shared.T``)."""
+
+    name: str
+    transposed: bool = False
+
+    def __str__(self) -> str:
+        return f"{self.name}.T" if self.transposed else self.name
+
+
+@dataclasses.dataclass
+class Allocate:
+    """``Allocate A in global (M, K) with offset head_offset``"""
+
+    name: str
+    space: MemSpace
+    shape: tuple[Dim, ...]
+    dtype: str = "bf16"
+    offset: Optional[str] = None  # symbolic base-offset expression
+
+
+@dataclasses.dataclass
+class Copy:
+    """``Copy K (BN, HeadDim) in coordinate [L = i] from global to shared``
+
+    ``shape``/``coords`` are ``None`` in the sketch stage; the reasoning
+    stage (paper §3.2.2) fills them in.  ``coords`` maps loop-axis label →
+    index expression (e.g. ``{"L": "i"}``).
+    """
+
+    name: str
+    src: MemSpace
+    dst: MemSpace
+    shape: Optional[tuple[Dim, ...]] = None
+    coords: Optional[dict[str, str]] = None
+
+
+@dataclasses.dataclass
+class ComputeGEMM:
+    """``Compute GEMM A, B and get S`` / ``... and accumulate S``"""
+
+    a: TensorRef
+    b: TensorRef
+    out: str
+    accumulate: bool = False
+
+
+@dataclasses.dataclass
+class ComputeOp:
+    """Non-GEMM compute: ``Compute <op> <args...> and get <out>``.
+
+    Covers the paper's "regular computation" and "other operators":
+    softmax, online-softmax update, masking, scaling, elementwise math.
+    When ``out`` is None the op updates its first argument in place
+    (paper: ``Compute Softmax S``).
+    """
+
+    op: str                      # e.g. softmax, online_softmax, mask_causal,
+                                 # multiply, divide, add, subtract, exp, max, scale
+    args: tuple[str, ...]        # operand names (or scalar symbols)
+    out: Optional[str] = None
+    accumulate: bool = False
+
+
+@dataclasses.dataclass
+class Reshape:
+    """``Reshape S from acc_layout to operand_layout``
+
+    The paper's critical fusion statement: between two chained GEMMs the
+    first GEMM's accumulator tile must be re-declared in the layout the
+    second GEMM expects (mma_C→mma_A on Tensor Cores; f32-accumulator →
+    input-dtype operand tile on the MXU).
+    """
+
+    name: str
+    from_layout: str
+    to_layout: str
+
+
+@dataclasses.dataclass
+class ForLoop:
+    """``for i = 0:N`` ... ``end`` — N may be symbolic (e.g. "Tkv")."""
+
+    var: str
+    start: Dim
+    end: Dim
+    body: list["Statement"] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class If:
+    """``if <cond>`` ... ``end`` — condition is a symbolic expression."""
+
+    cond: str
+    body: list["Statement"] = dataclasses.field(default_factory=list)
+
+
+Statement = Union[Allocate, Copy, ComputeGEMM, ComputeOp, Reshape, ForLoop, If]
+
+
+@dataclasses.dataclass
+class TLProgram:
+    """A complete TL code unit (sketch when parameters are unfilled)."""
+
+    name: str
+    body: list[Statement]
+    params: dict = dataclasses.field(default_factory=dict)
+    # names of tensors that are kernel inputs / outputs in GLOBAL space
+    inputs: tuple[str, ...] = ()
+    outputs: tuple[str, ...] = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    # ---- traversal helpers -------------------------------------------------
+    def walk(self) -> Iterator[Statement]:
+        """Yield statements in program order, descending into loop bodies."""
+
+        def _walk(stmts: Sequence[Statement]) -> Iterator[Statement]:
+            for s in stmts:
+                yield s
+                if isinstance(s, (ForLoop, If)):
+                    yield from _walk(s.body)
+
+        yield from _walk(self.body)
+
+    def allocations(self) -> dict[str, Allocate]:
+        return {s.name: s for s in self.walk() if isinstance(s, Allocate)}
+
+    def find(self, cls) -> list:
+        return [s for s in self.walk() if isinstance(s, cls)]
+
+    def resolve(self, dim: Dim) -> int:
+        return resolve_dim(dim, self.params)

@@ -1,0 +1,216 @@
+"""Parser for the LLM-TL textual syntax used in the paper's listings.
+
+Grammar (line-oriented; ``//`` comments; blocks closed by ``end``)::
+
+    Allocate <name> in <space> (<dims>) [with offset <expr>] [as <dtype>]
+    Copy <name> [(<dims>)] [in coordinate [<axis> = <expr>, ...]] from <space> to <space>
+    Compute GEMM <a>[.T], <b>[.T] and (get|accumulate) <out>
+    Compute <Op> <arg>[, <arg>...] [and (get|accumulate) [new] <out>] [with <arg> and <arg>]
+    Reshape <name> from <layout> to <layout>
+    for <var> (=|in) <start>:<end>
+    if <cond>
+    end
+
+The parser is deliberately forgiving about whitespace/case so that TL text
+produced by an LLM backend round-trips; the *validator* is where strictness
+lives (the paper's Appendix-B failure modes are caught there, not here).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+from .ast import (
+    Allocate,
+    ComputeGEMM,
+    ComputeOp,
+    Copy,
+    ForLoop,
+    If,
+    MemSpace,
+    Reshape,
+    Statement,
+    TensorRef,
+    TLProgram,
+)
+
+
+class TLSyntaxError(ValueError):
+    def __init__(self, line_no: int, line: str, msg: str):
+        super().__init__(f"TL syntax error at line {line_no}: {msg}\n  {line}")
+        self.line_no = line_no
+
+
+_DIM = r"[A-Za-z_][A-Za-z0-9_]*|\d+"
+
+_ALLOCATE = re.compile(
+    rf"^Allocate\s+(?P<name>\w+)\s+in\s+(?P<space>global|shared|register)\s*"
+    rf"\((?P<dims>[^)]*)\)"
+    rf"(?:\s+with\s+offset\s+(?P<offset>[\w+*/\- ()\[\].]+?))?"
+    rf"(?:\s+as\s+(?P<dtype>\w+))?\s*$",
+    re.IGNORECASE,
+)
+
+_COPY = re.compile(
+    rf"^Copy\s+(?P<name>\w+)"
+    rf"(?:\s*\((?P<dims>[^)]*)\))?"
+    rf"(?:\s+in\s+coord(?:inate)?\s*\[(?P<coords>[^\]]*)\])?"
+    rf"\s+from\s+(?P<src>global|shared|register)"
+    rf"(?:\s+memory)?\s+to\s+(?P<dst>global|shared|register)(?:\s+memory)?\s*$",
+    re.IGNORECASE,
+)
+
+_GEMM = re.compile(
+    r"^Compute\s+GEMM\s+(?P<a>\w+(?:\.T)?)\s*,\s*(?P<b>\w+(?:\.T)?)\s+and\s+"
+    r"(?P<mode>get|accumulate)\s+(?:new\s+)?(?P<out>\w+)\s*$",
+    re.IGNORECASE,
+)
+
+_COMPUTE = re.compile(
+    r"^Compute\s+(?P<op>\w+)\s+(?P<args>[\w., ]+?)"
+    r"(?:\s+and\s+(?P<mode>get|accumulate)\s+(?P<new>new\s+)?(?P<out>\w+))?"
+    r"(?:\s+with\s+(?P<with>[\w, ]+?))?"
+    r"(?:\s+rescaling\s+(?P<rescale>\w+))?\s*$",
+    re.IGNORECASE,
+)
+
+_RESHAPE = re.compile(
+    r"^Reshape\s+(?P<name>\w+)\s+from\s+(?P<frm>\([^)]*\)|[\w]+)\s+to\s+"
+    r"(?P<to>\([^)]*\)|[\w]+)\s*$",
+    re.IGNORECASE,
+)
+
+_FOR = re.compile(
+    rf"^for\s+(?P<var>\w+)\s*(?:=|\bin\b)\s*(?P<start>{_DIM})\s*:\s*"
+    rf"(?P<end>[\w+*/\-() ]+?)\s*:?\s*$",
+    re.IGNORECASE,
+)
+
+_IF = re.compile(r"^if\s+(?P<cond>.+?)\s*$", re.IGNORECASE)
+_END = re.compile(r"^end\s*$", re.IGNORECASE)
+
+
+def _parse_dims(text: str) -> tuple:
+    dims = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        dims.append(int(part) if part.isdigit() else part)
+    return tuple(dims)
+
+
+def _parse_coords(text: str) -> dict[str, str]:
+    coords: dict[str, str] = {}
+    for part in text.split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            coords[k.strip()] = v.strip()
+    return coords
+
+
+def _tensor_ref(text: str) -> TensorRef:
+    text = text.strip()
+    if text.endswith(".T"):
+        return TensorRef(text[:-2], transposed=True)
+    return TensorRef(text)
+
+
+def parse_statement(line: str, line_no: int = 0) -> Optional[Statement]:
+    """Parse one TL line; returns None for blanks/comments, 'END' sentinel
+    is handled by :func:`parse`."""
+
+    m = _ALLOCATE.match(line)
+    if m:
+        return Allocate(
+            name=m["name"],
+            space=MemSpace(m["space"].lower()),
+            shape=_parse_dims(m["dims"]),
+            dtype=(m["dtype"] or "bf16").lower(),
+            offset=m["offset"].strip() if m["offset"] else None,
+        )
+    m = _COPY.match(line)
+    if m:
+        return Copy(
+            name=m["name"],
+            src=MemSpace(m["src"].lower()),
+            dst=MemSpace(m["dst"].lower()),
+            shape=_parse_dims(m["dims"]) if m["dims"] else None,
+            coords=_parse_coords(m["coords"]) if m["coords"] else None,
+        )
+    m = _GEMM.match(line)
+    if m:
+        return ComputeGEMM(
+            a=_tensor_ref(m["a"]),
+            b=_tensor_ref(m["b"]),
+            out=m["out"],
+            accumulate=m["mode"].lower() == "accumulate",
+        )
+    m = _RESHAPE.match(line)
+    if m:
+        return Reshape(name=m["name"], from_layout=m["frm"], to_layout=m["to"])
+    m = _COMPUTE.match(line)
+    if m:
+        args = tuple(a.strip() for a in m["args"].split(",") if a.strip())
+        if m["with"]:
+            args = args + tuple(a.strip() for a in m["with"].split(",") if a.strip())
+        if m["rescale"]:
+            args = args + (m["rescale"],)
+        out = m["out"]
+        # "get new A" vs in-place "get A" both write A; the distinction is
+        # kept in ComputeOp.out either way.
+        return ComputeOp(
+            op=m["op"].lower(),
+            args=args,
+            out=out,
+            accumulate=bool(m["mode"] and m["mode"].lower() == "accumulate"),
+        )
+    raise TLSyntaxError(line_no, line, "unrecognised TL statement")
+
+
+def parse(text: str, name: str = "tl_program", params: Optional[dict] = None) -> TLProgram:
+    """Parse a full TL program from text."""
+
+    root: list[Statement] = []
+    stack: list[list[Statement]] = [root]
+
+    for line_no, raw in enumerate(text.splitlines(), start=1):
+        line = raw.split("//")[0].strip()
+        if not line:
+            continue
+        if _END.match(line):
+            if len(stack) == 1:
+                raise TLSyntaxError(line_no, raw, "'end' without open block")
+            stack.pop()
+            continue
+        m = _FOR.match(line)
+        if m:
+            end_dim = m["end"].strip()
+            loop = ForLoop(
+                var=m["var"],
+                start=int(m["start"]) if m["start"].isdigit() else m["start"],
+                end=int(end_dim) if end_dim.isdigit() else end_dim,
+            )
+            stack[-1].append(loop)
+            stack.append(loop.body)
+            continue
+        m = _IF.match(line)
+        if m and not line.lower().startswith(("if_", "ifft")):
+            node = If(cond=m["cond"])
+            stack[-1].append(node)
+            stack.append(node.body)
+            continue
+        stmt = parse_statement(line, line_no)
+        if stmt is not None:
+            stack[-1].append(stmt)
+
+    if len(stack) != 1:
+        raise TLSyntaxError(-1, "", f"{len(stack) - 1} unclosed block(s)")
+
+    prog = TLProgram(name=name, body=root, params=dict(params or {}))
+    allocs = prog.allocations()
+    prog.inputs = tuple(
+        n for n, a in allocs.items() if a.space is MemSpace.GLOBAL
+    )
+    return prog

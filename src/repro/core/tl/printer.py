@@ -1,0 +1,82 @@
+"""Canonical TL text printer — inverse of :mod:`repro.core.tl.parser`.
+
+``parse(print(prog))`` round-trips (property-tested in
+``tests/test_tl_language.py``), which is what lets the deterministic and
+LLM-driven generator backends exchange programs as plain text, exactly as
+the paper's workflow does between its two stages.
+"""
+
+from __future__ import annotations
+
+from .ast import (
+    Allocate,
+    ComputeGEMM,
+    ComputeOp,
+    Copy,
+    ForLoop,
+    If,
+    Reshape,
+    Statement,
+    TLProgram,
+)
+
+_INDENT = "    "
+
+
+def _dims(shape) -> str:
+    return ", ".join(str(d) for d in shape)
+
+
+def _stmt_lines(stmt: Statement, depth: int) -> list[str]:
+    pad = _INDENT * depth
+    if isinstance(stmt, Allocate):
+        line = f"Allocate {stmt.name} in {stmt.space} ({_dims(stmt.shape)})"
+        if stmt.offset:
+            line += f" with offset {stmt.offset}"
+        if stmt.dtype != "bf16":
+            line += f" as {stmt.dtype}"
+        return [pad + line]
+    if isinstance(stmt, Copy):
+        line = f"Copy {stmt.name}"
+        if stmt.shape:
+            line += f" ({_dims(stmt.shape)})"
+        if stmt.coords:
+            inner = ", ".join(f"{k} = {v}" for k, v in stmt.coords.items())
+            line += f" in coordinate [{inner}]"
+        line += f" from {stmt.src} to {stmt.dst}"
+        return [pad + line]
+    if isinstance(stmt, ComputeGEMM):
+        mode = "accumulate" if stmt.accumulate else "get"
+        return [pad + f"Compute GEMM {stmt.a}, {stmt.b} and {mode} {stmt.out}"]
+    if isinstance(stmt, ComputeOp):
+        line = f"Compute {stmt.op.capitalize()} {', '.join(stmt.args)}"
+        if stmt.out:
+            mode = "accumulate" if stmt.accumulate else "get"
+            line += f" and {mode} {stmt.out}"
+        return [pad + line]
+    if isinstance(stmt, Reshape):
+        return [pad + f"Reshape {stmt.name} from {stmt.from_layout} to {stmt.to_layout}"]
+    if isinstance(stmt, ForLoop):
+        lines = [pad + f"for {stmt.var} = {stmt.start}:{stmt.end}"]
+        for s in stmt.body:
+            lines.extend(_stmt_lines(s, depth + 1))
+        lines.append(pad + "end")
+        return lines
+    if isinstance(stmt, If):
+        lines = [pad + f"if {stmt.cond}"]
+        for s in stmt.body:
+            lines.extend(_stmt_lines(s, depth + 1))
+        lines.append(pad + "end")
+        return lines
+    raise TypeError(f"unknown TL statement {stmt!r}")
+
+
+def to_text(prog: TLProgram) -> str:
+    lines: list[str] = [f"// TL program: {prog.name}"]
+    if prog.params:
+        lines.append(
+            "// params: " + ", ".join(f"{k}={v}" for k, v in sorted(prog.params.items()))
+        )
+    for stmt in prog.body:
+        lines.extend(_stmt_lines(stmt, 0))
+    return "\n".join(lines) + "\n"

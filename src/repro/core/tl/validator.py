@@ -1,0 +1,269 @@
+"""Statement-level TL validation.
+
+The paper's central reliability claim is that hierarchical generation plus
+per-statement checking eliminates the two characteristic one-stage failure
+modes (Appendix B):
+
+* **Reshape omission** (Listing 1) — chaining two GEMMs without re-declaring
+  the first accumulator's layout as an input-operand layout; and
+* **GEMM layout error** (Listing 2) — conflating TL-level transpose notation
+  with the physical layout, producing a contraction-dimension mismatch.
+
+This module is that checker, plus the TPU-specific structural checks the
+translation stage relies on (allocation discipline, VMEM footprint,
+MXU/lane alignment, output write-back).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..target import TPUTarget, dtype_bytes, get_target
+from .ast import (
+    Allocate,
+    ComputeGEMM,
+    ComputeOp,
+    Copy,
+    Dim,
+    ForLoop,
+    If,
+    MemSpace,
+    Reshape,
+    Statement,
+    TLProgram,
+)
+
+_SPACE_SUFFIXES = ("_shared", "_register", "_reg", "_global")
+
+
+def base_name(ref: str) -> str:
+    """``K_shared`` -> ``K`` (the paper suffixes names with the tier)."""
+    for suf in _SPACE_SUFFIXES:
+        if ref.endswith(suf):
+            return ref[: -len(suf)]
+    return ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    code: str          # E001..E0xx errors, W0xx warnings
+    message: str
+    stmt: Optional[Statement] = None
+
+    @property
+    def is_error(self) -> bool:
+        return self.code.startswith("E")
+
+    def __str__(self) -> str:
+        return f"[{self.code}] {self.message}"
+
+
+class TLValidationError(ValueError):
+    def __init__(self, diagnostics: list[Diagnostic]):
+        self.diagnostics = diagnostics
+        super().__init__(
+            "TL validation failed:\n" + "\n".join(f"  {d}" for d in diagnostics)
+        )
+
+
+def _dims_eq(a: Dim, b: Dim, params: dict) -> Optional[bool]:
+    """Symbolic dim equality; None when undecidable."""
+
+    def val(d):
+        if isinstance(d, int):
+            return d
+        return params.get(d)
+
+    va, vb = val(a), val(b)
+    if va is not None and vb is not None:
+        return int(va) == int(vb)
+    if isinstance(a, str) and isinstance(b, str):
+        return a == b if a == b else None
+    return None
+
+
+class _ShapeEnv:
+    """Symbolic shape propagation through the statement stream."""
+
+    def __init__(self, prog: TLProgram):
+        self.params = prog.params
+        self.shapes: dict[str, tuple[Dim, ...]] = {}
+        self.dtypes: dict[str, str] = {}
+        for a in prog.find(Allocate):
+            self.shapes[a.name] = tuple(a.shape)
+            self.dtypes[a.name] = a.dtype
+
+    def get(self, ref: str) -> Optional[tuple[Dim, ...]]:
+        return self.shapes.get(base_name(ref))
+
+    def set(self, ref: str, shape: tuple[Dim, ...]) -> None:
+        self.shapes[base_name(ref)] = shape
+
+
+def validate(
+    prog: TLProgram,
+    target: TPUTarget | str = "v5e",
+    *,
+    strict_alloc: Optional[bool] = None,
+) -> list[Diagnostic]:
+    """Return all diagnostics for ``prog`` (errors + warnings).
+
+    ``strict_alloc`` defaults to True for reasoned TL code and False for
+    sketches (stage recorded in ``prog.meta``), since sketches legitimately
+    omit allocations and parameters.
+    """
+
+    if isinstance(target, str):
+        target = get_target(target)
+    if strict_alloc is None:
+        strict_alloc = prog.meta.get("stage", "code") != "sketch"
+
+    diags: list[Diagnostic] = []
+    env = _ShapeEnv(prog)
+    flat = list(prog.walk())
+
+    # ---- E003: allocation discipline ---------------------------------------
+    if strict_alloc:
+        for s in flat:
+            if isinstance(s, Copy) and env.get(s.name) is None:
+                diags.append(Diagnostic(
+                    "E003", f"Copy of unallocated tensor {s.name!r}", s))
+            if isinstance(s, Copy) and s.shape is None:
+                diags.append(Diagnostic(
+                    "E003", f"Copy of {s.name!r} missing block shape "
+                            "(parameter reasoning incomplete)", s))
+
+    # ---- dataflow walk: E001 / E002 / shape propagation ---------------------
+    produced_by_gemm: set[str] = set()
+    reshaped: set[str] = set()
+
+    def walk(stmts: list[Statement]) -> None:
+        for s in stmts:
+            if isinstance(s, (ForLoop, If)):
+                walk(s.body)
+                continue
+            if isinstance(s, Reshape):
+                reshaped.add(base_name(s.name))
+                continue
+            if isinstance(s, Copy):
+                # after an HBM->VMEM copy the on-chip tensor has block shape
+                if s.shape is not None and s.dst is not MemSpace.GLOBAL:
+                    env.set(s.name, tuple(s.shape))
+                continue
+            if isinstance(s, ComputeGEMM):
+                _check_gemm(s)
+                produced_by_gemm.add(base_name(s.out))
+                reshaped.discard(base_name(s.out))
+                continue
+            if isinstance(s, ComputeOp):
+                _propagate_op(s)
+                continue
+
+    def _check_gemm(s: ComputeGEMM) -> None:
+        a_name, b_name = base_name(s.a.name), base_name(s.b.name)
+        # E001 — reshape omission on a fused operand (TL *code* only: a
+        # sketch legitimately defers the Reshape to the reasoning stage)
+        for opname, nm in (("A", a_name), ("B", b_name)):
+            if strict_alloc and nm in produced_by_gemm and nm not in reshaped:
+                diags.append(Diagnostic(
+                    "E001",
+                    f"GEMM {opname}-operand {nm!r} is produced by a previous "
+                    f"GEMM (accumulator layout) but was never Reshape'd to an "
+                    f"operand layout — reshape omission (paper App. B, "
+                    f"Listing 1)", s))
+        # E002 — contraction-dimension / layout error
+        sa, sb = env.get(s.a.name), env.get(s.b.name)
+        if sa is not None and sb is not None and len(sa) == 2 and len(sb) == 2:
+            ka = sa[0] if s.a.transposed else sa[1]
+            kb = sb[1] if s.b.transposed else sb[0]
+            eq = _dims_eq(ka, kb, prog.params)
+            if eq is False or (eq is None and isinstance(ka, str)
+                               and isinstance(kb, str) and ka != kb):
+                diags.append(Diagnostic(
+                    "E002",
+                    f"GEMM {s.a} @ {s.b}: contraction dims {ka!r} vs {kb!r} "
+                    f"do not match — GEMM layout error (paper App. B, "
+                    f"Listing 2); check transpose notation", s))
+            m = sa[1] if s.a.transposed else sa[0]
+            n = sb[0] if s.b.transposed else sb[1]
+            if env.get(s.out) is None:
+                env.set(s.out, (m, n))
+        # W002 — accumulation into non-f32
+        out_dtype = env.dtypes.get(base_name(s.out))
+        if s.accumulate and out_dtype not in (None, "f32", "float32"):
+            diags.append(Diagnostic(
+                "W002",
+                f"GEMM accumulates into {s.out!r} of dtype {out_dtype}; MXU "
+                f"accumulation should be f32", s))
+
+    def _propagate_op(s: ComputeOp) -> None:
+        if s.op == "slice" and len(s.args) >= 3 and s.out:
+            src = env.get(s.args[0])
+            if src is not None:
+                lo = s.args[1]
+                hi = s.args[2]
+                width: Dim = hi if str(lo) == "0" else f"{hi}-{lo}"
+                env.set(s.out, (src[0], width))
+        elif s.out:
+            src = env.get(s.args[0]) if s.args else None
+            if src is not None and env.get(s.out) is None:
+                env.set(s.out, src)
+        # taint: out derived from a GEMM product keeps accumulator layout
+        if s.out and any(base_name(a) in produced_by_gemm for a in s.args):
+            produced_by_gemm.add(base_name(s.out))
+
+    walk(prog.body)
+
+    # ---- E005: outputs written back -----------------------------------------
+    for out in prog.outputs:
+        wrote = any(
+            isinstance(s, Copy) and base_name(s.name) == out
+            and s.dst is MemSpace.GLOBAL
+            for s in flat
+        )
+        if not wrote:
+            diags.append(Diagnostic(
+                "E005", f"output {out!r} is never copied back to global"))
+
+    # ---- E004 / W001: VMEM footprint + alignment (needs resolved params) ----
+    try:
+        vmem = 0
+        for a in prog.find(Allocate):
+            if a.space is MemSpace.GLOBAL:
+                continue
+            n = 1
+            for d in a.shape:
+                n *= prog.resolve(d)
+            mult = 2 if a.space is MemSpace.SHARED else 1  # double-buffer
+            vmem += n * dtype_bytes(a.dtype) * mult
+            dims = [prog.resolve(d) for d in a.shape]
+            if len(dims) >= 1 and dims[-1] % target.lane and dims[-1] >= target.lane:
+                diags.append(Diagnostic(
+                    "W001", f"{a.name}: minor dim {dims[-1]} not a multiple "
+                            f"of lane={target.lane}", a))
+            sub = target.min_tile(a.dtype)[0]
+            if len(dims) >= 2 and dims[-2] % sub and dims[-2] >= sub:
+                diags.append(Diagnostic(
+                    "W001", f"{a.name}: second-minor dim {dims[-2]} not a "
+                            f"multiple of sublane={sub}", a))
+        if vmem > target.vmem_budget:
+            diags.append(Diagnostic(
+                "E004", f"on-chip working set {vmem/2**20:.2f} MiB exceeds "
+                        f"VMEM budget {target.vmem_budget/2**20:.2f} MiB on "
+                        f"{target.name}"))
+    except KeyError:
+        if strict_alloc:
+            diags.append(Diagnostic(
+                "E006", "TL code has unbound symbolic dimensions; parameter "
+                        "reasoning incomplete"))
+
+    return diags
+
+
+def check(prog: TLProgram, target: TPUTarget | str = "v5e", **kw) -> None:
+    """Raise :class:`TLValidationError` if ``prog`` has any errors."""
+
+    errs = [d for d in validate(prog, target, **kw) if d.is_error]
+    if errs:
+        raise TLValidationError(errs)

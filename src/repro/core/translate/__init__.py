@@ -1,0 +1,2 @@
+from .jnp_backend import translate_jnp  # noqa: F401
+from .pallas_backend import translate_pallas  # noqa: F401

@@ -1,0 +1,193 @@
+"""TL -> pure-jnp translation (the oracle backend).
+
+Interprets a reasoned TL program with plain ``jnp`` ops at block granularity:
+``Copy`` statements become array slices, ``Compute`` statements call the
+shared semantics table, the ``for`` loop runs in Python.  The result is an
+executable *definition* of what the TL program means — the Pallas backend is
+tested against it, and it in turn is tested against the closed-form
+softmax-attention reference in ``kernels/ref.py`` (three-way agreement).
+
+Operates on single-(batch, head) 2-D tensors; batching/head mapping is the
+wrapper's job (``kernels/ops.py``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..tl.ast import (
+    Allocate,
+    ComputeGEMM,
+    ComputeOp,
+    Copy,
+    ForLoop,
+    If,
+    MemSpace,
+    Reshape,
+    TLProgram,
+)
+from ..tl.validator import base_name
+from . import semantics
+
+
+class TranslateError(NotImplementedError):
+    pass
+
+
+def _pad_to(x, rows):
+    if x.shape[0] == rows:
+        return x
+    pad = [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def translate_jnp(prog: TLProgram):
+    """Return ``fn(*global_inputs) -> output`` implementing ``prog``."""
+
+    p = dict(prog.params)
+    bm, bn = int(p["BM"]), int(p["BN"])
+    m_real, n_real = int(p["M"]), int(p["N"])
+    tkv = int(p["Tkv"])
+    n_pad = tkv * bn
+    tq = -(-m_real // bm)
+    m_pad = tq * bm
+    allocs = prog.allocations()
+    out_name = prog.outputs[0]
+    out_dtype = {"bf16": jnp.bfloat16, "f32": jnp.float32,
+                 "f16": jnp.float16,
+                 "fp8": jnp.bfloat16}[allocs[out_name].dtype]
+
+    def run_block(env: dict, q_idx: int) -> jnp.ndarray:
+        """Execute the TL body for one q-tile coordinate."""
+
+        state: dict = {}
+        # register allocations -> initial values
+        for a in allocs.values():
+            if a.space is MemSpace.REGISTER and a.name != "S":
+                shape = tuple(prog.resolve(d) for d in a.shape)
+                if a.name == "m":
+                    state[a.name] = jnp.full(shape, semantics.NEG_INF, jnp.float32)
+                else:
+                    state[a.name] = jnp.zeros(shape, jnp.float32)
+
+        loop_env = {"q": q_idx}
+
+        def coord_of(stmt: Copy) -> int:
+            expr = next(iter(stmt.coords.values())) if stmt.coords else "q"
+            return int(loop_env.get(expr, 0)) if not str(expr).isdigit() else int(expr)
+
+        def q_positions():
+            return (q_idx * bm + np.arange(bm)).reshape(bm, 1)
+
+        def k_positions(i):
+            return (i * bn + np.arange(bn)).reshape(1, bn)
+
+        def exec_stmts(stmts):
+            for s in stmts:
+                if isinstance(s, Allocate):
+                    continue
+                if isinstance(s, Reshape):
+                    # accumulator-layout -> operand-layout: on the oracle this
+                    # is the dtype re-declaration before the second GEMM
+                    state[base_name(s.name)] = state[base_name(s.name)]
+                    continue
+                if isinstance(s, ForLoop):
+                    start = prog.resolve(s.start) if not isinstance(s.start, int) else s.start
+                    end = prog.resolve(s.end) if not isinstance(s.end, int) else s.end
+                    for it in range(start, end):
+                        loop_env[s.var] = it
+                        exec_stmts(s.body)
+                    continue
+                if isinstance(s, If):
+                    raise TranslateError("If unsupported in jnp backend")
+                if isinstance(s, Copy):
+                    nm = base_name(s.name)
+                    if s.src is MemSpace.GLOBAL:
+                        i = coord_of(s)
+                        rows = prog.resolve(s.shape[0])
+                        state[nm] = jnp.asarray(
+                            env[nm][i * rows:(i + 1) * rows])
+                    elif s.dst is MemSpace.GLOBAL:
+                        state["__out__"] = state[nm]
+                    continue
+                if isinstance(s, ComputeGEMM):
+                    a = state[base_name(s.a.name)].astype(jnp.float32)
+                    b = state[base_name(s.b.name)].astype(jnp.float32)
+                    if s.a.transposed:
+                        a = a.T
+                    if s.b.transposed:
+                        b = b.T
+                    r = jnp.dot(a, b, preferred_element_type=jnp.float32)
+                    nm = base_name(s.out)
+                    state[nm] = state[nm] + r if s.accumulate else r
+                    continue
+                if isinstance(s, ComputeOp):
+                    exec_op(s)
+                    continue
+                raise TranslateError(f"unsupported TL statement {s!r}")
+
+        def exec_op(s: ComputeOp):
+            op = s.op
+            i = int(loop_env.get("i", 0))
+            if op == "scale":
+                src = state[base_name(s.args[0])]
+                state[base_name(s.out)] = semantics.scale(
+                    src, float(p[s.args[1]]))
+            elif op == "mask_causal":
+                nm = base_name(s.args[0])
+                state[nm] = semantics.mask_causal(
+                    state[nm], q_positions(), k_positions(i),
+                    int(p.get("QOFF", 0)))
+            elif op == "mask_window":
+                nm = base_name(s.args[0])
+                state[nm] = semantics.mask_window(
+                    state[nm], q_positions(), k_positions(i), int(p["W"]),
+                    int(p.get("QOFF", 0)))
+            elif op == "online_softmax":
+                s_nm, m_nm, l_nm, acc_nm = [base_name(a) for a in s.args]
+                scores = state[s_nm]
+                if n_pad != n_real:  # padded KV columns
+                    scores = semantics.mask_bounds(
+                        scores, k_positions(i), n_real)
+                pmat, state[m_nm], state[l_nm], state[acc_nm] = \
+                    semantics.online_softmax(
+                        scores, state[m_nm], state[l_nm], state[acc_nm])
+                state[base_name(s.out)] = pmat
+            elif op == "softmax":
+                nm = base_name(s.args[0])
+                state[nm] = semantics.softmax(state[nm])
+            elif op == "slice":
+                src = state[base_name(s.args[0])]
+                lo, hi = prog.resolve(s.args[1]), prog.resolve(s.args[2])
+                state[base_name(s.out)] = src[:, lo:hi]
+            elif op == "divide":
+                acc_nm, l_nm = base_name(s.args[0]), base_name(s.args[1])
+                state[base_name(s.out)] = semantics.divide(
+                    state[acc_nm], state[l_nm])
+            elif op == "cast":
+                state[base_name(s.out)] = state[base_name(s.args[0])].astype(out_dtype)
+            else:
+                raise TranslateError(f"unsupported TL op {op!r}")
+
+        exec_stmts(prog.body)
+        return state["__out__"]
+
+    input_names = tuple(prog.inputs)
+
+    def fn(*arrays):
+        if len(arrays) != len(input_names):
+            raise ValueError(f"expected inputs {input_names}")
+        env = {}
+        for nm, arr in zip(input_names, arrays):
+            rows = m_pad if allocs[nm].shape[0] == "M" else n_pad
+            env[nm] = _pad_to(arr, rows)
+        blocks = [run_block(env, qi) for qi in range(tq)]
+        out = jnp.concatenate(blocks, axis=0)[:m_real]
+        return out
+
+    fn.input_names = input_names
+    fn.program = prog
+    return fn

@@ -1,0 +1,321 @@
+"""TL -> Pallas translation (the TPU backend; paper §3.3 re-grounded).
+
+The paper translates each TL statement into CuTe: ``Allocate``/``Copy``
+become tensor definitions + ``cute::copy`` over (global, shared, register),
+``Compute GEMM`` becomes Tensor-Core ``mma`` atoms, and ``Reshape`` converts
+an mma_C accumulator fragment into an mma_A operand fragment.
+
+On TPU the same statements land on different hardware mechanisms
+(DESIGN.md §2 table):
+
+=====================  ====================================================
+TL statement           Pallas/Mosaic realisation
+=====================  ====================================================
+``Allocate .. global``   kernel operand in HBM, tiled by a ``BlockSpec``
+``Copy g->s``            the ``BlockSpec`` index map: Mosaic's pipelined
+                         HBM->VMEM DMA *is* the copy (double-buffered)
+``Allocate .. register`` VMEM scratch (``pltpu.VMEM``) carried across the
+                         innermost (``arbitrary``) grid dimension
+``Compute GEMM``         ``jnp.dot(..., preferred_element_type=f32)`` -> MXU
+``Reshape mma_C->mma_A`` cast of the f32 softmax tile to the input dtype so
+                         the second GEMM's A-operand feeds the MXU at its
+                         native width (the layout re-declaration)
+``for i = 0:Tkv``        innermost grid dimension (sequential/"arbitrary")
+``Copy r->g (epilogue)`` output ref store predicated on the last grid step
+=====================  ====================================================
+
+The translator is a *staging interpreter*: it walks the TL AST once at trace
+time and emits the corresponding JAX ops inside the generated kernel body.
+It supports the statement family the sketch generator produces (fused
+two-GEMM online-softmax programs) and raises :class:`TranslateError`
+otherwise — mirroring the paper's per-statement translation contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..tl.ast import (
+    Allocate,
+    ComputeGEMM,
+    ComputeOp,
+    Copy,
+    ForLoop,
+    MemSpace,
+    Reshape,
+    TLProgram,
+)
+from ..tl.validator import base_name
+from . import semantics
+from .jnp_backend import TranslateError
+
+# fp8 kernels execute at bf16 numerics in interpret mode (DESIGN A4);
+# on fp8-capable MXUs the translator would emit float8_e4m3fn here.
+_JDTYPE = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16,
+           "fp8": jnp.bfloat16}
+
+
+def _compiler_params(dimension_semantics):
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cls is None:  # pragma: no cover - version drift guard
+        return None
+    try:
+        return cls(dimension_semantics=dimension_semantics)
+    except TypeError:  # pragma: no cover
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class _Structure:
+    """The TL program split at its single KV loop."""
+
+    prologue: tuple
+    loop: ForLoop
+    epilogue: tuple
+
+
+def _split(prog: TLProgram) -> _Structure:
+    loops = [s for s in prog.body if isinstance(s, ForLoop)]
+    if len(loops) != 1:
+        raise TranslateError(
+            f"pallas backend expects exactly one top-level KV loop, found "
+            f"{len(loops)} in {prog.name!r}")
+    i = prog.body.index(loops[0])
+    return _Structure(tuple(prog.body[:i]), loops[0], tuple(prog.body[i + 1:]))
+
+
+def translate_pallas(
+    prog: TLProgram,
+    *,
+    interpret: bool = True,
+    causal_block_skip: bool = True,
+    debug: bool = False,
+):
+    """Compile ``prog`` into a batched attention callable.
+
+    Returns ``fn(q, k, v) -> o`` with shapes
+    ``q: (B, Hq, M, Dqk)  k: (B, Hkv, Npad, Dqk)  v: (B, Hkv, Npad, Dv)``
+    or, for MLA programs (single latent operand ``C``),
+    ``fn(q, c) -> o`` with ``c: (B, Npad, Dqk)``.
+
+    ``M`` must be a multiple of BM and ``Npad`` a multiple of BN; the real
+    KV length is ``prog.params['N']`` and padded columns are masked inside
+    the kernel.  (The ``ops.py`` wrappers do the padding.)
+    """
+
+    p = dict(prog.params)
+    bm, bn = int(p["BM"]), int(p["BN"])
+    n_real = int(p["N"])
+    tkv = int(p["Tkv"])
+    allocs = prog.allocations()
+    structure = _split(prog)
+    out_name = prog.outputs[0]
+    out_dtype = _JDTYPE[allocs[out_name].dtype]
+    in_dtype = _JDTYPE[allocs[prog.inputs[0]].dtype]
+    dv = prog.resolve(allocs[out_name].shape[1])
+    mla = "C" in prog.inputs
+    spec = prog.meta.get("spec")
+    causal = any(
+        isinstance(s, ComputeOp) and s.op == "mask_causal" for s in prog.walk())
+    lane = int(p.get("LANE", 128))
+    q_off = int(p.get("QOFF", 0))
+
+    # ---- the generated kernel body -----------------------------------------
+    def kernel(*refs):
+        in_refs = refs[: len(prog.inputs)]
+        o_ref = refs[len(prog.inputs)]
+        acc_ref, m_ref, l_ref = refs[len(prog.inputs) + 1:]
+        qi = pl.program_id(1)
+        ki = pl.program_id(2)
+
+        @pl.when(ki == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+            m_ref[...] = jnp.full(m_ref.shape, semantics.NEG_INF, m_ref.dtype)
+            l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
+
+        env: dict = {}
+        for nm, ref in zip(prog.inputs, in_refs):
+            env[nm + "__ref"] = ref
+
+        def q_pos():
+            rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+            return qi * bm + rows
+
+        def k_pos():
+            cols = jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+            return ki * bn + cols
+
+        def run_stmt(s, phase: str):
+            if isinstance(s, Allocate):
+                return
+            if isinstance(s, Copy):
+                nm = base_name(s.name)
+                if s.src is MemSpace.GLOBAL:
+                    # Copy g->s: the BlockSpec already staged the tile into
+                    # VMEM; materialise it into the trace environment.
+                    ref = env[nm + "__ref"]
+                    env[nm] = ref[...].reshape(ref.shape[-2:])
+                elif s.dst is MemSpace.GLOBAL:
+                    val = env[nm].astype(out_dtype)
+                    o_ref[...] = val.reshape(o_ref.shape)
+                return
+            if isinstance(s, Reshape):
+                # mma_C -> mma_A: f32 accumulator tile re-declared as an
+                # input-dtype MXU operand tile.
+                env[base_name(s.name)] = env[base_name(s.name)].astype(in_dtype)
+                return
+            if isinstance(s, ComputeGEMM):
+                a = env[base_name(s.a.name)]
+                b = env[base_name(s.b.name)]
+                if s.a.transposed:
+                    a = a.T
+                if s.b.transposed:
+                    b = b.T
+                r = jnp.dot(a, b, preferred_element_type=jnp.float32)
+                nm = base_name(s.out)
+                if s.accumulate:
+                    acc_ref[...] += r
+                else:
+                    env[nm] = r
+                return
+            if isinstance(s, ComputeOp):
+                run_op(s)
+                return
+            raise TranslateError(f"unsupported statement {s!r} in {phase}")
+
+        def run_op(s: ComputeOp):
+            op = s.op
+            if op == "scale":
+                env[base_name(s.out)] = semantics.scale(
+                    env[base_name(s.args[0])], float(p[s.args[1]]))
+            elif op == "mask_causal":
+                nm = base_name(s.args[0])
+                env[nm] = semantics.mask_causal(
+                    env[nm], q_pos(), k_pos(), q_off)
+            elif op == "mask_window":
+                nm = base_name(s.args[0])
+                env[nm] = semantics.mask_window(
+                    env[nm], q_pos(), k_pos(), int(p["W"]), q_off)
+            elif op == "online_softmax":
+                scores = env[base_name(s.args[0])]
+                if tkv * bn != n_real:
+                    scores = semantics.mask_bounds(scores, k_pos(), n_real)
+                pmat, m_new, l_new, acc_new = semantics.online_softmax(
+                    scores, m_ref[...], l_ref[...], acc_ref[...])
+                m_ref[...] = m_new
+                l_ref[...] = l_new
+                acc_ref[...] = acc_new
+                env[base_name(s.out)] = pmat
+            elif op == "slice":
+                src = env[base_name(s.args[0])]
+                lo, hi = prog.resolve(s.args[1]), prog.resolve(s.args[2])
+                env[base_name(s.out)] = src[:, lo:hi]
+            elif op == "divide":
+                env[base_name(s.out)] = semantics.divide(
+                    acc_ref[...], l_ref[...])
+            elif op == "cast":
+                env[base_name(s.out)] = env[base_name(s.args[0])].astype(out_dtype)
+            else:
+                raise TranslateError(f"unsupported TL op {op!r}")
+
+        for s in structure.prologue:
+            run_stmt(s, "prologue")
+
+        # KV-loop body.  With a causal mask, tiles strictly above the
+        # diagonal contribute nothing; with a sliding window, neither do
+        # tiles entirely below it — predicate the whole body away
+        # (compute skip; the DMA still ran, see EXPERIMENTS.md §Perf).
+        window = p.get("W")
+        live = None
+        if causal and causal_block_skip:
+            live = ki * bn <= qi * bm + (bm - 1) + q_off
+        if window is not None and causal_block_skip:
+            lo = (ki + 1) * bn - 1 > qi * bm + q_off - int(window)
+            live = lo if live is None else (live & lo)
+        if live is not None:
+            @pl.when(live)
+            def _body():
+                for s in structure.loop.body:
+                    run_stmt(s, "loop")
+        else:
+            for s in structure.loop.body:
+                run_stmt(s, "loop")
+
+        @pl.when(ki == tkv - 1)
+        def _epilogue():
+            for s in structure.epilogue:
+                run_stmt(s, "epilogue")
+
+    # ---- BlockSpecs from the TL Copy statements ------------------------------
+    def build(q, *kv):
+        bsz, hq, m, dqk = q.shape
+        if m % bm:
+            raise ValueError(f"q rows {m} not a multiple of BM={bm}")
+        tq = m // bm
+        if mla:
+            (c,) = kv
+            if c.shape[1] % bn:
+                raise ValueError(f"kv rows {c.shape[1]} not a multiple of BN={bn}")
+            hkv = 1
+            in_specs = [
+                pl.BlockSpec((1, 1, bm, dqk),
+                             lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
+                pl.BlockSpec((1, bn, dqk),
+                             lambda bh, qi, ki: (bh // hq, ki, 0)),
+            ]
+            args = (q, c)
+        else:
+            k, v = kv
+            if k.shape[2] % bn:
+                raise ValueError(f"kv rows {k.shape[2]} not a multiple of BN={bn}")
+            hkv = k.shape[1]
+            qpk = hq // hkv
+            in_specs = [
+                pl.BlockSpec((1, 1, bm, dqk),
+                             lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
+                pl.BlockSpec((1, 1, bn, dqk),
+                             lambda bh, qi, ki:
+                             (bh // hq, (bh % hq) // qpk, ki, 0)),
+                pl.BlockSpec((1, 1, bn, v.shape[-1]),
+                             lambda bh, qi, ki:
+                             (bh // hq, (bh % hq) // qpk, ki, 0)),
+            ]
+            args = (q, k, v)
+
+        grid = (bsz * hq, tq, tkv)
+        out_spec = pl.BlockSpec(
+            (1, 1, bm, dv), lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0))
+        scratch = [
+            pltpu.VMEM((bm, dv), jnp.float32),
+            pltpu.VMEM((bm, lane), jnp.float32),
+            pltpu.VMEM((bm, lane), jnp.float32),
+        ]
+        kwargs = {}
+        cp = _compiler_params(("parallel", "parallel", "arbitrary"))
+        if cp is not None and not interpret:
+            kwargs["compiler_params"] = cp
+        call = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((bsz, hq, m, dv), out_dtype),
+            scratch_shapes=scratch,
+            interpret=interpret,
+            debug=debug,
+            **kwargs,
+        )
+        return call(*args)
+
+    build.program = prog
+    build.block_config = (bm, bn)
+    return build

@@ -1,0 +1,78 @@
+"""Shared compute semantics for the TL ``Compute`` statements.
+
+Both translation backends (pure-jnp oracle and Pallas kernel) lower each TL
+``Compute`` to these functions, so the two backends agree by construction —
+the operational meaning of a TL statement is defined exactly once.  This is
+the repo's analogue of the paper's per-statement translation table
+(TL statement -> CuTe code block, Figure 4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite -inf stand-in; keeps exp()/max() NaN-free in bf16
+
+
+def scale(s, factor):
+    return s * factor
+
+
+def mask_causal(s, q_pos, k_pos, q_off: int = 0):
+    """q_pos: (BM, 1) absolute row ids; k_pos: (1, BN) absolute col ids.
+
+    ``q_off = kv_len - q_len`` gives the FlashAttention-2 bottom-right
+    alignment (query row i sits at absolute position ``q_off + i``), which
+    is also what a prefill-with-prefix KV cache needs.
+    """
+    return jnp.where(k_pos <= q_pos + q_off, s, NEG_INF)
+
+
+def mask_window(s, q_pos, k_pos, window: int, q_off: int = 0):
+    return jnp.where(k_pos > q_pos + q_off - window, s, NEG_INF)
+
+
+def mask_bounds(s, k_pos, kv_len: int):
+    """Mask padded KV columns (wrapper pads N up to a multiple of BN)."""
+    return jnp.where(k_pos < kv_len, s, NEG_INF)
+
+
+def online_softmax(s, m, l, acc):
+    """One online-softmax step (the paper's ``Compute Online_softmax``).
+
+    ``m``/``l`` carry the running row max / denominator, ``acc`` the
+    un-normalised output accumulator; all f32.  ``m``/``l`` are stored
+    lane-broadcast — shape (BM, LANE) with every column equal — matching the
+    TL allocation ``Allocate m in register (BM, LANE)`` (TPU VREGs are
+    (sublane, lane) tiles; a (BM, 1) vector would waste a full register tile
+    anyway, so the broadcast costs nothing and keeps every op 2D).
+
+    Returns ``(p, m_new, l_new, acc_rescaled)`` where ``p = exp(s - m_new)``.
+    """
+
+    m_cur = jnp.max(s, axis=-1, keepdims=True)          # (BM, 1)
+    m_new = jnp.maximum(m[:, :1], m_cur)                # (BM, 1)
+    alpha = jnp.exp(m[:, :1] - m_new)                   # (BM, 1)
+    p = jnp.exp(s - m_new)                              # (BM, BN)
+    # rows with no visible key yet (m_new still -inf) contribute nothing —
+    # without this, exp(-inf - -inf) = 1 silently yields uniform attention
+    p = jnp.where(m_new <= NEG_INF / 2, 0.0, p)
+    l_new = l[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc * alpha
+    lane = m.shape[-1]
+    bcast = lambda x: jnp.broadcast_to(x, (x.shape[0], lane))
+    return p, bcast(m_new), bcast(l_new), acc_new
+
+
+def divide(acc, l):
+    """Normalise the accumulator by the online-softmax denominator."""
+    denom = l[:, :1]
+    # guard fully-masked rows (padded q rows): denom == 0 -> output 0
+    return acc / jnp.where(denom == 0.0, 1.0, denom)
+
+
+def softmax(s):
+    """Plain (non-online) softmax — used by naive TL variants."""
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

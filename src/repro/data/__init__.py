@@ -1,0 +1,1 @@
+from .pipeline import SyntheticTokens, batch_for_step  # noqa: F401

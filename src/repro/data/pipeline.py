@@ -1,0 +1,59 @@
+"""Deterministic synthetic token pipeline.
+
+Deterministic-by-step: ``batch_for_step(step)`` is a pure function of
+(seed, step), so after a failure *any* host can regenerate *any* shard
+without coordination — the property the fault-tolerance design relies on
+(DESIGN.md §3.1: a restarted or replacement host picks up mid-run).
+
+The token stream is a marked Markov-ish sequence (next token depends on the
+previous token plus step-salted noise) rather than uniform noise, so a ~100M
+model trained on it shows a real, monotonic loss drop (examples/train_100m).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTokens:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # host sharding: this host produces rows [row_start, row_start+rows)
+    row_start: int = 0
+    rows: Optional[int] = None
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+
+    def batch(self, step: int) -> dict:
+        rows = self.rows if self.rows is not None else self.global_batch
+        rng = self._rng(step)
+        # skip ahead to this host's rows deterministically
+        full = rng.integers(0, self.vocab_size,
+                            size=(self.global_batch, self.seq_len + 1),
+                            dtype=np.int32)
+        # inject learnable structure: token t+1 = f(token t) half the time
+        follow = (full[:, :-1] * 31 + 7) % self.vocab_size
+        gate = rng.random((self.global_batch, self.seq_len)) < 0.5
+        full[:, 1:] = np.where(gate, follow, full[:, 1:])
+        sl = slice(self.row_start, self.row_start + rows)
+        return {"tokens": full[sl, :-1], "labels": full[sl, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def batch_for_step(step: int, *, vocab_size: int, seq_len: int,
+                   global_batch: int, seed: int = 0) -> dict:
+    return SyntheticTokens(vocab_size, seq_len, global_batch,
+                           seed=seed).batch(step)

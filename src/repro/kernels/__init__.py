@@ -1,0 +1,11 @@
+from . import ops, ref  # noqa: F401
+from .flash_attention import make_flash_kernel, show_tl  # noqa: F401
+from .flash_decode import make_decode_kernel  # noqa: F401
+from .linear_scan import rwkv6_chunked  # noqa: F401
+from .mla_attention import make_mla_kernel  # noqa: F401
+from .ops import (  # noqa: F401
+    flash_attention,
+    flash_decode,
+    mla_attention,
+    mla_decode,
+)

@@ -1,0 +1,30 @@
+"""TL-generated fused flash-attention kernel (MHA/GQA/MQA, causal, window).
+
+The ``pl.pallas_call`` + ``BlockSpec`` for this kernel are *emitted by the
+TL translation backend* (``repro.core.translate.pallas_backend``) from the
+TL program that the sketch/reason stages produce — that is the paper's
+contribution and this repo's point.  This module is the conventional
+"kernel file" entry: it exposes the generator, and ``show_tl()`` prints the
+full derivation (sketch -> TL code) for a given spec.
+
+Use :func:`repro.kernels.ops.flash_attention` for the padded, batched,
+jit-ready form.
+"""
+
+from __future__ import annotations
+
+from ..core.pipeline import GeneratedKernel, generate_attention_kernel
+from ..core.spec import AttnSpec
+
+
+def make_flash_kernel(spec: AttnSpec, q_len: int, kv_len: int,
+                      **kw) -> GeneratedKernel:
+    if spec.variant == "mla":
+        raise ValueError("use kernels.mla_attention for MLA specs")
+    return generate_attention_kernel(spec, q_len, kv_len, **kw)
+
+
+def show_tl(spec: AttnSpec, q_len: int = 4096, kv_len: int = 4096) -> str:
+    k = make_flash_kernel(spec, q_len, kv_len)
+    return (f"=== TL Sketch ({spec.variant}) ===\n{k.sketch_text}\n"
+            f"=== TL Code (BM={k.blocks.bm}, BN={k.blocks.bn}) ===\n{k.tl_text}")

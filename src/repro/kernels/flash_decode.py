@@ -1,0 +1,26 @@
+"""TL-generated decode attention (FlashDecoding re-grounded for TPU).
+
+GPU FlashDecoding splits the KV cache across SMs and merges partial
+softmaxes.  The TPU adaptation (DESIGN.md §2): the MXU wants >=8-row tiles,
+so the G = Hq/Hkv query heads that share a KV head become the *rows* of one
+q tile — a single MXU pass per KV head per KV block — and the KV dimension
+rides the sequential grid with the online-softmax state in VMEM scratch.
+The same TL program as prefill serves decode with different parameters
+(M = G, causal off, bounds mask at the cache length), which is the paper's
+"same sketch, different reasoning" parameterisation story.
+
+Batched wrappers: :func:`repro.kernels.ops.flash_decode` / ``mla_decode``.
+"""
+
+from __future__ import annotations
+
+from ..core.pipeline import GeneratedKernel, generate_attention_kernel
+from ..core.spec import AttnSpec
+
+
+def make_decode_kernel(num_kv_heads: int, q_rows: int, cache_len: int,
+                       head_dim: int, **kw) -> GeneratedKernel:
+    spec = AttnSpec(variant="mha", num_q_heads=num_kv_heads,
+                    num_kv_heads=num_kv_heads, head_dim=head_dim,
+                    causal=False, mode="decode")
+    return generate_attention_kernel(spec, q_rows, cache_len, **kw)

@@ -1,0 +1,100 @@
+"""Chunked linear-recurrence Pallas kernel (RWKV-6 "Finch").
+
+The paper's technique targets attention; RWKV-6 is attention-free
+(DESIGN.md §Arch-applicability), so this kernel is hand-written — but it is
+*blocked the TL way*: an outer sequential grid dimension carries the
+recurrent state in VMEM scratch (TL: ``Allocate S in register``), chunk
+tiles stream HBM->VMEM via BlockSpecs (TL: ``Copy .. from global to
+shared``), and the intra-chunk work is two MXU GEMMs chained through a
+layout re-declaration (TL: ``Reshape``) — exactly the statement vocabulary
+of the attention kernels.
+
+Math (per head; state S in R^{Dk x Dv}; d_t = exp(-exp(w_t)) data-dependent
+decay; u the current-token bonus):
+
+    o_t = r_t (S_{t-1} + u k_t v_t^T),   S_t = diag(d_t) S_{t-1} + k_t v_t^T
+
+Chunked over L tokens with inclusive log-decay c_t = sum_{s<=t} -exp(w_s):
+
+    intra: A[t,s] = (r_t * e^{c_{t-1}}) . (k_s * e^{-c_s}),  s < t
+           A[t,t] = r_t . (u * k_t)
+    o      = A @ V + (r * e^{c_{t-1}}) @ S_0
+    S_L    = diag(e^{c_L}) S_0 + (k * e^{c_L - c_s})^T @ V
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros(s_ref.shape, s_ref.dtype)
+
+    r = r_ref[...].reshape(r_ref.shape[-2:]).astype(jnp.float32)
+    k = k_ref[...].reshape(k_ref.shape[-2:]).astype(jnp.float32)
+    v = v_ref[...].reshape(v_ref.shape[-2:]).astype(jnp.float32)
+    w = w_ref[...].reshape(w_ref.shape[-2:]).astype(jnp.float32)
+    u = u_ref[...].reshape(u_ref.shape[-1:]).astype(jnp.float32)
+
+    neg_ew = -jnp.exp(w)                       # log per-step decay  (L, Dk)
+    c_inc = jnp.cumsum(neg_ew, axis=0)         # inclusive log decay (L, Dk)
+    c_prev = c_inc - neg_ew                    # exclusive (c_{t-1})
+    c_last = c_inc[-1:, :]                     # (1, Dk)
+
+    r_dec = r * jnp.exp(c_prev)                # r_t * e^{c_{t-1}}
+    k_grow = k * jnp.exp(-c_inc)               # k_s * e^{-c_s}
+    k_tail = k * jnp.exp(c_last - c_inc)       # k_s * e^{c_L - c_s}
+
+    # intra-chunk "attention" (strictly lower triangular) + u-bonus diagonal
+    a = jnp.dot(r_dec, k_grow.T, preferred_element_type=jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(cols < rows, a, 0.0)
+    diag = jnp.sum(r * (u[None, :] * k), axis=-1)          # (L,)
+    o = jnp.dot(a, v, preferred_element_type=jnp.float32)
+    o += diag[:, None] * v
+    o += jnp.dot(r_dec, s_ref[...], preferred_element_type=jnp.float32)
+
+    s_ref[...] = jnp.exp(c_last).T * s_ref[...] + jnp.dot(
+        k_tail.T, v, preferred_element_type=jnp.float32)
+
+    o_ref[...] = o.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+def rwkv6_chunked(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK,
+                  interpret: bool = True):
+    """r/k/w: (B, H, T, Dk), v: (B, H, T, Dv), u: (H, Dk) -> (B, H, T, Dv).
+
+    T must be a multiple of ``chunk`` (the layer wrapper pads).
+    """
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    if t % chunk:
+        raise ValueError(f"T={t} not a multiple of chunk={chunk}")
+    grid = (b * h, t // chunk)
+
+    tile = lambda d: pl.BlockSpec(
+        (1, 1, chunk, d), lambda bh, ci: (bh // h, bh % h, ci, 0))
+    u_spec = pl.BlockSpec((1, dk), lambda bh, ci: (bh % h, 0))
+
+    fn = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[tile(dk), tile(dk), tile(dv), tile(dk), u_spec],
+        out_specs=tile(dv),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dv), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )
+    return fn(r, k, v, w, u)

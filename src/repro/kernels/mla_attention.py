@@ -1,0 +1,24 @@
+"""TL-generated MLA (multi-head latent attention) kernel — paper Table 2.
+
+DeepSeek-V2/V3 MLA with the *absorbed* formulation: queries are projected
+into the latent KV space (q_nope @ W_UK appended with the decoupled RoPE
+tail), so the kernel contracts a (BM, R+Rr) query tile against the shared
+(BN, R+Rr) latent cache tile, and the value GEMM reuses the first R latent
+columns (TL ``Compute Slice``) — the cache is read **once** for both GEMMs,
+which is the whole memory-traffic argument for MLA.
+
+The pallas_call is emitted by the TL translator; see
+:func:`repro.kernels.ops.mla_attention` for the batched wrapper.
+"""
+
+from __future__ import annotations
+
+from ..core.pipeline import GeneratedKernel, generate_attention_kernel
+from ..core.spec import AttnSpec
+
+
+def make_mla_kernel(num_heads: int, q_len: int, kv_len: int,
+                    kv_lora_rank: int = 512, rope_head_dim: int = 64,
+                    causal: bool = True, **kw) -> GeneratedKernel:
+    spec = AttnSpec.mla(num_heads, kv_lora_rank, rope_head_dim, causal=causal)
+    return generate_attention_kernel(spec, q_len, kv_len, **kw)

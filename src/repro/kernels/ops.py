@@ -1,0 +1,157 @@
+"""Public jit-ready wrappers around the TL-generated Pallas kernels.
+
+These own everything the kernel proper does not: dtype normalisation,
+sequence padding to block multiples, GQA/MQA head-geometry bookkeeping, the
+decode-time q-head->row remapping, and un-padding of results.  All shape
+decisions are static so every wrapper jits cleanly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.pipeline import cached_kernel
+from ..core.spec import AttnSpec
+
+_DT = {jnp.bfloat16.dtype: "bf16", jnp.float32.dtype: "f32",
+       jnp.float16.dtype: "f16"}
+
+
+def _pad_rows(x, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _variant(hq: int, hkv: int) -> str:
+    if hkv == 1 and hq > 1:
+        return "mqa"
+    if hq == hkv:
+        return "mha"
+    return "gqa"
+
+
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    interpret: bool = True,
+    target: str = "v5e",
+    causal_block_skip: bool = True,
+):
+    """Fused flash attention via the TL pipeline.
+
+    q: (B, Hq, M, D); k/v: (B, Hkv, N, D).  Returns (B, Hq, M, D) in q.dtype.
+    """
+    b, hq, m, d = q.shape
+    hkv, n = k.shape[1], k.shape[2]
+    spec = AttnSpec(variant=_variant(hq, hkv), num_q_heads=hq,
+                    num_kv_heads=hkv, head_dim=d, causal=causal,
+                    window=window, dtype=_DT[q.dtype])
+    kern = cached_kernel(spec, m, n, target, interpret, causal_block_skip)
+    bm, bn = kern.blocks.bm, kern.blocks.bn
+    qp = _pad_rows(q, 2, bm)
+    kp = _pad_rows(k, 2, bn)
+    vp = _pad_rows(v, 2, bn)
+    out = kern.pallas_fn(qp, kp, vp)
+    return out[:, :, :m, :]
+
+
+def mla_attention(
+    q_latent, c_kv, *,
+    causal: bool = True,
+    interpret: bool = True,
+    target: str = "v5e",
+    kv_lora_rank: int = 512,
+    rope_head_dim: int = 64,
+):
+    """Absorbed multi-head latent attention (DeepSeek V2/V3).
+
+    q_latent: (B, H, M, R+Rr) — queries already absorbed into latent space
+    (q_nope @ W_UK plus the decoupled RoPE tail).  c_kv: (B, N, R+Rr) latent
+    KV cache with the shared k_rope tail appended.  Returns (B, H, M, R)
+    latent outputs (caller up-projects with the absorbed W_UV @ W_O).
+    """
+    b, h, m, dq = q_latent.shape
+    n = c_kv.shape[1]
+    assert dq == kv_lora_rank + rope_head_dim
+    spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=causal,
+                        dtype=_DT[q_latent.dtype])
+    kern = cached_kernel(spec, m, n, target, interpret, True)
+    bm, bn = kern.blocks.bm, kern.blocks.bn
+    qp = _pad_rows(q_latent, 2, bm)
+    cp = _pad_rows(c_kv, 1, bn)
+    out = kern.pallas_fn(qp, cp)
+    return out[:, :, :m, :]
+
+
+def flash_decode(
+    q, k_cache, v_cache, *,
+    cache_len: Optional[int] = None,
+    interpret: bool = True,
+    target: str = "v5e",
+):
+    """Single-token decode against a KV cache.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, N, D).  ``cache_len`` (static) is the
+    number of valid cache entries; the rest is masked.
+
+    TPU adaptation: GPU FlashDecoding parallelises KV splits across SMs.  On
+    TPU the MXU wants >=8 rows, so the G = Hq/Hkv query heads of one KV head
+    are laid out as *rows* of a single q tile (one MXU pass per KV head),
+    and KV-split parallelism comes from the sequential-grid accumulator.
+    """
+    b, hq, one, d = q.shape
+    assert one == 1, "decode takes exactly one new token"
+    hkv, n = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    kv_len = int(cache_len) if cache_len is not None else n
+    # q heads -> rows: (B, Hq, 1, D) -> (B, Hkv, G, D)
+    q_rows = q.reshape(b, hkv, g, d)
+    spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
+                    head_dim=d, causal=False, mode="decode",
+                    dtype=_DT[q.dtype])
+    kern = cached_kernel(spec, g, kv_len, target, interpret, False)
+    bm, bn = kern.blocks.bm, kern.blocks.bn
+    qp = _pad_rows(q_rows, 2, bm)
+    n_used = -(-kv_len // bn) * bn
+    kp = _pad_rows(k_cache[:, :, :min(n_used, n), :], 2, bn)
+    vp = _pad_rows(v_cache[:, :, :min(n_used, n), :], 2, bn)
+    out = kern.pallas_fn(qp, kp, vp)               # (B, Hkv, Gpad, D)
+    return out[:, :, :g, :].reshape(b, hq, 1, d)
+
+
+def mla_decode(
+    q_latent, c_cache, *,
+    cache_len: Optional[int] = None,
+    interpret: bool = True,
+    target: str = "v5e",
+    kv_lora_rank: int = 512,
+    rope_head_dim: int = 64,
+):
+    """Single-token MLA decode: all H latent queries share the single latent
+    cache, so the H heads are the tile rows (same TPU adaptation as
+    :func:`flash_decode`)."""
+    b, h, one, dq = q_latent.shape
+    assert one == 1
+    n = c_cache.shape[1]
+    kv_len = int(cache_len) if cache_len is not None else n
+    spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=False,
+                        mode="decode", dtype=_DT[q_latent.dtype])
+    kern = cached_kernel(spec, h, kv_len, target, interpret, False)
+    bm, bn = kern.blocks.bm, kern.blocks.bn
+    # heads -> rows: (B, H, 1, Dq) -> (B, 1, H, Dq)
+    q_rows = q_latent.reshape(b, 1, h, dq)
+    qp = _pad_rows(q_rows, 2, bm)
+    n_used = -(-kv_len // bn) * bn
+    cp = _pad_rows(c_cache[:, :min(n_used, n), :], 1, bn)
+    out = kern.pallas_fn(qp, cp)                   # (B, 1, Hpad, R)
+    return out[:, 0, :h, :].reshape(b, h, 1, kv_lora_rank)

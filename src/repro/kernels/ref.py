@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the closed-form definitions the Pallas kernels (and the TL-jnp
+backend) are tested against — slow, obvious, numerically f32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(scores, q_len, kv_len, causal, window, kv_valid=None):
+    mq = jnp.arange(q_len)[:, None] + (kv_len - q_len)  # bottom-right align
+    mk = jnp.arange(kv_len)[None, :]
+    keep = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        keep &= mk <= mq
+    if window is not None:
+        keep &= mk > mq - window
+    if kv_valid is not None:
+        keep &= mk < kv_valid
+    return jnp.where(keep, scores, NEG_INF)
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None,
+              kv_valid=None):
+    """Reference attention.  q: (B, Hq, M, D), k/v: (B, Hkv, N, D[v]).
+
+    GQA/MQA head mapping: query head h reads kv head ``h // (Hq // Hkv)``.
+    Computed entirely in f32.
+    """
+    b, hq, m, d = q.shape
+    hkv, n = k.shape[1], k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    g = hq // hkv
+    kx = jnp.repeat(k, g, axis=1)
+    vx = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhmd,bhnd->bhmn", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    s = _mask(s, m, n, causal, window, kv_valid)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (a query before any visible key) are defined as 0,
+    # matching the flash kernels' l==0 guard
+    any_live = jnp.any(s > NEG_INF / 2, axis=-1, keepdims=True)
+    p = jnp.where(any_live, p, 0.0)
+    return jnp.einsum("bhmn,bhnd->bhmd", p, vx.astype(jnp.float32))
+
+
+def mla_attention(q_latent, c_kv, *, causal=True, scale=None, kv_valid=None,
+                  rope_dim=64):
+    """Reference absorbed MLA.  q_latent: (B, H, M, R+Rr), c_kv: (B, N, R+Rr)
+    where the value payload is the first R latent dims.
+    Returns (B, H, M, R)."""
+    b, h, m, dq = q_latent.shape
+    n = c_kv.shape[1]
+    scale = ((128 + rope_dim) ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhmd,bnd->bhmn", q_latent.astype(jnp.float32),
+                   c_kv.astype(jnp.float32)) * scale
+    s = _mask(s, m, n, causal, None, kv_valid)
+    p = jax.nn.softmax(s, axis=-1)
+    r = dq - rope_dim  # rope tail is appended after the R latent dims
+    return jnp.einsum("bhmn,bnr->bhmr", p, c_kv[..., :r].astype(jnp.float32))
+
+
+def decode_attention(q, k_cache, v_cache, *, cache_len=None, scale=None):
+    """One-token decode: q (B, Hq, 1, D) against a (B, Hkv, N, D) cache."""
+    return attention(q, k_cache, v_cache, causal=False, scale=scale,
+                     kv_valid=cache_len)
+
+
+# --- linear-recurrence references (RWKV-6 / Mamba-style SSD) ----------------
+
+def rwkv6_scan(r, k, v, w, u):
+    """RWKV-6 ("Finch") recurrence, per head, f32 sequential reference.
+
+    r/k: (B, H, T, Dk), v: (B, H, T, Dv), w: (B, H, T, Dk) decay *logits*
+    (decay = exp(-exp(w)) data-dependent), u: (H, Dk) bonus.
+    State S: (Dk, Dv);  o_t = r_t @ (S + u * k_t v_t^T);  S = diag(d_t) S +
+    k_t v_t^T.
+    """
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    decay = jnp.exp(-jnp.exp(w.astype(jnp.float32)))
+
+    def head_scan(r1, k1, v1, d1, u1):
+        def step(S, xs):
+            rt, kt, vt, dt = xs
+            kv = kt[:, None] * vt[None, :]
+            ot = (rt[None, :] @ (S + u1[:, None] * kv))[0]
+            S = dt[:, None] * S + kv
+            return S, ot
+        S0 = jnp.zeros((dk, dv), jnp.float32)
+        _, o = jax.lax.scan(step, S0, (r1, k1, v1, d1))
+        return o
+
+    f = jax.vmap(jax.vmap(head_scan, in_axes=(0, 0, 0, 0, 0)),
+                 in_axes=(0, 0, 0, 0, None))
+    return f(r.astype(jnp.float32), k.astype(jnp.float32),
+             v.astype(jnp.float32), decay, u.astype(jnp.float32))
+
+
+def mamba_scan(x, dt, A, B, C, D):
+    """Selective-SSM (Mamba) reference, f32 sequential.
+
+    x: (Bb, T, Din), dt: (Bb, T, Din) (softplus-activated), A: (Din, S),
+    B/C: (Bb, T, S), D: (Din,).  Returns (Bb, T, Din).
+    """
+    bb, t, din = x.shape
+    s = A.shape[1]
+    dA = jnp.exp(dt[..., None] * A[None, None])          # (Bb,T,Din,S)
+    dBx = dt[..., None] * B[:, :, None, :] * x[..., None]
+
+    def seq(dA1, dBx1, C1, x1):
+        def step(h, xs):
+            da, dbx, c = xs
+            h = da * h + dbx
+            y = jnp.einsum("ds,s->d", h, c)
+            return h, y
+        h0 = jnp.zeros((din, s), jnp.float32)
+        _, y = jax.lax.scan(step, h0, (dA1, dBx1, C1))
+        return y + D[None, :] * x1
+
+    return jax.vmap(seq)(dA.astype(jnp.float32), dBx.astype(jnp.float32),
+                         C.astype(jnp.float32), x.astype(jnp.float32))

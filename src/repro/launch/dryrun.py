@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, the abstract (ShapeDtype-
+Struct) train state / serve inputs with their NamedShardings, lowers the
+appropriate step function, compiles it, and extracts:
+
+  * compiled.memory_analysis()     — proves the cell fits per-device HBM
+  * SPMD HLO dot/collective costs  — roofline terms (repro.roofline)
+
+Results are appended to a JSON report (one entry per cell) consumed by
+benchmarks/roofline_table.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_size, make_production_mesh
+from repro.models import registry, transformer
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as shd
+from repro.roofline import analyze_hlo, roofline_terms
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import abstract_train_state, make_train_step
+
+
+def _sds_tree_shardings(mesh, tree, pspec_fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, pspec_fn(path, leaf, mesh)),
+        tree)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               grad_accum: int | None = None,
+               attn_chunk: int | None = None,
+               seq_shard: bool = True,
+               remat_policy: str | None = None,
+               donate: bool = True):
+    """Returns (lowered, compiled, meta) for one dry-run cell."""
+    cfg = registry.get_config(arch)
+    if attn_chunk:
+        cfg = dataclasses.replace(cfg, attn_chunk=attn_chunk)
+    if remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    shape = registry.SHAPES[shape_name]
+    ok, why = registry.shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"SKIP: {why}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_size(mesh)
+    dpax = shd._dp(mesh)
+    b = shape.global_batch
+    specs = registry.input_specs(cfg, shape)
+
+    # Sequence-parallel residual stream for PREFILL: shards the 32k-512k
+    # activations (and the saved carry) over 'model'.  Not used for train
+    # baselines: GSPMD's backward resolves the SP<->TP layout conflict by
+    # all-gathering full weights per period ("involuntary full remat"
+    # warnings), a measured 6x collective regression — see EXPERIMENTS.md
+    # §Perf for the hillclimb.  SSM/hybrid keep sequence unsharded (the
+    # recurrence is sequential in T).
+    act_sh = None
+    if seq_shard and shape.kind == "prefill" \
+            and not (cfg.rwkv or cfg.hybrid_period) \
+            and shape.seq_len % mesh.shape["model"] == 0:
+        act_sh = P(dpax, "model", None)
+    # expert-parallel buffer sharding: (B, E, C, d) rows over dp, experts
+    # over 'model' (the dispatch all-to-all boundary)
+    ep_sh = None
+    moe_mesh = None
+    if cfg.moe and cfg.num_experts % mesh.shape["model"] == 0:
+        ep_sh = P(dpax, "model", None, None)
+        # shard_map EP interior needs the batch to tile the dp group
+        # (batch-1 long-context decode falls back to the GSPMD path)
+        if b % dp == 0:
+            moe_mesh = (mesh, dpax)
+    # attention head sharding: (B, H, T, D) heads over 'model'
+    head_sh = None
+    lat_sh = None
+    hq_eff = max(cfg.num_q_heads, cfg.pad_q_heads_to)
+    if not cfg.rwkv and hq_eff % mesh.shape["model"] == 0:
+        head_sh = P(dpax, "model", None, None)
+    if cfg.mla:
+        lat_sh = P(dpax, None, None)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(
+                state_dtype="bf16" if cfg.param_count() > 1e11 else "f32")
+            ga = grad_accum or max(1, b // dp)
+            state = abstract_train_state(cfg, opt_cfg)
+            state_sh = jax.tree.map(
+                lambda _: None, state)  # placeholder; built below
+            params_sh = shd.param_sharding_tree(state.params, mesh)
+            opt_sh = {
+                "m": shd.param_sharding_tree(state.opt_state["m"], mesh),
+                "v": shd.param_sharding_tree(state.opt_state["v"], mesh),
+                "count": NamedSharding(mesh, P()),
+            }
+            from repro.train.step import TrainState
+            state_sh = TrainState(params=params_sh, opt_state=opt_sh,
+                                  step=NamedSharding(mesh, P()))
+            batch_sh = {k: NamedSharding(mesh, P(dpax, *([None] * (len(v.shape) - 1))))
+                        for k, v in specs.items()}
+            step_fn = make_train_step(cfg, opt_cfg, ga, act_sharding=act_sh,
+                                      grad_sharding=params_sh,
+                                      ep_sharding=ep_sh,
+                                      head_sharding=head_sh,
+                                      latent_sharding=lat_sh,
+                                      moe_mesh=moe_mesh)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state, specs)
+            meta = {"grad_accum": ga, "kind": "train_step"}
+
+        elif shape.kind == "prefill":
+            params = transformer.abstract_params(cfg)
+            params_sh = shd.param_sharding_tree(params, mesh)
+            caches = jax.eval_shape(
+                lambda: transformer.init_caches(cfg, b, shape.seq_len))
+            caches_sh = _sds_tree_shardings(
+                mesh, caches,
+                lambda p_, l, m: shd.cache_pspec(p_, l, m, batch=b))
+            tok_sh = {k: NamedSharding(
+                mesh, P(dpax, *([None] * (len(v.shape) - 1))))
+                for k, v in specs.items()}
+
+            def prefill_step(params, caches, inputs):
+                logits, _, new_caches = transformer.apply(
+                    params, inputs["tokens"], cfg, caches=caches,
+                    cache_len=0, act_sharding=act_sh, ep_sharding=ep_sh,
+                    head_sharding=head_sh, latent_sharding=lat_sh,
+                    moe_mesh=moe_mesh,
+                    vision_embeds=inputs.get("vision_embeds"))
+                return logits[:, -1], new_caches
+
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(params_sh, caches_sh, tok_sh),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params, caches, specs)
+            meta = {"kind": "prefill_step"}
+
+        else:  # decode
+            params = transformer.abstract_params(cfg)
+            params_sh = shd.param_sharding_tree(params, mesh)
+            caches = specs["caches"]
+            caches_sh = _sds_tree_shardings(
+                mesh, caches,
+                lambda p_, l, m: shd.cache_pspec(p_, l, m, batch=b))
+            tok_sh = NamedSharding(mesh, P(dpax if b > 1 else None, None))
+
+            def serve_step(params, caches, tokens, cache_len):
+                logits, _, new_caches = transformer.apply(
+                    params, tokens, cfg, caches=caches, cache_len=cache_len,
+                    ep_sharding=ep_sh, head_sharding=head_sh,
+                    latent_sharding=lat_sh, moe_mesh=moe_mesh)
+                return logits[:, -1], new_caches
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(params_sh, caches_sh, tok_sh,
+                              NamedSharding(mesh, P())),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params, caches, specs["tokens"],
+                                   specs["cache_len"])
+            meta = {"kind": "serve_step"}
+
+    meta.update(arch=arch, shape=shape_name,
+                mesh="2x16x16" if multi_pod else "16x16",
+                chips=512 if multi_pod else 256)
+    return lowered, meta, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             grad_accum=None, attn_chunk=None, verbose=True) -> dict:
+    t0 = time.time()
+    try:
+        lowered, meta, cfg, shape = lower_cell(
+            arch, shape_name, multi_pod=multi_pod, grad_accum=grad_accum,
+            attn_chunk=attn_chunk)
+    except ValueError as e:
+        if str(e).startswith("SKIP"):
+            return {"arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "status": "skip", "reason": str(e)[6:]}
+        raise
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    mem = int(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+              + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    costs = analyze_hlo(compiled.as_text())
+    ca = compiled.cost_analysis() or {}
+    terms = roofline_terms(arch, cfg, shape, meta["mesh"], meta["chips"],
+                           costs, mem)
+    rec = {
+        **meta,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_per_device_gib": round(mem / 2**30, 3),
+        "xla_cost_analysis_flops_once": ca.get("flops"),
+        "hlo": costs.summary(),
+        "roofline": terms.to_json(),
+    }
+    if verbose:
+        print(json.dumps(rec["roofline"], indent=None))
+        print(f"  mem/device: {rec['memory_per_device_gib']} GiB  "
+              f"compile: {rec['compile_s']}s  "
+              f"collectives: {costs.summary()['collectives']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = args.arch or (registry.list_archs() if args.all else [])
+    shapes = args.shape or list(registry.SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if not archs:
+        ap.error("pass --arch or --all")
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for mp in meshes:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_name)
+                if key in done:
+                    print(f"== cached {key}")
+                    continue
+                print(f"== {arch} x {shape} x {mesh_name}")
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   grad_accum=args.grad_accum,
+                                   attn_chunk=args.attn_chunk)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                results.append(rec)
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".",
+                                exist_ok=True)
+                    json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Function (not module-level constant) so importing never touches jax device
+state.  Single pod: (16, 16) = 256 chips, axes (data, model).  Multi-pod:
+(2, 16, 16) = 512 chips, axes (pod, data, model) — the 'pod' axis joins the
+FSDP group (parallel/sharding.DP_AXES), so cross-pod traffic is the
+parameter all-gather / gradient reduce-scatter, which tolerates the slower
+inter-pod links; 'model' (TP/EP/SP) traffic stays inside a pod.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this process actually has (tests / examples)."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            s *= mesh.shape[a]
+    return s

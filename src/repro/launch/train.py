@@ -1,0 +1,148 @@
+"""Training launcher with a fault-tolerant supervisor loop.
+
+Responsibilities (DESIGN.md §3.1):
+  * build mesh + sharded train state (restoring the latest checkpoint if
+    one exists — crash/preemption recovery, including onto a different
+    mesh shape via restore-with-reshard);
+  * deterministic-by-step data (any host can regenerate any shard);
+  * step loop with NaN/stall detection: a non-finite step is *skipped*
+    in-graph (train.step), and ``bad_step_budget`` consecutive bad steps
+    trigger restore-from-checkpoint;
+  * periodic async checkpointing + keep-last-k GC;
+  * per-step heartbeat line (host, step, loss, tokens/s) — the signal a
+    cluster supervisor uses for straggler detection.
+
+Single-process form; at multi-host scale the same loop runs per host with
+jax.distributed initialised and per-host data shards (data/pipeline.py
+row_start/rows).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt import CheckpointManager
+from repro.data import SyntheticTokens
+from repro.launch.mesh import dp_size, make_host_mesh
+from repro.models import registry
+from repro.parallel import sharding as shd
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import TrainState, make_train_step, train_state_init
+
+
+def run(arch: str, *, reduced: bool = True, steps: int = 20, batch: int = 8,
+        seq: int = 128, grad_accum: int = 1, ckpt_dir: str | None = None,
+        ckpt_every: int = 10, keep: int = 3, bad_step_budget: int = 3,
+        lr: float = 3e-4, model_axis: int = 1, seed: int = 0,
+        log_every: int = 1, attn_impl: str | None = None):
+    cfg = (registry.get_reduced(arch) if reduced else
+           registry.get_config(arch))
+    if attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    mesh = make_host_mesh(model_axis)
+    opt_cfg = AdamWConfig(lr=lr, total_steps=max(steps, 2),
+                          warmup_steps=max(2, steps // 20))
+    data = SyntheticTokens(cfg.vocab_size, seq, batch, seed=seed)
+
+    with mesh:
+        state = train_state_init(jax.random.PRNGKey(seed), cfg, opt_cfg)
+        params_sh = shd.param_sharding_tree(state.params, mesh)
+        state_sh = TrainState(
+            params=params_sh,
+            opt_state={"m": shd.param_sharding_tree(state.opt_state["m"], mesh),
+                       "v": shd.param_sharding_tree(state.opt_state["v"], mesh),
+                       "count": NamedSharding(mesh, P())},
+            step=NamedSharding(mesh, P()))
+        state = jax.device_put(state, state_sh)
+        dpax = shd._dp(mesh)
+        batch_sh = NamedSharding(mesh, P(dpax, None))
+
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, grad_accum),
+                          in_shardings=(state_sh, {"tokens": batch_sh,
+                                                   "labels": batch_sh}),
+                          out_shardings=(state_sh, None),
+                          donate_argnums=(0,))
+
+        mgr = None
+        start_step = 0
+        if ckpt_dir:
+            mgr = CheckpointManager(ckpt_dir, keep=keep)
+            got, restored = mgr.restore_latest(state, shardings=state_sh)
+            if restored is not None:
+                state, start_step = restored, got
+                print(f"[train] restored checkpoint step {got}")
+
+        bad = 0
+        losses = []
+        t0 = time.time()
+        for step in range(start_step, steps):
+            b = data.batch(step)
+            jb = {k: jax.device_put(jnp.asarray(v), batch_sh)
+                  for k, v in b.items()}
+            state, metrics = step_fn(state, jb)
+            loss = float(metrics["loss"])
+            finite = bool(metrics["finite"])
+            losses.append(loss)
+            if not finite:
+                bad += 1
+                print(f"[train] step {step}: NON-FINITE grads "
+                      f"(skipped in-graph, {bad}/{bad_step_budget})")
+                if bad >= bad_step_budget and mgr is not None:
+                    got, restored = mgr.restore_latest(state, shardings=state_sh)
+                    if restored is not None:
+                        state = restored
+                        print(f"[train] rolled back to step {got}")
+                    bad = 0
+            else:
+                bad = 0
+            if step % log_every == 0:
+                tps = batch * seq * (step - start_step + 1) / (time.time() - t0)
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f} "
+                      f"tok/s {tps:,.0f}")
+            if mgr is not None and (step + 1) % ckpt_every == 0:
+                mgr.save(step + 1, state)
+        if mgr is not None:
+            mgr.save(steps, state)
+            mgr.wait()
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--attn-impl", default=None)
+    ap.set_defaults(reduced=True)
+    args = ap.parse_args()
+    losses = run(args.arch, reduced=args.reduced, steps=args.steps,
+                 batch=args.batch, seq=args.seq, grad_accum=args.grad_accum,
+                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                 lr=args.lr, model_axis=args.model_axis,
+                 attn_impl=args.attn_impl)
+    print(f"[train] first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,317 @@
+"""Attention layers (GQA/MHA/MQA self-, cross-, and MLA latent attention).
+
+Three interchangeable inner implementations, all semantically the TL
+program (same online-softmax recurrence, same bottom-right causal mask):
+
+* ``tl_pallas``  — the TL-generated Pallas kernel (interpret-mode on CPU,
+                   Mosaic on TPU).  Used by smoke tests and TPU runtime.
+* ``xla_flash``  — the same blocked online-softmax lowered through XLA as a
+                   ``lax.scan`` over KV chunks.  This is the dry-run compile
+                   path: it reproduces flash attention's O(M) memory profile
+                   in HLO so the roofline terms are honest at 32k-512k
+                   sequence lengths.
+* ``naive``      — reference einsum (tests only).
+
+GQA is computed grouped — q reshaped to (B, Hkv, G, M, D) — so KV is never
+materialised per q-head (matters at Hq/Hkv = 16 on llama3-405b).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.translate import semantics
+from . import layers
+from .config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# inner attention
+# --------------------------------------------------------------------------
+
+def xla_flash(q, k, v, *, causal: bool, scale: float,
+              window: Optional[int] = None, kv_valid=None,
+              chunk: int = 1024):
+    """Chunked online-softmax attention.  q: (B,Hq,M,D), k/v: (B,Hkv,N,Dv)."""
+    b, hq, m, d = q.shape
+    hkv, n = k.shape[1], k.shape[2]
+    g = hq // hkv
+    dv = v.shape[-1]
+    chunk = min(chunk, n)
+    nc = -(-n // chunk)
+    npad = nc * chunk
+    if npad != n:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, npad - n), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, npad - n), (0, 0)))
+    kv_limit = n if kv_valid is None else kv_valid
+    q5 = q.reshape(b, hkv, g, m, d)
+    q_off = kv_limit - m  # bottom-right causal alignment (last q = last key)
+    kc = k.reshape(b, hkv, nc, chunk, k.shape[-1]).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
+
+    q_pos = jnp.arange(m)[:, None] + q_off                   # (M, 1)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        ci, k_i, v_i = xs
+        s = jnp.einsum("bkgmd,bknd->bkgmn", q5.astype(jnp.float32),
+                       k_i.astype(jnp.float32),
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = ci * chunk + jnp.arange(chunk)[None, :]      # (1, C)
+        keep = k_pos < kv_limit
+        if causal:
+            keep &= k_pos <= q_pos
+        if window is not None:
+            keep &= k_pos > q_pos - window
+        s = jnp.where(keep, s, semantics.NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_run, m_cur)
+        p = jnp.exp(s - m_new)
+        # fully-masked rows stay at 0 (see semantics.online_softmax)
+        p = jnp.where(m_new <= semantics.NEG_INF / 2, 0.0, p)
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bkgmn,bknd->bkgmd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, m, 1), semantics.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, m, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, m, dv), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nc), kc, vc))
+    out = acc / jnp.where(l_f == 0.0, 1.0, l_f)
+    return out.reshape(b, hq, m, dv).astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, causal, scale, window=None, kv_valid=None):
+    from ..kernels import ref
+    return ref.attention(q, k, v, causal=causal, window=window, scale=scale,
+                         kv_valid=kv_valid).astype(q.dtype)
+
+
+def run_attention(q, k, v, *, cfg: ModelConfig, causal: bool,
+                  scale: float, window=None, kv_valid=None):
+    impl = cfg.attn_impl
+    if impl == "tl_pallas":
+        from ..kernels import ops
+        if kv_valid is not None and q.shape[2] == 1:
+            return ops.flash_decode(q, k, v, cache_len=kv_valid).astype(q.dtype)
+        if kv_valid is not None:
+            # prefill into a cache buffer: only the first kv_valid entries
+            # are real — slice them (kv_valid is static in the serve path;
+            # a traced length falls back to the masked XLA path)
+            try:
+                n_valid = int(kv_valid)
+            except (TypeError, jax.errors.TracerIntegerConversionError):
+                return xla_flash(q, k, v, causal=causal, scale=scale,
+                                 window=window, kv_valid=kv_valid,
+                                 chunk=cfg.attn_chunk)
+            k, v = k[:, :, :n_valid], v[:, :, :n_valid]
+        return ops.flash_attention(q, k, v, causal=causal,
+                                   window=window).astype(q.dtype)
+    if impl == "xla_flash":
+        return xla_flash(q, k, v, causal=causal, scale=scale, window=window,
+                         kv_valid=kv_valid, chunk=cfg.attn_chunk)
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, scale=scale,
+                               window=window, kv_valid=kv_valid)
+    raise ValueError(f"unknown attn_impl {impl!r}")
+
+
+# --------------------------------------------------------------------------
+# GQA/MHA/MQA self-attention layer (and cross-attention)
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_q_heads, cfg.num_kv_heads, cfg.head_dim
+    hq = max(hq, cfg.pad_q_heads_to)
+    dt = layers.jdtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    kv_in = cfg.vision_d if cross and cfg.vision_d else d
+    return {
+        "wq": layers.dense_init(ks[0], (d, hq, hd), dt),
+        "wk": layers.dense_init(ks[1], (kv_in, hkv, hd), dt),
+        "wv": layers.dense_init(ks[2], (kv_in, hkv, hd), dt),
+        "wo": layers.dense_init(ks[3], (hq, hd, d), dt,
+                                scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _constrain(v, spec):
+    if spec is None:
+        return v
+    return jax.lax.with_sharding_constraint(v, spec)
+
+
+def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
+               cross_kv=None, causal=True, head_sharding=None):
+    """x: (B, T, d).  ``cache``: optional dict(k, v, len) for decode.
+    ``cross_kv``: (B, P, vision_d) patch embeddings for cross-attention.
+    ``head_sharding``: PartitionSpec for (B, H, T, D) tensors — pins the
+    q/o head dim to the 'model' axis so GSPMD never resolves the attention
+    einsums by partial-summing a mis-sharded KV operand (a measured 2.7 TB
+    of per-step all-reduce on deepseek-v2-lite, EXPERIMENTS.md §Perf)."""
+    b, t, d = x.shape
+    hd = cfg.head_dim
+    q = _constrain(jnp.einsum("btd,dhk->bhtk", x, params["wq"]),
+                   head_sharding)
+    src = cross_kv if cross_kv is not None else x
+    k = jnp.einsum("bpd,dhk->bhpk", src, params["wk"])
+    v = jnp.einsum("bpd,dhk->bhpk", src, params["wv"])
+
+    if cross_kv is None:
+        if positions is None:
+            positions = jnp.arange(t)
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    kv_valid = None
+    if cache is not None:
+        # decode: append new kv at cache['len'], attend to the prefix
+        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache["len"], 2)
+        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache["len"], 2)
+        cache = {"k": k, "v": v, "len": cache["len"] + t}
+        kv_valid = cache["len"]
+
+    o = run_attention(q, k, v, cfg=cfg,
+                      causal=causal and cross_kv is None,
+                      scale=hd ** -0.5, kv_valid=kv_valid)
+    o = _constrain(o, head_sharding)
+    o = o.astype(x.dtype)
+    if cfg.pad_q_heads_to > cfg.num_q_heads:
+        # zero the padded heads so their (garbage) attention output cannot
+        # reach wo — keeps values AND gradients exactly those of the
+        # unpadded model.  Pad slots are interleaved per KV group (real
+        # heads fill the first g slots of each group) so the GQA head->KV
+        # mapping is preserved.
+        g_pad = cfg.pad_q_heads_to // cfg.num_kv_heads
+        g_real = cfg.num_q_heads // cfg.num_kv_heads
+        mask = (jnp.arange(o.shape[1]) % g_pad) < g_real
+        o = o * mask[None, :, None, None].astype(o.dtype)
+    out = jnp.einsum("bhtk,hkd->btd", o, params["wo"])
+    return (out, cache) if cache is not None else (out, None)
+
+
+def cross_attn_apply(params, x, *, cfg: ModelConfig, vision=None, cache=None):
+    """Cross-attention over patch embeddings, with KV caching.
+
+    Prefill (``vision`` given): compute K/V from the patch embeddings and
+    return them as the cache.  Decode (``vision`` None, ``cache`` given):
+    reuse the cached projections — the image is encoded exactly once.
+    """
+    b, t, d = x.shape
+    q = jnp.einsum("btd,dhk->bhtk", x, params["wq"])
+    if vision is not None:
+        k = jnp.einsum("bpd,dhk->bhpk", vision.astype(x.dtype), params["wk"])
+        v = jnp.einsum("bpd,dhk->bhpk", vision.astype(x.dtype), params["wv"])
+        new_cache = {"k": k, "v": v} if cache is not None else None
+    elif cache is not None:
+        k, v = cache["k"], cache["v"]
+        new_cache = {"k": k, "v": v}
+    else:
+        raise ValueError("cross-attention needs vision embeds or a cache")
+    o = run_attention(q, k, v, cfg=cfg, causal=False,
+                      scale=cfg.head_dim ** -0.5)
+    out = jnp.einsum("bhtk,hkd->btd", o.astype(x.dtype), params["wo"])
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek V2/V3) — absorbed latent attention
+# --------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_q_heads
+    r, rr = cfg.kv_lora_rank, cfg.rope_head_dim
+    nope, vd = cfg.nope_head_dim, cfg.v_head_dim
+    dt = layers.jdtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    p = {
+        "w_dkv": layers.dense_init(ks[0], (d, r + rr), dt),
+        "kv_norm": layers.rmsnorm_init(r, cfg.dtype),
+        "w_uk": layers.dense_init(ks[1], (r, h, nope), dt),
+        "w_uv": layers.dense_init(ks[2], (r, h, vd), dt),
+        "w_o": layers.dense_init(ks[3], (h, vd, d), dt,
+                                 scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = layers.dense_init(ks[4], (d, cfg.q_lora_rank), dt)
+        p["q_norm"] = layers.rmsnorm_init(cfg.q_lora_rank, cfg.dtype)
+        p["w_uq"] = layers.dense_init(ks[5], (cfg.q_lora_rank, h, nope + rr), dt)
+    else:
+        p["w_q"] = layers.dense_init(ks[6], (d, h, nope + rr), dt)
+    return p
+
+
+def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
+              causal=True, head_sharding=None, latent_sharding=None):
+    """Absorbed MLA.  The latent cache (R + Rr per token, head-independent)
+    is both K and V — read once for both GEMMs (paper Table 2 workload)."""
+    b, t, d = x.shape
+    h, r, rr = cfg.num_q_heads, cfg.kv_lora_rank, cfg.rope_head_dim
+    nope = cfg.nope_head_dim
+    if positions is None:
+        positions = jnp.arange(t)
+
+    # --- latent KV: c_kv (normed) ++ shared roped k_rope --------------------
+    ckv = jnp.einsum("btd,dr->btr", x, params["w_dkv"])
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    c = layers.rmsnorm(c, params["kv_norm"], cfg.norm_eps)
+    k_rope = layers.apply_rope(k_rope[:, None], positions,
+                               cfg.rope_theta)[:, 0]
+    latent = jnp.concatenate([c, k_rope.astype(c.dtype)], axis=-1)  # (B,T,R+Rr)
+
+    # --- queries, absorbed into latent space --------------------------------
+    if cfg.q_lora_rank:
+        qc = layers.rmsnorm(jnp.einsum("btd,dr->btr", x, params["w_dq"]),
+                            params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("btr,rhk->bhtk", qc, params["w_uq"])
+    else:
+        q = jnp.einsum("btd,dhk->bhtk", x, params["w_q"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    q_lat = jnp.einsum("bhtn,rhn->bhtr", q_nope, params["w_uk"])
+    q_full = _constrain(
+        jnp.concatenate([q_lat, q_rope.astype(q_lat.dtype)], axis=-1),
+        head_sharding)
+    # the shared latent cache is small (N x (R+Rr)); keep it replicated
+    # over 'model' so the two latent GEMMs contract locally per head shard
+    latent = _constrain(latent, latent_sharding)
+
+    kv_valid = None
+    if cache is not None:
+        latent = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], latent, cache["len"], 1)
+        cache = {"c": latent, "len": cache["len"] + t}
+        kv_valid = cache["len"]
+
+    scale = (nope + rr) ** -0.5
+    if cfg.attn_impl == "tl_pallas":
+        from ..kernels import ops
+        if cache is not None and t == 1:
+            o_lat = ops.mla_decode(q_full, latent, cache_len=kv_valid,
+                                   kv_lora_rank=r, rope_head_dim=rr)
+        else:
+            lat = latent
+            if kv_valid is not None:
+                # cached prefill: only the first kv_valid latents are real
+                lat = latent[:, :int(kv_valid)]
+            o_lat = ops.mla_attention(q_full, lat, causal=causal,
+                                      kv_lora_rank=r, rope_head_dim=rr)
+    else:
+        kk = latent[:, None]                     # (B, 1, N, R+Rr)
+        vv = latent[:, None, :, :r]              # (B, 1, N, R)
+        o_lat = xla_flash(q_full, kk, vv, causal=causal, scale=scale,
+                          kv_valid=kv_valid, chunk=cfg.attn_chunk)
+    o_lat = _constrain(o_lat, head_sharding)
+
+    # --- un-absorb: latent out -> per-head values -> output proj -------------
+    o = jnp.einsum("bhtr,rhv->bhtv", o_lat.astype(x.dtype), params["w_uv"])
+    out = jnp.einsum("bhtv,hvd->btd", o, params["w_o"])
+    return (out, cache) if cache is not None else (out, None)

@@ -1,0 +1,156 @@
+"""Unified model configuration covering all ten assigned architectures.
+
+One dataclass; family-specific fields are inert for other families.  Every
+field is static (hashable) so configs can key jit caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_q_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+
+    # --- MoE ---------------------------------------------------------------
+    moe: bool = False
+    num_experts: int = 0           # routed experts
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0              # per-expert hidden dim
+    moe_every: int = 1             # MoE FFN every Nth layer (1 = all)
+    first_k_dense: int = 0         # leading dense-FFN layers (DeepSeek-V2)
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.001
+
+    # --- MLA (DeepSeek) ------------------------------------------------------
+    mla: bool = False
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0           # 0 = no query compression
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- hybrid (Jamba): 1 attention layer per `period`, rest Mamba ----------
+    hybrid_period: int = 0         # 0 = not hybrid; Jamba = 8 (1:7)
+    mamba_state: int = 16
+    mamba_expand: int = 2
+    mamba_conv: int = 4
+
+    # --- ssm (RWKV-6) --------------------------------------------------------
+    rwkv: bool = False
+    rwkv_head_dim: int = 64
+
+    # --- vlm: cross-attention every Nth layer consuming patch embeddings -----
+    cross_attn_period: int = 0     # 0 = none; llama-3.2-vision = 5
+    vision_d: int = 0              # patch embedding dim (stub frontend)
+    num_patches: int = 0
+
+    # pad query heads up to this count with zero-masked heads so the head
+    # dim divides the 16-wide 'model' axis (e.g. coder-33b: 56 -> 64).
+    # Padded heads are masked to zero before the output projection, so
+    # semantics and gradients are exact; the cost is Hpad/H extra attention
+    # FLOPs vs a 16x replication without it (EXPERIMENTS.md §Perf).
+    pad_q_heads_to: int = 0
+
+    # --- general --------------------------------------------------------------
+    norm_eps: float = 1e-5
+    rope_theta: float = 500000.0
+    tie_embeddings: bool = False
+    dtype: str = "bf16"            # params/activations dtype
+    # attention implementation: "xla_flash" (chunked online-softmax, the
+    # compile path for dry-runs), "tl_pallas" (TL-generated kernel,
+    # interpret-mode on CPU), "naive" (reference einsum)
+    attn_impl: str = "xla_flash"
+    attn_chunk: int = 1024         # kv chunk for xla_flash
+    remat: bool = True
+    # remat policy: "nothing" (recompute all; min memory), "dots_nobatch"
+    # (save GEMM outputs; min recompute)
+    remat_policy: str = "nothing"
+    # nested-scan (sqrt-depth) remat: scan G groups of periods with the
+    # whole inner scan checkpointed, so only G + nper/G residual carries
+    # are live instead of nper (llama3-405b: 126 -> 23 carries).  Costs one
+    # extra forward recompute.  0 = flat scan.  Applies to the cache-free
+    # (training) path only.
+    remat_scan_groups: int = 0
+    # max positions for RoPE tables etc.
+    max_seq_len: int = 32768
+
+    def __post_init__(self):
+        if self.moe and not (self.num_experts and self.top_k):
+            raise ValueError(f"{self.name}: moe requires num_experts/top_k")
+        if self.family == "hybrid" and not self.hybrid_period:
+            raise ValueError(f"{self.name}: hybrid requires hybrid_period")
+        if self.num_q_heads % max(1, self.num_kv_heads):
+            raise ValueError(f"{self.name}: Hq % Hkv != 0")
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_q_heads // max(1, self.num_kv_heads)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.rwkv
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run long_500k decode? (SSM/hybrid only.)"""
+        return self.rwkv or self.hybrid_period > 0
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        n = v * d * (1 if self.tie_embeddings else 2)
+        per_layer_attn = 0
+        if self.mla:
+            dq = self.num_q_heads * (self.nope_head_dim + self.rope_head_dim)
+            per_layer_attn += d * (self.q_lora_rank or d) if self.q_lora_rank else 0
+            per_layer_attn += (self.q_lora_rank or d) * dq
+            per_layer_attn += d * (self.kv_lora_rank + self.rope_head_dim)
+            per_layer_attn += self.kv_lora_rank * self.num_q_heads * (
+                self.nope_head_dim + self.v_head_dim)
+            per_layer_attn += self.num_q_heads * self.v_head_dim * d
+        elif not self.rwkv:
+            hd = self.head_dim
+            per_layer_attn += d * self.num_q_heads * hd
+            per_layer_attn += 2 * d * self.num_kv_heads * hd
+            per_layer_attn += self.num_q_heads * hd * d
+        else:
+            per_layer_attn += 5 * d * d + d * ff  # rwkv time-mix + channel-mix
+
+        def ffn_params(hidden):
+            return 3 * d * hidden  # SwiGLU
+
+        n_attn_layers = self.num_layers
+        n_moe = 0
+        if self.moe:
+            n_moe = self.num_layers // self.moe_every
+        n_dense_ffn = self.num_layers - n_moe
+        per_moe = (self.num_experts + self.num_shared_experts) * \
+            ffn_params(self.moe_d_ff) + d * self.num_experts
+        n += self.num_layers * per_layer_attn
+        n += n_dense_ffn * ffn_params(ff) + n_moe * per_moe
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        n_moe = self.num_layers // self.moe_every
+        per_moe_total = (self.num_experts + self.num_shared_experts) * \
+            3 * d * self.moe_d_ff
+        per_moe_active = (self.top_k + self.num_shared_experts) * \
+            3 * d * self.moe_d_ff
+        return int(full - n_moe * (per_moe_total - per_moe_active))

@@ -1,0 +1,111 @@
+"""Shared pure-JAX building blocks: norms, FFN, RoPE, embeddings, init."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_DT = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16}
+
+
+def jdtype(name: str):
+    return _DT[name]
+
+
+# --- init ---------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = (scale if scale is not None else 1.0) / max(1.0, fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# --- norms ----------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def rmsnorm_init(d, dtype):
+    return jnp.ones((d,), jdtype(dtype))
+
+
+# --- RoPE -------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: (...,) int -> (..., head_dim//2) angles."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, H, T, D) with D even; positions: (T,) or (B, T)."""
+    d = x.shape[-1]
+    ang = rope_freqs(d, theta, positions)            # (T, D/2) or (B, T, D/2)
+    if ang.ndim == 2:
+        ang = ang[None, None]                        # (1, 1, T, D/2)
+    else:
+        ang = ang[:, None]                           # (B, 1, T, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- FFN ----------------------------------------------------------------------
+
+def swiglu_init(key, d, ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff), jdtype(dtype)),
+        "w_up": dense_init(k2, (d, ff), jdtype(dtype)),
+        "w_down": dense_init(k3, (ff, d), jdtype(dtype)),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.dot(x, params["w_gate"])
+    u = jnp.dot(x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.dot(h, params["w_down"])
+
+
+# --- embedding / head -----------------------------------------------------------
+
+def embedding_init(key, vocab, d, dtype):
+    return {"table": embed_init(key, (vocab, d), jdtype(dtype))}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params, x, table=None):
+    t = table if table is not None else params["table"]
+    return jnp.dot(x, t.T.astype(x.dtype), preferred_element_type=jnp.float32)
+
+
+# --- loss --------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None):
+    """logits: (B, T, V) f32; labels: (B, T) int32.  Mean over valid tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

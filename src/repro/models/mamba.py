@@ -1,0 +1,147 @@
+"""Mamba (selective SSM) block for the Jamba hybrid — chunked scan form.
+
+TPU adaptation: the recurrence h_t = dA_t * h_{t-1} + dBx_t is diagonal in
+the state dim, so it lowers to a `lax.scan` over *chunks* with the
+(d_inner, state) carry in f32 — sequence stays unsharded for SSM layers,
+d_inner is the tensor-parallel axis (DESIGN.md §3.1).  Within a chunk the
+pointwise recurrence runs as an associative scan over the chunk axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    s = cfg.mamba_state
+    dt_rank = max(16, d // 16)
+    dt = layers.jdtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialisation for A
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, s + 1, dtype=jnp.float32),
+                                      (di, s)))
+    return {
+        "w_in": layers.dense_init(ks[0], (d, 2 * di), dt),
+        "conv": layers.dense_init(ks[1], (cfg.mamba_conv, di), dt, scale=1.0),
+        "w_x_dbc": layers.dense_init(ks[2], (di, dt_rank + 2 * s), dt),
+        "w_dt": layers.dense_init(ks[3], (dt_rank, di), dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": a_init,
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": layers.dense_init(ks[4], (di, d), dt,
+                                   scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _chunked_ssm(dt, A, bmat, xi, C, chunk: int):
+    """h_t = dA_t h_{t-1} + dBx_t ; y_t = <h_t, C_t>.
+
+    dt/xi: (B, T, Di), A: (Di, S), bmat/C: (B, T, S).  The (Di, S)-wide
+    discretised tensors dA/dBx are materialised only per *chunk* inside the
+    scan — the full-sequence (B, T, Di, S) tensor would be ~4 GiB/device at
+    jamba train_4k scale.
+    """
+    b, t, di = dt.shape
+    s = A.shape[1]
+    nc = t // chunk
+    resh = lambda a: a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+    dt_c, b_c, x_c, c_c = resh(dt), resh(bmat), resh(xi), resh(C)
+
+    def chunk_step(h0, xs):
+        dtk, bk, xk, ck = xs                 # (B, chunk, ...)
+        da = jnp.exp(dtk[..., None] * A[None, None])          # (B,c,Di,S)
+        dbx = (dtk * xk)[..., None] * bk[:, :, None, :]
+
+        def combine(a, b_):
+            # (A1, B1) then (A2, B2): h -> A2 (A1 h + B1) + B2
+            return a[0] * b_[0], b_[0] * a[1] + b_[1]
+
+        aa, bb = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h = aa * h0[:, None] + bb            # (B, chunk, Di, S)
+        y = jnp.einsum("bcds,bcs->bcd", h, ck)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((b, di, s), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (dt_c, b_c, x_c, c_c))
+    return ys.swapaxes(0, 1).reshape(b, t, di)
+
+
+def mamba_apply(params, x, *, cfg: ModelConfig, chunk: int = 256,
+                state=None):
+    """x: (B, T, d).  ``state``: optional (conv_tail, h) for decode.
+
+    Training path: chunked scan over the full sequence (state=None).
+    Decode path (T small): sequential update of the carried state.
+    """
+    b, t, d = x.shape
+    di = cfg.mamba_expand * d
+    s = cfg.mamba_state
+    dt_rank = params["w_dt"].shape[0]
+    xz = jnp.einsum("btd,de->bte", x, params["w_in"])
+    xi, z = xz[..., :di], xz[..., di:]
+
+    # depthwise causal conv along T
+    kw = params["conv"].shape[0]
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"], xi], axis=1)
+    else:
+        conv_in = jnp.pad(xi, ((0, 0), (kw - 1, 0), (0, 0)))
+    xi = sum(conv_in[:, i:i + t] * params["conv"][i][None, None]
+             for i in range(kw))
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = jnp.einsum("bte,ef->btf", xi, params["w_x_dbc"])
+    dt_in, bmat, cmat = (dbc[..., :dt_rank],
+                         dbc[..., dt_rank:dt_rank + s],
+                         dbc[..., dt_rank + s:])
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_in, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                     # (Di, S), negative
+    xif = xi.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    new_state = None
+    if state is not None:
+        dA = jnp.exp(dt[..., None] * A[None, None])   # (B, T<=small, Di, S)
+        dBx = (dt * xif)[..., None] * bf[:, :, None, :]
+
+        def step(h, xs):
+            da, dbx, c = xs
+            h = da * h + dbx
+            return h, jnp.einsum("bds,bs->bd", h, c)
+        h_last, ys = jax.lax.scan(
+            step, state["h"],
+            (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+             cf.transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2)
+        new_state = {"conv": conv_in[:, -(kw - 1):], "h": h_last}
+    else:
+        tpad = (-t) % chunk
+        if tpad:
+            dt = jnp.pad(dt, ((0, 0), (0, tpad), (0, 0)))
+            xif = jnp.pad(xif, ((0, 0), (0, tpad), (0, 0)))
+            bf = jnp.pad(bf, ((0, 0), (0, tpad), (0, 0)))
+            cf = jnp.pad(cf, ((0, 0), (0, tpad), (0, 0)))
+        y = _chunked_ssm(dt, A, bf, xif, cf, chunk)[:, :t]
+
+    y = y + params["D"][None, None] * xi.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("btd,de->bte", y.astype(x.dtype), params["w_out"])
+    return out, new_state
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int):
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_conv - 1, di),
+                          layers.jdtype(cfg.dtype)),
+        "h": jnp.zeros((batch, di, cfg.mamba_state), jnp.float32),
+    }

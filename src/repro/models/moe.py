@@ -1,0 +1,237 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2 / Qwen3 / Jamba style).
+
+Top-k routing with capacity truncation, sort-based dispatch (real
+gather/scatter — NOT the one-hot-einsum dispatch, whose S^2-shaped matmuls
+would pollute the roofline compute term with routing overhead), shared
+experts added densely, and a load-balancing auxiliary loss.
+
+Sharding intent (see parallel/sharding.py): expert weights are sharded over
+the 'model' axis on the expert dim (expert parallelism); tokens arrive
+sharded over ('pod','data').  The dispatch scatter/gather crosses the two,
+which GSPMD lowers to the expert all-to-all pattern.  The baseline keeps
+this implicit; EXPERIMENTS.md §Perf measures it from the dry-run HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, e = cfg.d_model, cfg.num_experts
+    ff = cfg.moe_d_ff
+    dt = layers.jdtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], (d, e), jnp.float32),
+        "we_gate": layers.dense_init(ks[1], (e, d, ff), dt),
+        "we_up": layers.dense_init(ks[2], (e, d, ff), dt),
+        "we_down": layers.dense_init(ks[3], (e, ff, d), dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.swiglu_init(
+            ks[4], d, cfg.moe_d_ff * cfg.num_shared_experts, cfg.dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def _dispatch(x, logits, e: int, k: int, cap: int):
+    """Per-row top-k routing + sort-based dispatch (shared by both paths).
+
+    Returns (xe (B,E,cap,d), slot, sorted_tok, sorted_w, keep, aux_parts).
+    """
+    b, t, d = x.shape
+    probs = jax.nn.softmax(logits, axis=-1)                     # (B, T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (B, T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=(0, 1))                            # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    nk = t * k
+    flat_exp = gate_idx.reshape(b, nk)
+    flat_tok = jnp.broadcast_to(jnp.repeat(jnp.arange(t), k)[None], (b, nk))
+    flat_w = gate_vals.reshape(b, nk)
+    order = jnp.argsort(flat_exp, axis=1)                        # stable
+    sorted_exp = jnp.take_along_axis(flat_exp, order, axis=1)
+    sorted_tok = jnp.take_along_axis(flat_tok, order, axis=1)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=1)
+    onehot = jax.nn.one_hot(sorted_exp, e, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - 1,
+                              sorted_exp[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_exp * cap + pos, e * cap)
+    xt_sorted = jnp.take_along_axis(x, sorted_tok[..., None], axis=1)
+    xe = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    xe = jax.vmap(lambda buf, s, v: buf.at[s].set(v, mode="drop"))(
+        xe, slot, xt_sorted)
+    return xe[:, :-1].reshape(b, e, cap, d), slot, sorted_tok, sorted_w, \
+        keep, (me, ce)
+
+
+def moe_apply_shardmap(params, x, *, cfg: ModelConfig, mesh, dp_axes,
+                       model_axis: str = "model"):
+    """Expert-parallel MoE with an explicit shard_map interior.
+
+    Everything data-dependent (routing, sort, scatter/gather) runs *local*
+    to each device; each 'model' shard computes only its E/TP experts and
+    combines its partial outputs locally; one psum over 'model' finishes
+    the combine.  Per layer-microbatch traffic = 2 x (B_loc, T, d) — vs the
+    GSPMD path's deferred-AR-through-gather pattern (~24x more on qwen3,
+    EXPERIMENTS.md §Perf iteration B2).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    e, k = cfg.num_experts, cfg.top_k
+    tp = mesh.shape[model_axis]
+    e_loc = e // tp
+    b, t, d = x.shape
+    cap = _capacity(t, cfg)
+
+    expert_keys = ("we_gate", "we_up", "we_down")
+    p_specs = {nm: (P(model_axis, None, None) if nm in expert_keys else
+                    jax.tree.map(lambda _: P(), params[nm])
+                    if isinstance(params[nm], dict) else P())
+               for nm in params}
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # pragma: no cover - version fallback
+        from jax.experimental.shard_map import shard_map
+
+    def local(p, x_loc):
+        logits = jnp.einsum("btd,de->bte", x_loc.astype(jnp.float32),
+                            p["router"])
+        xe, slot, sorted_tok, sorted_w, keep, (me, ce) = _dispatch(
+            x_loc, logits, e, k, cap)
+        my = jax.lax.axis_index(model_axis)
+        xe_mine = jax.lax.dynamic_slice_in_dim(xe, my * e_loc, e_loc, 1)
+        g = jnp.einsum("becd,edf->becf", xe_mine, p["we_gate"])
+        u = jnp.einsum("becd,edf->becf", xe_mine, p["we_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x_loc.dtype) * u
+        ye_mine = jnp.einsum("becf,efd->becd", h, p["we_down"])
+        # place my experts' outputs back at their global slot range and
+        # combine locally; other shards' slots read the zero padding row
+        bl = x_loc.shape[0]
+        ye_flat = jnp.zeros((bl, e * cap + 1, d), ye_mine.dtype)
+        ye_flat = jax.lax.dynamic_update_slice_in_dim(
+            ye_flat, ye_mine.reshape(bl, e_loc * cap, d), my * e_loc * cap,
+            axis=1)
+        y_sorted = jnp.take_along_axis(ye_flat, slot[..., None], axis=1)
+        y_sorted = y_sorted * (sorted_w * keep).astype(
+            y_sorted.dtype)[..., None]
+        out = jnp.zeros((bl, t, d), x_loc.dtype)
+        out = jax.vmap(lambda buf, s, v: buf.at[s].add(v))(
+            out, sorted_tok, y_sorted)
+        out = jax.lax.psum(out, model_axis)        # EP combine
+        aux = cfg.aux_loss_coef * e * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, dp_axes)
+        if cfg.num_shared_experts:
+            out = out + layers.swiglu(p["shared"], x_loc)
+        return out, aux
+
+    kwargs = dict(mesh=mesh, in_specs=(p_specs, P(dp_axes, None, None)),
+                  out_specs=(P(dp_axes, None, None), P()))
+    try:
+        mapped = shard_map(local, check_vma=False, **kwargs)
+    except TypeError:  # pragma: no cover - older jax spelling
+        mapped = shard_map(local, check_rep=False, **kwargs)
+    return mapped(params, x)
+
+
+def moe_apply(params, x, *, cfg: ModelConfig, ep_sharding=None):
+    """x: (B, T, d) -> (out, aux_loss).
+
+    Dispatch is **per batch row**: every gather/scatter and the
+    position-within-expert cumsum is batched over B (the data-parallel
+    axis), so routing never crosses data shards.  The only cross-device
+    movement is the (B, E, C, d) expert-buffer reshard from B-sharded to
+    (B x E)-sharded — the expert-parallel all-to-all — which
+    ``ep_sharding`` pins explicitly.  (The earlier global-token dispatch
+    let GSPMD all-gather the whole token stream per MoE layer: a measured
+    ~9x collective blow-up on qwen3-moe, EXPERIMENTS.md §Perf.)
+    """
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+
+    tok_sharding = None
+    if ep_sharding is not None:
+        from jax.sharding import PartitionSpec as _P
+        tok_sharding = _P(ep_sharding[0], None, None)
+
+    def tokc(v):
+        # pin token-space gathers/scatters to dp-only sharding: without
+        # this GSPMD partitions take_along_axis over 'model' and
+        # all-reduces the (T*k, d) gather output every MoE layer (a
+        # measured 4.8 TB/step on qwen3-moe, EXPERIMENTS.md §Perf)
+        if tok_sharding is None:
+            return v
+        return jax.lax.with_sharding_constraint(v, tok_sharding)
+
+    x = tokc(x)
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (B, T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (B, T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balancing aux loss (Switch-style) ----------------------------
+    me = jnp.mean(probs, axis=(0, 1))                            # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = cfg.aux_loss_coef * e * jnp.sum(me * ce)
+
+    # ---- per-row sort-based dispatch ----------------------------------------
+    nk = t * k
+    flat_exp = gate_idx.reshape(b, nk)                           # (B, T*k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(t), k)[None], (b, nk))
+    flat_w = gate_vals.reshape(b, nk)
+    order = jnp.argsort(flat_exp, axis=1)                        # stable
+    sorted_exp = jnp.take_along_axis(flat_exp, order, axis=1)
+    sorted_tok = jnp.take_along_axis(flat_tok, order, axis=1)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=1)
+    onehot = jax.nn.one_hot(sorted_exp, e, dtype=jnp.int32)      # (B, T*k, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - 1,
+                              sorted_exp[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_exp * cap + pos, e * cap)      # drop -> pad
+
+    # gather tokens into per-row (E*cap, d) expert buffers (+1 padding row)
+    xt_sorted = tokc(jnp.take_along_axis(x, sorted_tok[..., None], axis=1))
+    xe = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    xe = jax.vmap(lambda buf, s, v: buf.at[s].set(v, mode="drop"))(
+        xe, slot, xt_sorted)
+    xe = xe[:, :-1].reshape(b, e, cap, d)
+    if ep_sharding is not None:
+        xe = jax.lax.with_sharding_constraint(xe, ep_sharding)
+
+    # ---- expert FFN (SwiGLU), batched over (row, expert) --------------------
+    g = jnp.einsum("becd,edf->becf", xe, params["we_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, params["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("becf,efd->becd", h, params["we_down"])
+    if ep_sharding is not None:
+        ye = jax.lax.with_sharding_constraint(ye, ep_sharding)
+
+    # ---- combine back ---------------------------------------------------------
+    ye_flat = jnp.concatenate(
+        [ye.reshape(b, e * cap, d),
+         jnp.zeros((b, 1, d), ye.dtype)], axis=1)
+    y_sorted = tokc(jnp.take_along_axis(ye_flat, slot[..., None], axis=1))
+    y_sorted = y_sorted * (sorted_w * keep).astype(y_sorted.dtype)[..., None]
+    out = jnp.zeros((b, t, d), x.dtype)
+    out = tokc(jax.vmap(lambda buf, s, v: buf.at[s].add(v))(
+        out, sorted_tok, y_sorted))
+
+    if cfg.num_shared_experts:
+        out = out + layers.swiglu(params["shared"], x)
+    return out, aux

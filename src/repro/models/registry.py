@@ -1,0 +1,125 @@
+"""Architecture registry + assigned input-shape sets.
+
+``get_config(arch_id)`` / ``get_reduced(arch_id)`` look up the per-arch
+config modules in ``repro.configs``; ``input_specs(cfg, shape_id)`` builds
+the ShapeDtypeStruct stand-ins for every model input of one of the four
+assigned shapes (no device allocation — the dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "deepseek-7b": "deepseek_7b",
+    "llama3-405b": "llama3_405b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "musicgen-large": "musicgen_large",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str, **overrides) -> ModelConfig:
+    cfg = _module(arch_id).CONFIG
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_reduced(arch_id: str, **overrides) -> ModelConfig:
+    cfg = _module(arch_id).reduced()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (assignment rule)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 512k dense-KV decode is the "
+                       "quadratic-memory regime long_500k excludes "
+                       "(DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec | str,
+                batch_override: Optional[int] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of (cfg, shape)."""
+    from . import transformer  # local import to avoid cycles
+
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        specs = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+        if cfg.cross_attn_period:
+            specs["vision_embeds"] = sds(
+                (b, cfg.num_patches, cfg.vision_d), jnp.bfloat16)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((b, s), i32)}
+        if cfg.cross_attn_period:
+            specs["vision_embeds"] = sds(
+                (b, cfg.num_patches, cfg.vision_d), jnp.bfloat16)
+        return specs
+
+    if shape.kind == "decode":
+        caches = jax.eval_shape(
+            lambda: transformer.init_caches(cfg, b, s))
+        return {"tokens": sds((b, 1), i32), "caches": caches,
+                "cache_len": sds((), i32)}
+
+    raise ValueError(shape.kind)
+
+
+def build_model(cfg: ModelConfig):
+    """Convenience bundle of the functional model API for one config."""
+    from . import transformer
+
+    return {
+        "init": lambda key: transformer.init_params(key, cfg),
+        "abstract_params": lambda: transformer.abstract_params(cfg),
+        "apply": lambda p, tokens, **kw: transformer.apply(p, tokens, cfg, **kw),
+        "loss_fn": lambda p, batch, **kw: transformer.loss_fn(p, batch, cfg, **kw),
+        "init_caches": lambda b, n: transformer.init_caches(cfg, b, n),
+        "config": cfg,
+    }

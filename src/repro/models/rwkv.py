@@ -1,0 +1,166 @@
+"""RWKV-6 ("Finch") block — attention-free, data-dependent decay.
+
+The paper's FlashAttention-generation technique is inapplicable here
+(DESIGN.md §Arch-applicability); the time-mix recurrence uses the chunked
+linear-scan formulation — as the TL-style Pallas kernel
+(``kernels/linear_scan.py``) on TPU/interpret, or the identical math in
+jnp (``_chunked_jnp``) on the XLA compile path used by dry-runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ff = cfg.d_ff
+    dt = layers.jdtype(cfg.dtype)
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 32)
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),      # shift mixing for r,k,v,w,g
+        "w_r": layers.dense_init(ks[0], (d, d), dt),
+        "w_k": layers.dense_init(ks[1], (d, d), dt),
+        "w_v": layers.dense_init(ks[2], (d, d), dt),
+        "w_g": layers.dense_init(ks[3], (d, d), dt),
+        "w_o": layers.dense_init(ks[4], (d, d), dt,
+                                 scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+        # data-dependent decay LoRA: w_t = base + tanh(x A) B
+        "decay_base": -6.0 * jnp.ones((d,), jnp.float32),
+        "decay_A": layers.dense_init(ks[5], (d, lora), dt),
+        "decay_B": layers.dense_init(ks[6], (lora, d), dt),
+        "u": layers.dense_init(ks[7], (h, hd), jnp.float32, scale=8.0),
+        "ln_x": layers.rmsnorm_init(d, cfg.dtype),
+        # channel-mix
+        "cm_k": layers.dense_init(ks[8], (d, ff), dt),
+        "cm_v": layers.dense_init(ks[9], (ff, d), dt),
+        "cm_r": layers.dense_init(ks[10], (d, d), dt),
+    }
+
+
+def _token_shift(x, mix, prev=None):
+    """x: (B,T,d); mix: (d,). returns mix*x_{t-1} + (1-mix)*x_t."""
+    if prev is None:
+        prev_x = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev_x = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return x + mix.astype(x.dtype) * (prev_x - x)
+
+
+def _chunked_jnp(r, k, v, w, u, chunk: int):
+    """Same math as kernels/linear_scan.py, as XLA scan over chunks."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    nc = t // chunk
+    rs = r.reshape(b, h, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    ks_ = k.reshape(b, h, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, h, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
+    ws = w.reshape(b, h, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+
+    def step(S, xs):
+        rc, kc, vc, wc = [a.astype(jnp.float32) for a in xs]
+        neg_ew = -jnp.exp(wc)
+        c_inc = jnp.cumsum(neg_ew, axis=-2)
+        c_prev = c_inc - neg_ew
+        c_last = c_inc[..., -1:, :]
+        r_dec = rc * jnp.exp(c_prev)
+        k_grow = kc * jnp.exp(-c_inc)
+        k_tail = kc * jnp.exp(c_last - c_inc)
+        a = jnp.einsum("bhld,bhmd->bhlm", r_dec, k_grow)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        a = jnp.where(tri, a, 0.0)
+        diag = jnp.sum(rc * (u[None, :, None, :] * kc), axis=-1)
+        o = jnp.einsum("bhlm,bhmd->bhld", a, vc)
+        o += diag[..., None] * vc
+        o += jnp.einsum("bhld,bhdv->bhlv", r_dec, S)
+        S = jnp.exp(c_last).swapaxes(-1, -2) * S + \
+            jnp.einsum("bhld,bhlv->bhdv", k_tail, vc)
+        return S, o
+
+    S0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    S_last, os = jax.lax.scan(step, S0, (rs, ks_, vs, ws))
+    return os.transpose(1, 2, 0, 3, 4).reshape(b, h, t, dv), S_last
+
+
+def rwkv_time_mix(params, x, *, cfg: ModelConfig, chunk: int = 64,
+                  state=None, use_pallas: bool = False):
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    mu = params["mu"]
+    xr = _token_shift(x, mu[0], state["shift"] if state else None)
+    xk = _token_shift(x, mu[1], state["shift"] if state else None)
+    xv = _token_shift(x, mu[2], state["shift"] if state else None)
+    xw = _token_shift(x, mu[3], state["shift"] if state else None)
+    xg = _token_shift(x, mu[4], state["shift"] if state else None)
+
+    r = jnp.dot(xr, params["w_r"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = jnp.dot(xk, params["w_k"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = jnp.dot(xv, params["w_v"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(jnp.dot(xg, params["w_g"]).astype(jnp.float32))
+    w = params["decay_base"].astype(jnp.float32) + jnp.dot(
+        jnp.tanh(jnp.dot(xw, params["decay_A"]).astype(jnp.float32)),
+        params["decay_B"].astype(jnp.float32))
+    w = w.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    new_state = None
+    if state is not None:
+        # sequential decode update
+        decay = jnp.exp(-jnp.exp(w.astype(jnp.float32)))
+
+        def step(S, xs):
+            rt, kt, vt, dt_ = xs            # (B,H,Dk) each
+            kv = kt[..., :, None] * vt[..., None, :]
+            ot = jnp.einsum("bhk,bhkv->bhv",
+                            rt, S + params["u"][None, :, :, None] * kv)
+            S = dt_[..., None] * S + kv
+            return S, ot
+        S, os = jax.lax.scan(
+            step, state["S"],
+            (r.transpose(2, 0, 1, 3).astype(jnp.float32),
+             k.transpose(2, 0, 1, 3).astype(jnp.float32),
+             v.transpose(2, 0, 1, 3).astype(jnp.float32),
+             decay.transpose(2, 0, 1, 3)))
+        o = os.transpose(1, 2, 0, 3)        # (B,H,T,Dv)
+        new_state = {"S": S, "shift": x[:, -1]}
+    elif use_pallas:
+        from ..kernels.linear_scan import rwkv6_chunked
+        tpad = (-t) % chunk
+        pad4 = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, tpad), (0, 0)))
+        o = rwkv6_chunked(pad4(r), pad4(k), pad4(v), pad4(w),
+                          params["u"], chunk=chunk)[:, :, :t]
+    else:
+        tpad = (-t) % chunk
+        pad4 = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, tpad), (0, 0)))
+        o, _ = _chunked_jnp(pad4(r), pad4(k), pad4(v), pad4(w),
+                            params["u"], chunk)
+        o = o[:, :, :t]
+
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    o = layers.rmsnorm(o.astype(x.dtype), params["ln_x"], cfg.norm_eps)
+    out = jnp.dot((o.astype(jnp.float32) * g).astype(x.dtype), params["w_o"])
+    return out, new_state
+
+
+def rwkv_channel_mix(params, x):
+    k = jnp.dot(x, params["cm_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.dot(x, params["cm_r"]).astype(jnp.float32))
+    return (r * jnp.dot(k, params["cm_v"]).astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    return {
+        "S": jnp.zeros((batch, d // hd, hd, hd), jnp.float32),
+        "shift": jnp.zeros((batch, d), layers.jdtype(cfg.dtype)),
+    }

@@ -1,0 +1,377 @@
+"""Model assembly: period-structured scan-over-layers for all families.
+
+The layer stack is organised as ``num_periods`` repetitions of a short
+*period* of sub-layers (MaxText-style stacked params + ``lax.scan`` over
+periods, so HLO size is O(period length), not O(depth)):
+
+  dense/moe/audio : period = [attn]                    (period length 1)
+  hybrid (jamba)  : period = [mamba]*7 + [attn]        (1:7 interleave)
+  vlm             : period = [self]*4 + [cross]        (cross-attn every 5th)
+  ssm (rwkv6)     : period = [rwkv]
+
+Every sub-layer is pre-norm residual: x += mix(norm(x)); x += ffn(norm(x)),
+where ``mix`` is attention / Mamba / RWKV time-mix and ``ffn`` is SwiGLU,
+MoE (on sub-positions where ``(s % moe_every) == moe_every-1``) or RWKV
+channel-mix.  ``first_k_dense`` leading layers (DeepSeek-V2's dense first
+layer) are kept outside the scan with their own params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, mamba, moe, rwkv
+from .config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# period structure
+# --------------------------------------------------------------------------
+
+def period_spec(cfg: ModelConfig) -> tuple[list[str], int]:
+    """Returns (sub-layer kinds, num_periods)."""
+    if cfg.rwkv:
+        return ["rwkv"], cfg.num_layers
+    if cfg.hybrid_period:
+        p = cfg.hybrid_period
+        assert (cfg.num_layers - cfg.first_k_dense) % p == 0
+        return ["mamba"] * (p - 1) + ["attn"], \
+            (cfg.num_layers - cfg.first_k_dense) // p
+    if cfg.cross_attn_period:
+        p = cfg.cross_attn_period
+        assert cfg.num_layers % p == 0
+        return ["self"] * (p - 1) + ["cross"], cfg.num_layers // p
+    return ["attn"], cfg.num_layers - cfg.first_k_dense
+
+
+def _is_moe(cfg: ModelConfig, sub_idx: int) -> bool:
+    if not cfg.moe:
+        return False
+    return (sub_idx % cfg.moe_every) == (cfg.moe_every - 1)
+
+
+# --------------------------------------------------------------------------
+# sub-layer init / apply
+# --------------------------------------------------------------------------
+
+def _sublayer_init(key, cfg: ModelConfig, kind: str, use_moe: bool):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"norm1": layers.rmsnorm_init(d, cfg.dtype)}
+    if kind in ("attn", "self"):
+        p["mix"] = (attention.mla_init(ks[0], cfg) if cfg.mla
+                    else attention.attn_init(ks[0], cfg))
+    elif kind == "cross":
+        p["mix"] = attention.attn_init(ks[0], cfg, cross=True)
+    elif kind == "mamba":
+        p["mix"] = mamba.mamba_init(ks[0], cfg)
+    elif kind == "rwkv":
+        p["mix"] = rwkv.rwkv_init(ks[0], cfg)
+        p["norm2"] = layers.rmsnorm_init(d, cfg.dtype)
+        return p  # rwkv carries its own channel-mix inside p["mix"]
+    else:
+        raise ValueError(kind)
+    p["norm2"] = layers.rmsnorm_init(d, cfg.dtype)
+    p["ffn"] = (moe.moe_init(ks[1], cfg) if use_moe
+                else layers.swiglu_init(ks[1], d, cfg.d_ff, cfg.dtype))
+    return p
+
+
+def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
+    """ctx: dict(positions, vision, cache (this sub-layer's), cache_len).
+    Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    new_cache = None
+    if kind == "rwkv":
+        o, new_cache = rwkv.rwkv_time_mix(
+            p["mix"], h, cfg=cfg, state=ctx.get("cache"),
+            use_pallas=cfg.attn_impl == "tl_pallas")
+        x = x + o
+        h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + rwkv.rwkv_channel_mix(p["mix"], h2)
+        return x, new_cache, aux
+    if kind in ("attn", "self"):
+        cache = ctx.get("cache")
+        if cache is not None:
+            cache = dict(cache, len=ctx["cache_len"])
+        if cfg.mla:
+            o, new_cache = attention.mla_apply(
+                p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
+                cache=cache, head_sharding=ctx.get("head_sharding"),
+                latent_sharding=ctx.get("latent_sharding"))
+        else:
+            o, new_cache = attention.attn_apply(
+                p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
+                cache=cache, head_sharding=ctx.get("head_sharding"))
+        if new_cache is not None:
+            new_cache.pop("len", None)  # length tracked by the caller
+    elif kind == "cross":
+        o, new_cache = attention.cross_attn_apply(
+            p["mix"], h, cfg=cfg, vision=ctx.get("vision"),
+            cache=ctx.get("cache"))
+    elif kind == "mamba":
+        o, new_cache = mamba.mamba_apply(p["mix"], h, cfg=cfg,
+                                         state=ctx.get("cache"))
+    else:
+        raise ValueError(kind)
+    x = x + o
+    h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if use_moe:
+        mm = ctx.get("moe_mesh")
+        if mm is not None:
+            f, aux = moe.moe_apply_shardmap(p["ffn"], h2, cfg=cfg,
+                                            mesh=mm[0], dp_axes=mm[1])
+        else:
+            f, aux = moe.moe_apply(p["ffn"], h2, cfg=cfg,
+                                   ep_sharding=ctx.get("ep_sharding"))
+    else:
+        f = layers.swiglu(p["ffn"], h2)
+    return x + f, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# model init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    kinds, nper = period_spec(cfg)
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": layers.embedding_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                       cfg.dtype),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), layers.jdtype(cfg.dtype))
+    if cfg.cross_attn_period and cfg.vision_d:
+        pass  # cross-attn wk/wv already take vision_d input
+
+    # leading dense layers outside the scan
+    if cfg.first_k_dense:
+        fk = []
+        for i in range(cfg.first_k_dense):
+            fk.append(_sublayer_init(
+                jax.random.fold_in(keys[2], i), cfg,
+                "attn" if not cfg.rwkv else "rwkv", use_moe=False))
+        params["first"] = fk
+
+    # stacked period params: params["blocks"][f"sub{i}"] has leading nper dim
+    blocks = {}
+    for s, kind in enumerate(kinds):
+        def one(pi, s=s, kind=kind):
+            return _sublayer_init(
+                jax.random.fold_in(jax.random.fold_in(keys[3], s), pi),
+                cfg, kind, _is_moe(cfg, s))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[one(pi) for pi in range(nper)])
+        blocks[f"sub{s}"] = stacked
+    params["blocks"] = blocks
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the params — no allocation (dry-run)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
+          caches=None, cache_len=None, positions=None, act_sharding=None,
+          ep_sharding=None, head_sharding=None, latent_sharding=None,
+          moe_mesh=None):
+    """tokens: (B, T) int32 -> logits (B, T, V) f32.
+
+    ``caches``: pytree from :func:`init_caches` for decode; ``cache_len``
+    scalar count of valid cache entries.  Returns (logits, aux, new_caches).
+
+    ``act_sharding``: optional PartitionSpec for the (B, T, d) residual
+    stream.  Constraining it *inside* the period scan is what shards the
+    per-period saved residuals — with sequence parallelism
+    (P(dp, 'model', None)) the 126-period residual stack of llama3-405b
+    drops 16x (EXPERIMENTS.md §Perf).
+    """
+    kinds, nper = period_spec(cfg)
+    b, t = tokens.shape
+    x = layers.embed(params["embed"], tokens)
+
+    # Megatron-style sequence parallelism at period granularity: the scan
+    # carry (= the per-period saved residual) lives sequence-sharded over
+    # 'model'; inside a period the activations are gathered back to full
+    # sequence so GSPMD contracts against the model-sharded weights instead
+    # of all-gathering them (a measured 10x collective difference on
+    # llama3-405b — EXPERIMENTS.md §Perf).
+    compute_sharding = None
+    if act_sharding is not None:
+        from jax.sharding import PartitionSpec as _P
+        compute_sharding = _P(act_sharding[0], None, None)
+
+    def constrain(v, spec=None):
+        spec = spec if spec is not None else act_sharding
+        if spec is not None and v.ndim == 3 and v.shape[1] == t:
+            return jax.lax.with_sharding_constraint(v, spec)
+        return v
+
+    x = constrain(x)
+    if positions is None:
+        start = cache_len if cache_len is not None else 0
+        positions = start + jnp.arange(t)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    clen = cache_len if cache_len is not None else 0
+
+    def make_ctx(cache):
+        return {"positions": positions, "vision": vision_embeds,
+                "cache": cache, "cache_len": clen,
+                "ep_sharding": ep_sharding,
+                "head_sharding": head_sharding,
+                "latent_sharding": latent_sharding,
+                "moe_mesh": moe_mesh}
+
+    # leading dense layers
+    new_first_caches = []
+    if cfg.first_k_dense:
+        for i, p in enumerate(params["first"]):
+            cache = caches["first"][i] if caches else None
+            x, nc, aux = _sublayer_apply(
+                p, x, "attn" if not cfg.rwkv else "rwkv", False, cfg,
+                make_ctx(cache))
+            new_first_caches.append(nc)
+            aux_total += aux
+
+    # scanned periods
+    def period_body(carry, xs):
+        x, aux_acc = carry
+        block_params, period_caches = xs
+        new_caches = {}
+        # gather sequence for compute (weights stay model-sharded) ...
+        x = constrain(x, compute_sharding)
+        for s, kind in enumerate(kinds):
+            cache = period_caches.get(f"sub{s}") if period_caches else None
+            x, nc, aux = _sublayer_apply(
+                block_params[f"sub{s}"], x, kind, _is_moe(cfg, s), cfg,
+                make_ctx(cache))
+            if nc is not None:
+                new_caches[f"sub{s}"] = nc
+            aux_acc = aux_acc + aux
+        # ... and reduce-scatter the carry back to sequence-sharded
+        x = constrain(x)
+        return (x, aux_acc), new_caches
+
+    body = period_body
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots_nobatch"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(period_body, policy=policy)
+
+    period_caches = caches["blocks"] if caches else {}
+    groups = cfg.remat_scan_groups
+    if groups and caches is None and nper % groups == 0:
+        # sqrt-depth remat: only G outer carries + nper/G inner carries are
+        # saved (the inner scan is itself checkpointed)
+        grouped = jax.tree.map(
+            lambda a: a.reshape(groups, nper // groups, *a.shape[1:]),
+            params["blocks"])
+
+        def group_body(carry, group_params):
+            (xg, auxg), _ = jax.lax.scan(body, carry, (group_params, {}))
+            return (xg, auxg), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            jax.checkpoint(group_body,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            (x, aux_total), grouped)
+        new_block_caches = {}
+    else:
+        (x, aux_total), new_block_caches = jax.lax.scan(
+            body, (x, aux_total), (params["blocks"], period_caches))
+
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = jnp.dot(x, params["lm_head"],
+                         preferred_element_type=jnp.float32)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"blocks": new_block_caches}
+        if cfg.first_k_dense:
+            new_caches["first"] = new_first_caches
+    return logits, aux_total, new_caches
+
+
+# --------------------------------------------------------------------------
+# KV / state caches for decode
+# --------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode caches, stacked over periods for the scanned blocks.
+
+    Cache entries do NOT carry the running length — pass ``cache_len`` to
+    :func:`apply`; per-sub-layer dicts get it injected there.
+    """
+    kinds, nper = period_spec(cfg)
+    dt = layers.jdtype(cfg.dtype)
+
+    def one_cache(kind):
+        if kind == "cross":
+            return {"k": jnp.zeros((batch, cfg.num_kv_heads,
+                                    cfg.num_patches, cfg.head_dim), dt),
+                    "v": jnp.zeros((batch, cfg.num_kv_heads,
+                                    cfg.num_patches, cfg.head_dim), dt)}
+        if kind in ("attn", "self"):
+            if cfg.mla:
+                return {"c": jnp.zeros(
+                    (batch, max_len, cfg.kv_lora_rank + cfg.rope_head_dim), dt)}
+            return {"k": jnp.zeros((batch, cfg.num_kv_heads, max_len,
+                                    cfg.head_dim), dt),
+                    "v": jnp.zeros((batch, cfg.num_kv_heads, max_len,
+                                    cfg.head_dim), dt)}
+        if kind == "mamba":
+            return mamba.mamba_init_state(cfg, batch)
+        if kind == "rwkv":
+            return rwkv.rwkv_init_state(cfg, batch)
+        return None
+
+    blocks = {}
+    for s, kind in enumerate(kinds):
+        c = one_cache(kind)
+        if c is not None:
+            blocks[f"sub{s}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nper,) + a.shape).copy(), c)
+    caches = {"blocks": blocks}
+    if cfg.first_k_dense:
+        caches["first"] = [one_cache("attn" if not cfg.rwkv else "rwkv")
+                           for _ in range(cfg.first_k_dense)]
+    return caches
+
+
+# --------------------------------------------------------------------------
+# losses / steps (model-level; the train package adds optimizer + sharding)
+# --------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg: ModelConfig, vision_embeds=None,
+            act_sharding=None, ep_sharding=None, head_sharding=None,
+            latent_sharding=None, moe_mesh=None):
+    logits, aux, _ = apply(params, batch["tokens"], cfg,
+                           vision_embeds=vision_embeds,
+                           act_sharding=act_sharding,
+                           ep_sharding=ep_sharding,
+                           head_sharding=head_sharding,
+                           latent_sharding=latent_sharding,
+                           moe_mesh=moe_mesh)
+    loss = layers.softmax_xent(logits, batch["labels"],
+                               batch.get("loss_mask"))
+    return loss + aux, {"xent": loss, "aux": aux}

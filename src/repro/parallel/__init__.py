@@ -1,0 +1,8 @@
+from .sharding import (  # noqa: F401
+    DP_AXES,
+    batch_pspec,
+    cache_pspec,
+    named_sharding_tree,
+    param_pspec,
+    param_sharding_tree,
+)

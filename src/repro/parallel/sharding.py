@@ -1,0 +1,201 @@
+"""Sharding rules: logical parameter/activation layout -> PartitionSpec.
+
+Axes (launch/mesh.py): ``('data','model')`` single-pod 16x16,
+``('pod','data','model')`` multi-pod 2x16x16.  The data-parallel group is
+``('pod','data')`` when the pod axis exists — FSDP shards cross pods, so a
+parameter all-gather crosses the ICI/DCI boundary once per layer while the
+gradient reduce-scatter overlaps the backward walk.
+
+Policy (Megatron/MaxText-style):
+
+* TP ('model') on the head/ff/expert/vocab dim — column-parallel in,
+  row-parallel out, one all-reduce per block.
+* FSDP (DP axes) on the other large dim of every weight (ZeRO-3).
+* Dims that don't divide their axis fall back (try the other dim, then
+  replicate) — configs like 56-head coder or kv=4 Qwen stay valid on a
+  16-wide model axis.
+
+Every rule is expressed on the *base* (unstacked) shape; leading scan/stack
+dims (periods) are automatically skipped.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP_AXES = ("pod", "data")   # FSDP group (pod axis present only multi-pod)
+
+
+def _dp(mesh: Mesh):
+    axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        s = 1
+        for a in axis:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[axis]
+
+
+# rule table: last-path-key -> per-dim axis *preference* on the base shape.
+# 'M' = model (TP), 'D' = data/FSDP, None = replicated.
+_RULES: dict[str, tuple] = {
+    # embeddings / head
+    "table": ("M", "D"),                 # (V, d)
+    "lm_head": ("D", "M"),               # (d, V)
+    # attention
+    "wq": ("D", "M", None),              # (d, H, hd)
+    "wk": ("D", "M", None),
+    "wv": ("D", "M", None),
+    "wo": ("M", None, "D"),              # (H, hd, d)
+    # MLA
+    "w_dkv": ("D", None),                # (d, R+rr)
+    "w_dq": ("D", None),
+    "w_uq": ("D", "M", None),            # (qr, H, nope+rr)
+    "w_q": ("D", "M", None),
+    "w_uk": ("D", "M", None),            # (R, H, nope)
+    "w_uv": ("D", "M", None),            # (R, H, vd)
+    "w_o": ("M", None, "D"),             # (H, vd, d)
+    # dense FFN
+    "w_gate": ("D", "M"),                # (d, ff)
+    "w_up": ("D", "M"),
+    "w_down": ("M", "D"),                # (ff, d)
+    # MoE experts (E, d, ff)/(E, ff, d): expert-parallel on E, FSDP on d
+    "we_gate": ("M", "D", None),
+    "we_up": ("M", "D", None),
+    "we_down": ("M", None, "D"),
+    "router": ("D", None),               # (d, E)
+    # mamba
+    "w_in": ("D", "M"),                  # (d, 2di)
+    "conv": (None, "M"),                 # (kw, di)
+    "w_x_dbc": ("M", None),              # (di, r+2s)
+    "w_dt": (None, "M"),                 # (r, di)
+    "dt_bias": ("M",),
+    "A_log": ("M", None),                # (di, S)
+    "D": ("M",),
+    "w_out": ("M", "D"),                 # (di, d)
+    # rwkv
+    "w_r": ("D", "M"), "w_k": ("D", "M"), "w_v": ("D", "M"),
+    "w_g": ("D", "M"),
+    "decay_A": ("D", None), "decay_B": (None, "M"),
+    "u": ("M", None),                    # (h, hd)
+    "cm_k": ("D", "M"), "cm_v": ("M", "D"), "cm_r": ("D", "M"),
+}
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.SequenceKey):
+            continue
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def param_pspec(path, leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (divisibility-checked)."""
+    name = _leaf_name(path)
+    shape = leaf.shape
+    rule = _RULES.get(name)
+    if rule is None:
+        return P()  # norms, biases, mu, ... replicated
+    base = len(rule)
+    lead = len(shape) - base
+    if lead < 0:
+        return P()
+    dp = _dp(mesh)
+    axis_of = {"M": "model", "D": dp}
+
+    def flat(ax) -> set:
+        return set(ax) if isinstance(ax, tuple) else {ax}
+
+    spec: list = [None] * len(shape)
+    used: set = set()
+    for i, want in enumerate(rule):
+        if want is None:
+            continue
+        dim = lead + i
+        for ax in (axis_of[want], axis_of["D" if want == "M" else "M"]):
+            if ax is None or flat(ax) & used:
+                continue
+            if shape[dim] % _axis_size(mesh, ax) == 0 and \
+                    shape[dim] >= _axis_size(mesh, ax) and shape[dim] > 1:
+                spec[dim] = ax
+                used |= flat(ax)
+                break
+    return P(*spec)
+
+
+def param_sharding_tree(abstract_params, mesh: Mesh):
+    """NamedSharding pytree matching ``abstract_params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh)),
+        abstract_params)
+
+
+def batch_pspec(mesh: Mesh, *, seq_shard: bool = False) -> P:
+    """(B, S) token batches: batch over the DP group; optionally sequence
+    over 'model' (sequence parallelism for very long prefill)."""
+    dp = _dp(mesh)
+    return P(dp, "model" if seq_shard else None)
+
+
+def activation_pspec(mesh: Mesh) -> P:
+    dp = _dp(mesh)
+    return P(dp, None, None)
+
+
+def cache_pspec(path, leaf, mesh: Mesh, *, batch: int,
+                shard_seq_when_small_batch: bool = True) -> P:
+    """Decode caches.  Normal case: batch over DP, heads over model.
+    long-context batch=1: heads rarely divide — shard the *sequence* dim
+    over 'model' instead (each shard holds a KV stripe; the online-softmax
+    combine is a small cross-shard reduction)."""
+    name = _leaf_name(path)
+    shape = leaf.shape
+    dp = _dp(mesh)
+    dp_size = _axis_size(mesh, dp)
+    spec: list = [None] * len(shape)
+    if name in ("k", "v"):            # (periods?, B, Hkv, N, hd)
+        b_dim = len(shape) - 4
+        h_dim, n_dim = b_dim + 1, b_dim + 2
+        if batch % dp_size == 0 and batch > 1:
+            spec[b_dim] = dp
+        if shape[h_dim] % mesh.shape["model"] == 0:
+            spec[h_dim] = "model"
+        elif shard_seq_when_small_batch and \
+                shape[n_dim] % mesh.shape["model"] == 0:
+            spec[n_dim] = "model"
+    elif name == "c":                  # MLA latent (periods?, B, N, R+rr)
+        b_dim = len(shape) - 3
+        if batch % dp_size == 0 and batch > 1:
+            spec[b_dim] = dp
+        if shape[b_dim + 1] % mesh.shape["model"] == 0:
+            spec[b_dim + 1] = "model"
+    elif name in ("h", "S", "conv", "shift"):  # ssm/rwkv states
+        b_dim = len(shape) - (3 if name in ("h", "conv") else
+                              4 if name == "S" else 2)
+        if batch % dp_size == 0 and batch > 1:
+            spec[b_dim] = dp
+        # d_inner / heads over model where divisible
+        for dim in range(b_dim + 1, len(shape)):
+            if spec[dim] is None and shape[dim] % mesh.shape["model"] == 0 \
+                    and shape[dim] >= mesh.shape["model"]:
+                spec[dim] = "model"
+                break
+    return P(*spec)
+
+
+def named_sharding_tree(abstract_tree, mesh: Mesh, pspec_fn):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, pspec_fn(path, leaf, mesh)),
+        abstract_tree)

@@ -1,0 +1,2 @@
+from .hlo import HLOCosts, analyze_hlo  # noqa: F401
+from .report import RooflineTerms, roofline_terms  # noqa: F401

@@ -1,0 +1,230 @@
+"""SPMD-partitioned HLO cost extraction (dots, collectives, loop trips).
+
+``compiled.cost_analysis()`` counts every while-loop body exactly once, and
+all of this framework's depth (layer periods, grad-accum microbatches,
+attention KV chunks, SSM chunks) is expressed as ``lax.scan`` — so naive
+cost_analysis under-reports a 126-layer model ~126x.  This parser walks the
+partitioned module text instead:
+
+* every computation block is parsed with its op result shapes;
+* every ``while`` op's trip count is recovered from the loop-bound constant
+  in its condition computation;
+* dot FLOPs / dot HBM bytes / collective bytes are accumulated with the
+  *product of enclosing loop trip counts* as multiplier.
+
+All shapes in the partitioned module are already per-device, so the
+resulting numbers are per-chip — exactly what the roofline terms need.
+
+Byte conventions (ring model, per device):
+  all-reduce 2x result; all-gather 1x result; reduce-scatter 1x operand;
+  all-to-all 1x operand; collective-permute 1x result.
+Dot memory traffic = lhs + rhs + result bytes (streaming GEMM convention;
+ignores VMEM-resident reuse between fused ops — stated in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%([\w.\-]+).*?body=%([\w.\-]+)")
+_CALLEE_RE = re.compile(
+    r"(?:to_apply|calls|body|condition|branch_computations=\{)=?%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT_OPERANDS = re.compile(r"dot\(\s*%([\w.\-]+),\s*%([\w.\-]+)\)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+
+
+def _shape_bytes(type_str: str, dims_str: str) -> int:
+    if type_str not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims_str.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[type_str]
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return m.group(1), m.group(2)
+
+
+@dataclasses.dataclass
+class HLOCosts:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    collective_bytes_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    num_whiles: int = 0
+    notes: list = dataclasses.field(default_factory=list)
+
+    def summary(self) -> dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "dot_bytes": self.dot_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": dict(self.collective_counts),
+            "collective_bytes_by_kind": dict(self.collective_bytes_by_kind),
+            "num_whiles": self.num_whiles,
+        }
+
+
+def _comp_name(line: str):
+    """Computation-header line -> name, or None.
+
+    Headers look like ``%name (params...) -> result_type {`` (params may
+    contain nested parens for tuple types) or ``ENTRY %name ... {``.
+    """
+    s = line.strip()
+    if not s.endswith("{") or "->" not in s:
+        return None
+    if s.startswith("ENTRY"):
+        s = s[len("ENTRY"):].strip()
+    if not s.startswith("%"):
+        return None
+    name = re.match(r"%([\w.\-]+)", s)
+    return name.group(1) if name else None
+
+
+def _parse_computations(text: str) -> dict:
+    """name -> list of statement lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            nm = _comp_name(line)
+            if nm is not None:
+                cur = nm
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def analyze_hlo(text: str) -> HLOCosts:
+    comps = _parse_computations(text)
+    costs = HLOCosts()
+
+    # op name -> result shape (module-wide; HLO names are unique per module)
+    shapes: dict[str, tuple] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                sh = _first_shape(m.group(2))
+                if sh:
+                    shapes[m.group(1)] = sh
+        # computation parameters: "%p = f32[..] parameter(0)" handled above
+
+    # while trip counts: body comp -> trips
+    body_trips: dict[str, int] = {}
+    cond_of_body: dict[str, str] = {}
+    parent_of: dict[str, str] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                cond_of_body[body] = cond
+                parent_of[body] = name
+                parent_of[cond] = name
+                costs.num_whiles += 1
+            else:
+                for callee in _CALLEE_RE.findall(ln):
+                    if callee in comps and callee not in parent_of:
+                        parent_of[callee] = name
+
+    for body, cond in cond_of_body.items():
+        consts = [int(c) for ln in comps.get(cond, ())
+                  for c in _CONST_RE.findall(ln)]
+        body_trips[body] = max(consts) if consts else 1
+
+    def multiplier(comp: str) -> int:
+        mult = 1
+        seen = set()
+        cur = comp
+        while cur in parent_of and cur not in seen:
+            seen.add(cur)
+            if cur in body_trips:
+                mult *= body_trips[cur]
+            cur = parent_of[cur]
+        if cur in body_trips and cur not in seen:
+            mult *= body_trips[cur]
+        return mult
+
+    coll_kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+    for name, lines in comps.items():
+        mult = multiplier(name)
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            rhs = m.group(2)
+            res = _first_shape(rhs)
+            if res is None:
+                continue
+            res_bytes = _shape_bytes(*res)
+
+            if " dot(" in rhs or rhs.startswith("dot("):
+                dm = _DOT_OPERANDS.search(rhs)
+                cm = _LHS_CDIMS.search(rhs)
+                if dm and cm:
+                    lhs_shape = shapes.get(dm.group(1))
+                    rhs_shape = shapes.get(dm.group(2))
+                    k = 1
+                    if lhs_shape:
+                        dims = [int(d) for d in lhs_shape[1].split(",") if d]
+                        for ci in (int(c) for c in cm.group(1).split(",") if c):
+                            if ci < len(dims):
+                                k *= dims[ci]
+                    res_elems = 1
+                    for d in res[1].split(","):
+                        if d:
+                            res_elems *= int(d)
+                    costs.dot_flops += mult * 2.0 * res_elems * k
+                    lb = _shape_bytes(*lhs_shape) if lhs_shape else 0
+                    rb = _shape_bytes(*rhs_shape) if rhs_shape else 0
+                    costs.dot_bytes += mult * float(lb + rb + res_bytes)
+                continue
+
+            for kind in coll_kinds:
+                if f" {kind}(" in rhs or rhs.startswith(f"{kind}("):
+                    if kind == "all-reduce":
+                        moved = 2.0 * res_bytes
+                    elif kind in ("reduce-scatter", "all-to-all"):
+                        op_m = re.search(rf"{kind}\(\s*%([\w.\-]+)", rhs)
+                        src = shapes.get(op_m.group(1)) if op_m else None
+                        moved = float(_shape_bytes(*src)) if src else float(res_bytes)
+                    else:
+                        moved = float(res_bytes)
+                    costs.collective_bytes += mult * moved
+                    costs.collective_counts[kind] += mult
+                    costs.collective_bytes_by_kind[kind] += mult * moved
+                    break
+    return costs

@@ -1,0 +1,111 @@
+"""Roofline terms per (arch x shape x mesh) from the compiled dry-run.
+
+  compute    = dot_FLOPs_per_device / peak_FLOP/s
+  memory     = dot_HBM_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI link bw
+
+(per-device numbers come straight from the SPMD-partitioned HLO — see
+roofline/hlo.py).  MODEL_FLOPS uses the 6·N·D convention (N = active params
+for MoE) plus the attention quadratic term, giving the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs that exposes remat/padding/routing waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from ..core.target import TPUTarget, get_target
+from ..models.config import ModelConfig
+from ..models.registry import ShapeSpec
+from .hlo import HLOCosts
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    hlo_flops_per_device: float
+    model_flops_total: float
+    useful_ratio: float                  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    roofline_frac: float                 # useful time / bound time
+    memory_per_device_bytes: int
+    notes: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s*1e3:.1f} | {self.memory_s*1e3:.1f} | "
+                f"{self.collective_s*1e3:.1f} | {self.dominant} | "
+                f"{self.useful_ratio:.2f} | {self.roofline_frac:.2f} |")
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6·N_active·D + attention quadratic (paper FLOP convention)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n * tokens
+        attn = (12.0 * cfg.num_layers * cfg.num_q_heads * cfg.head_dim
+                * shape.seq_len ** 2 * shape.global_batch * 0.5)
+        if cfg.rwkv or cfg.hybrid_period:
+            frac = (1.0 / cfg.hybrid_period) if cfg.hybrid_period else 0.0
+            attn *= frac
+        return base + attn
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n * tokens
+        attn = (4.0 * cfg.num_layers * cfg.num_q_heads * cfg.head_dim
+                * shape.seq_len ** 2 * shape.global_batch * 0.5)
+        if cfg.rwkv or cfg.hybrid_period:
+            attn *= (1.0 / cfg.hybrid_period) if cfg.hybrid_period else 0.0
+        return base + attn
+    # decode: one token, attends to the whole cache
+    tokens = shape.global_batch
+    base = 2.0 * n * tokens
+    attn_layers = cfg.num_layers
+    if cfg.hybrid_period:
+        attn_layers = cfg.num_layers // cfg.hybrid_period
+    if cfg.rwkv:
+        attn_layers = 0
+    attn = (4.0 * attn_layers * cfg.num_q_heads * cfg.head_dim
+            * shape.seq_len * tokens)
+    return base + attn
+
+
+def roofline_terms(arch: str, cfg: ModelConfig, shape: ShapeSpec,
+                   mesh_name: str, chips: int, costs: HLOCosts,
+                   memory_per_device: int,
+                   target: TPUTarget | str = "v5e",
+                   notes: str = "") -> RooflineTerms:
+    t = get_target(target) if isinstance(target, str) else target
+    compute = costs.dot_flops / (t.peak_bf16_tflops * 1e12)
+    memory = costs.dot_bytes / (t.hbm_gbps * 1e9)
+    coll = costs.collective_bytes / (t.ici_gbps * 1e9)
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = costs.dot_flops * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    bound = max(compute, memory, coll)
+    useful_time = mf / (chips * t.peak_bf16_tflops * 1e12)
+    frac = useful_time / bound if bound > 0 else 0.0
+    return RooflineTerms(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        compute_s=compute, memory_s=memory, collective_s=coll,
+        dominant=dominant, hlo_flops_per_device=costs.dot_flops,
+        model_flops_total=mf, useful_ratio=useful, roofline_frac=frac,
+        memory_per_device_bytes=memory_per_device, notes=notes)
+
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| dominant | useful ratio | roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|---|")

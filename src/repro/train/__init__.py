@@ -1,0 +1,2 @@
+from .optimizer import adamw_init, adamw_update, cosine_schedule  # noqa: F401
+from .step import TrainState, make_train_step, train_state_init  # noqa: F401

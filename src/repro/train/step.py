@@ -1,0 +1,127 @@
+"""Train step: microbatched gradient accumulation + AdamW, jit/pjit-ready.
+
+The global batch is split into ``grad_accum`` microbatches scanned *inside*
+the step (the activation-memory lever at scale, DESIGN.md §3.1).  Gradients
+accumulate in f32.  NaN/inf grads are detected and reported in metrics so
+the supervisor loop (launch/train.py) can trigger restore-and-skip — the
+fault-tolerance path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step), None),
+    lambda aux, ch: TrainState(*ch))
+
+
+def train_state_init(key, cfg: ModelConfig, opt_cfg: AdamWConfig):
+    params = transformer.init_params(key, cfg)
+    return TrainState(params=params, opt_state=adamw_init(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    """ShapeDtypeStruct TrainState for dry-runs (no allocation)."""
+    params = transformer.abstract_params(cfg)
+    opt = jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg), params)
+    return TrainState(params=params, opt_state=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1, act_sharding=None,
+                    grad_sharding=None, ep_sharding=None,
+                    head_sharding=None, latent_sharding=None,
+                    moe_mesh=None) -> Callable:
+    """Returns ``step(state, batch) -> (state, metrics)``.
+
+    batch: {"tokens": (B, S), "labels": (B, S), ["vision_embeds": ...]}
+    with B divisible by ``grad_accum``.
+    """
+
+    def loss(params, micro):
+        vision = micro.get("vision_embeds")
+        total, parts = transformer.loss_fn(params, micro, cfg,
+                                           vision_embeds=vision,
+                                           act_sharding=act_sharding,
+                                           ep_sharding=ep_sharding,
+                                           head_sharding=head_sharding,
+                                           latent_sharding=latent_sharding,
+                                           moe_mesh=moe_mesh)
+        return total, parts
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def step(state: TrainState, batch: dict):
+        b = batch["tokens"].shape[0]
+        mb = b // grad_accum
+
+        def micro_slices(i):
+            return {k: jax.lax.dynamic_slice_in_dim(v, i * mb, mb, 0)
+                    for k, v in batch.items()}
+
+        def gconstrain(tree):
+            # keep the f32 accumulation carry sharded like the params —
+            # without this GSPMD replicates the carry and all-gathers /
+            # all-reduces FULL weight gradients once per period*microbatch
+            # (a 10x collective blow-up measured on llama3-405b, see
+            # EXPERIMENTS.md §Perf)
+            if grad_sharding is None:
+                return tree
+            return jax.tree.map(jax.lax.with_sharding_constraint,
+                                tree, grad_sharding)
+
+        def accum(carry, i):
+            gacc, lacc = carry
+            (l, parts), g = grad_fn(state.params, micro_slices(i))
+            g32 = jax.tree.map(lambda a, acc: acc + a.astype(jnp.float32),
+                               g, gacc)
+            return (gconstrain(g32), lacc + l), parts
+
+        zeros = gconstrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+        if grad_accum == 1:
+            (l, parts), grads = grad_fn(state.params, batch)
+            loss_val = l
+        else:
+            (grads, loss_sum), parts = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(grad_accum))
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss_val = loss_sum / grad_accum
+            parts = jax.tree.map(lambda x: x[-1], parts)
+
+        finite = jnp.all(jnp.asarray(
+            [jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)]))
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt_state, state.params, opt_cfg)
+        # fault tolerance: skip the update when grads are non-finite
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_params, state.params)
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               step=state.step + 1)
+        metrics = {"loss": loss_val, "finite": finite, **opt_metrics,
+                   **parts}
+        return new_state, metrics
+
+    return step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# smoke tests / benches see the single real CPU device; ONLY dryrun.py sets
+# the 512-device flag (per instructions).  A couple of distributed tests
+# need >1 device; they spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

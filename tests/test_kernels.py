@@ -1,0 +1,190 @@
+"""Per-kernel allclose sweeps: TL-Pallas kernel (interpret) vs the TL-jnp
+oracle vs the closed-form reference, across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pipeline import generate_attention_kernel
+from repro.core.spec import AttnSpec
+from repro.kernels import ops, ref
+from repro.kernels.linear_scan import rwkv6_chunked
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype=jnp.float32, scale=0.5):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# --------------------------------------------------------------------------
+# flash attention sweep
+# --------------------------------------------------------------------------
+FLASH_CASES = [
+    # (B, Hq, Hkv, M, N, D, causal, window, dtype)
+    (1, 4, 4, 128, 128, 64, True, None, jnp.float32),
+    (2, 8, 2, 128, 256, 64, True, None, jnp.float32),
+    (1, 4, 1, 96, 160, 128, True, None, jnp.float32),     # MQA, ragged
+    (2, 4, 2, 64, 64, 32, False, None, jnp.float32),
+    (1, 4, 4, 256, 256, 64, True, 64, jnp.float32),       # sliding window
+    (1, 8, 2, 128, 128, 128, True, None, jnp.bfloat16),
+    (1, 2, 2, 37, 53, 64, True, None, jnp.float32),       # odd sizes
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES,
+                         ids=lambda c: f"B{c[0]}H{c[1]}kv{c[2]}M{c[3]}N{c[4]}D{c[5]}c{int(c[6])}w{c[7]}{jnp.dtype(c[8]).name}")
+def test_flash_attention_vs_ref(case):
+    b, hq, hkv, m, n, d, causal, window, dtype = case
+    q = rand((b, hq, m, d), dtype)
+    k = rand((b, hkv, n, d), dtype)
+    v = rand((b, hkv, n, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    gold = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_three_way_agreement():
+    """pallas == oracle == reference for the same TL program."""
+    spec = AttnSpec.gqa(4, 2, 64, dtype="f32")
+    kern = generate_attention_kernel(spec, 128, 128)
+    q = rand((1, 4, 128, 64))
+    k = rand((1, 2, 128, 64))
+    v = rand((1, 2, 128, 64))
+    o_pallas = kern.pallas_fn(q, k, v)
+    o_oracle = kern.oracle_fn(q[0, 0], k[0, 0], v[0, 0])
+    o_ref = ref.attention(q, k, v, causal=True)[0, 0]
+    np.testing.assert_allclose(np.asarray(o_pallas[0, 0], np.float32),
+                               np.asarray(o_ref), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(o_oracle, np.float32),
+                               np.asarray(o_ref), atol=2e-5)
+
+
+def test_block_size_invariance():
+    """Different (BM, BN) choices give the same answer — parameters affect
+    performance only (the paper's reasoning-stage contract)."""
+    from repro.core.reason import BlockConfig
+    spec = AttnSpec.mha(2, 64, dtype="f32")
+    q, k, v = rand((1, 2, 256, 64)), rand((1, 2, 256, 64)), rand((1, 2, 256, 64))
+    outs = []
+    for bm, bn in [(32, 128), (64, 256), (128, 128), (256, 256)]:
+        kern = generate_attention_kernel(spec, 256, 256,
+                                         blocks=BlockConfig(bm, bn))
+        outs.append(np.asarray(kern.pallas_fn(q, k, v), np.float32))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-5)
+
+
+def test_causal_block_skip_matches_full():
+    spec = AttnSpec.mha(2, 64, dtype="f32")
+    q, k, v = rand((1, 2, 256, 64)), rand((1, 2, 256, 64)), rand((1, 2, 256, 64))
+    a = generate_attention_kernel(spec, 256, 256, causal_block_skip=True)
+    b_ = generate_attention_kernel(spec, 256, 256, causal_block_skip=False)
+    np.testing.assert_allclose(np.asarray(a.pallas_fn(q, k, v), np.float32),
+                               np.asarray(b_.pallas_fn(q, k, v), np.float32),
+                               atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# MLA
+# --------------------------------------------------------------------------
+MLA_CASES = [
+    (1, 4, 128, 128, 128, 32, jnp.float32),
+    (2, 8, 64, 192, 64, 16, jnp.float32),
+    (1, 16, 128, 128, 128, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", MLA_CASES,
+                         ids=lambda c: f"B{c[0]}H{c[1]}M{c[2]}N{c[3]}R{c[4]}Rr{c[5]}{jnp.dtype(c[6]).name}")
+def test_mla_vs_ref(case):
+    b, h, m, n, r, rr, dtype = case
+    ql = rand((b, h, m, r + rr), dtype, 0.3)
+    c = rand((b, n, r + rr), dtype, 0.3)
+    out = ops.mla_attention(ql, c, kv_lora_rank=r, rope_head_dim=rr)
+    gold = ref.mla_attention(ql, c, rope_dim=rr, scale=(128 + rr) ** -0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32),
+                               atol=TOL[dtype] * 2, rtol=TOL[dtype])
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def test_flash_decode_vs_ref():
+    b, hq, hkv, n, d = 2, 8, 2, 300, 64
+    q = rand((b, hq, 1, d))
+    kc, vc = rand((b, hkv, n, d)), rand((b, hkv, n, d))
+    for cache_len in (1, 8, 257, 300):
+        out = ops.flash_decode(q, kc, vc, cache_len=cache_len)
+        gold = ref.decode_attention(q, kc, vc, cache_len=cache_len)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(gold, np.float32), atol=2e-5,
+                                   err_msg=f"cache_len={cache_len}")
+
+
+def test_mla_decode_vs_ref():
+    b, h, n, r, rr = 2, 8, 160, 64, 16
+    ql = rand((b, h, 1, r + rr), scale=0.3)
+    c = rand((b, n, r + rr), scale=0.3)
+    out = ops.mla_decode(ql, c, cache_len=100, kv_lora_rank=r,
+                         rope_head_dim=rr)
+    gold = ref.mla_attention(ql, c, rope_dim=rr, scale=(128 + rr) ** -0.5,
+                             causal=False, kv_valid=100)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32), atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# linear scan (RWKV-6)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 2, 64, 16, 16), (2, 4, 128, 32, 32),
+                                   (1, 1, 256, 64, 64)])
+def test_rwkv6_chunked_vs_sequential(shape):
+    b, h, t, dk, dv = shape
+    r, k = rand((b, h, t, dk), scale=0.3), rand((b, h, t, dk), scale=0.3)
+    v = rand((b, h, t, dv), scale=0.3)
+    w = rand((b, h, t, dk), scale=0.5) - 0.5
+    u = rand((h, dk), scale=0.3)
+    out = rwkv6_chunked(r, k, v, w, u, chunk=min(32, t))
+    gold = ref.rwkv6_scan(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold), atol=5e-4, rtol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# property: the XLA compile path agrees with the reference on random shapes
+# --------------------------------------------------------------------------
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+
+@given(
+    b=st.integers(1, 2),
+    hkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    m=st.integers(1, 96),
+    n=st.integers(1, 160),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    chunk=st.sampled_from([16, 64, 128]),
+)
+@settings(max_examples=25, deadline=None)
+def test_xla_flash_property(b, hkv, g, m, n, d, causal, chunk):
+    from repro.models.attention import xla_flash
+    rng = np.random.default_rng(b * 1000 + m * 7 + n)
+    hq = hkv * g
+    q = jnp.asarray(rng.standard_normal((b, hq, m, d)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, n, d)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, n, d)) * 0.5, jnp.float32)
+    out = xla_flash(q, k, v, causal=causal, scale=d ** -0.5, chunk=chunk)
+    gold = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32), atol=3e-5,
+                               rtol=1e-4)

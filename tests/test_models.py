@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests (reduced configs) + model-level behaviour:
+forward shapes, finiteness, cached-prefill/decode consistency, gradients.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.models import transformer as T
+
+ARCHS = registry.list_archs()
+
+
+def _setup(arch, B=2, S=16):
+    cfg = registry.get_reduced(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    vis = None
+    if cfg.cross_attn_period:
+        vis = jax.random.normal(jax.random.PRNGKey(2),
+                                (B, cfg.num_patches, cfg.vision_d))
+    return cfg, params, toks, vis
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, params, toks, vis = _setup(arch)
+    logits, aux, _ = T.apply(params, toks, cfg, vision_embeds=vis)
+    assert logits.shape == (*toks.shape, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_matches_uncached_forward(arch):
+    cfg, params, toks, vis = _setup(arch)
+    logits, _, _ = T.apply(params, toks, cfg, vision_embeds=vis)
+    caches = T.init_caches(cfg, toks.shape[0], 64)
+    logits_c, _, _ = T.apply(params, toks, cfg, vision_embeds=vis,
+                             caches=caches, cache_len=0)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(logits_c, np.float32),
+                               atol=3e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_parallel_forward(arch):
+    """Token-by-token decode reproduces the teacher-forced logits."""
+    cfg, params, toks, vis = _setup(arch, B=1, S=8)
+    full_logits, _, _ = T.apply(params, toks, cfg, vision_embeds=vis)
+    caches = T.init_caches(cfg, 1, 32)
+    got = []
+    for t in range(toks.shape[1]):
+        lg, _, caches = T.apply(params, toks[:, t:t + 1], cfg,
+                                vision_embeds=vis, caches=caches,
+                                cache_len=t)
+        got.append(lg[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(full_logits, np.float32),
+                               np.asarray(got, np.float32),
+                               atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "deepseek-v2-lite-16b",
+                                  "jamba-1.5-large-398b", "rwkv6-1.6b"])
+def test_gradients_flow_everywhere(arch):
+    """Every parameter receives a non-zero gradient somewhere."""
+    cfg, params, toks, vis = _setup(arch, B=2, S=16)
+
+    def loss(p):
+        total, _ = T.loss_fn(p, {"tokens": toks, "labels": toks}, cfg,
+                             vision_embeds=vis)
+        return total
+
+    g = jax.grad(loss)(params)
+    flat = jax.tree_util.tree_flatten_with_path(g)[0]
+    dead = [jax.tree_util.keystr(path) for path, leaf in flat
+            if not bool(jnp.any(jnp.abs(leaf) > 0))]
+    # router/aux paths can legitimately be zero on tiny batches; nothing else
+    assert all("router" in d or "u" in d or "decay" in d for d in dead), dead
+
+
+def test_tl_pallas_attention_impl_matches_xla_flash():
+    """The TL-generated Pallas kernel slots into the model layer and agrees
+    with the XLA compile path end-to-end."""
+    cfg = registry.get_reduced("deepseek-7b")
+    cfg_p = dataclasses.replace(cfg, attn_impl="tl_pallas", head_dim=16)
+    cfg_x = dataclasses.replace(cfg, attn_impl="xla_flash", head_dim=16)
+    params = T.init_params(jax.random.PRNGKey(0), cfg_p)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    lp, _, _ = T.apply(params, toks, cfg_p)
+    lx, _, _ = T.apply(params, toks, cfg_x)
+    np.testing.assert_allclose(np.asarray(lp, np.float32),
+                               np.asarray(lx, np.float32), atol=2e-4,
+                               rtol=1e-4)
+
+
+def test_param_count_sanity():
+    """Full configs land within ~25% of their published total params."""
+    expected = {
+        "deepseek-v2-lite-16b": 15.7e9,
+        "qwen3-moe-235b-a22b": 235e9,
+        "deepseek-7b": 7e9,
+        "llama3-405b": 405e9,
+        "mistral-nemo-12b": 12e9,
+        "deepseek-coder-33b": 33e9,
+        "musicgen-large": 3.3e9,   # MusicGen sizes: 300M/1.5B/3.3B
+        "llama-3.2-vision-90b": 90e9,
+        "jamba-1.5-large-398b": 398e9,
+        "rwkv6-1.6b": 1.6e9,
+    }
+    for arch, want in expected.items():
+        got = registry.get_config(arch).param_count()
+        assert 0.6 * want < got < 1.45 * want, \
+            f"{arch}: param_count {got/1e9:.1f}B vs published {want/1e9:.1f}B"
+
+
+def test_moe_capacity_drops_are_bounded():
+    from repro.models import moe as MOE
+    cfg = registry.get_reduced("qwen3-moe-235b-a22b")
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model))
+    out, aux = MOE.moe_apply(p, x, cfg=cfg)
+    assert out.shape == x.shape
+    assert float(aux) > 0                      # balance loss active
+    assert bool(jnp.isfinite(out).all())
+    # at capacity_factor -> inf nothing is dropped: doubling capacity
+    # changes nothing when the first capacity already held every token
+    import dataclasses as dc
+    big = dc.replace(cfg, capacity_factor=100.0)
+    out_big, _ = MOE.moe_apply(p, x, cfg=big)
+    bigger = dc.replace(cfg, capacity_factor=200.0)
+    out_bigger, _ = MOE.moe_apply(p, x, cfg=bigger)
+    np.testing.assert_allclose(np.asarray(out_big), np.asarray(out_bigger),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_nested_remat_scan_matches_flat():
+    """sqrt-depth remat (remat_scan_groups) is numerically the flat scan."""
+    cfg0 = registry.get_reduced("deepseek-7b")
+    cfg1 = dataclasses.replace(cfg0, remat_scan_groups=2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg0.vocab_size)
+    l0, _, _ = T.apply(params, toks, cfg0)
+    l1, _, _ = T.apply(params, toks, cfg1)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-6)
+    g0 = jax.grad(lambda p: T.loss_fn(
+        p, {"tokens": toks, "labels": toks}, cfg0)[0])(params)
+    g1 = jax.grad(lambda p: T.loss_fn(
+        p, {"tokens": toks, "labels": toks}, cfg1)[0])(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

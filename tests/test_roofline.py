@@ -1,0 +1,75 @@
+"""Roofline HLO analysis: the parser's dot-FLOP counting (with while-trip
+multipliers) is validated against analytically known workloads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analyze_hlo
+from repro.roofline.report import model_flops
+from repro.models import registry
+
+
+def _costs_of(fn, *args):
+    comp = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo(comp.as_text())
+
+
+def test_single_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    c = _costs_of(lambda x, y: x @ y, a, b)
+    assert c.dot_flops == 2 * 128 * 256 * 512
+    assert c.dot_bytes == 4 * (128 * 256 + 256 * 512 + 128 * 512)
+
+
+def test_scan_multiplies_by_trip_count():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=13)
+        return out
+
+    c = _costs_of(f, x, w)
+    assert c.dot_flops == 13 * 2 * 64 * 64 * 64
+    assert c.num_whiles == 1
+
+
+def test_nested_scans_multiply():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=5)
+            return ci, None
+        out, _ = jax.lax.scan(outer, x, None, length=3)
+        return out
+
+    c = _costs_of(f, x, w)
+    assert c.dot_flops == 3 * 5 * 2 * 32 ** 3
+
+
+def test_batched_dot_flops():
+    a = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    c = _costs_of(lambda x, y: jnp.einsum("bij,bjk->bik", x, y), a, b)
+    assert c.dot_flops == 4 * 2 * 64 * 32 * 16
+
+
+def test_model_flops_conventions():
+    cfg = registry.get_config("deepseek-7b")
+    sh = registry.SHAPES["train_4k"]
+    mf = model_flops(cfg, sh)
+    # 6*N*D dominates; must be within 2x of the bare product
+    assert mf > 6 * cfg.param_count() * sh.global_batch * sh.seq_len * 0.9
+    # MoE uses active params
+    q = registry.get_config("qwen3-moe-235b-a22b")
+    assert model_flops(q, sh) < 6 * q.param_count() * sh.global_batch * \
+        sh.seq_len * 0.5

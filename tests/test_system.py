@@ -1,0 +1,61 @@
+"""End-to-end behaviour: train -> checkpoint -> crash-restore -> serve,
+exercising the public entry points the way a deployment would."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.train import run as train_run
+from repro.ckpt import checkpoint as C
+
+
+def test_train_loss_decreases_and_checkpoints(tmp_path):
+    losses = train_run("deepseek-7b", reduced=True, steps=12, batch=8,
+                       seq=64, ckpt_dir=str(tmp_path), ckpt_every=5,
+                       lr=3e-3)
+    assert losses[-1] < losses[0], f"no learning: {losses[0]} -> {losses[-1]}"
+    assert C.latest_step(str(tmp_path)) == 12
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    train_run("rwkv6-1.6b", reduced=True, steps=6, batch=4, seq=32,
+              ckpt_dir=str(tmp_path), ckpt_every=3, lr=1e-3)
+    assert C.latest_step(str(tmp_path)) == 6
+    # simulated preemption: a new process picks up at step 6 and continues
+    losses2 = train_run("rwkv6-1.6b", reduced=True, steps=9, batch=4,
+                        seq=32, ckpt_dir=str(tmp_path), ckpt_every=3,
+                        lr=1e-3)
+    assert C.latest_step(str(tmp_path)) == 9
+    assert len(losses2) == 3  # only steps 6..8 were run
+
+
+def test_grad_accum_equivalence():
+    """grad_accum=2 over the same global batch matches accum=1 closely."""
+    l1 = train_run("musicgen-large", reduced=True, steps=3, batch=8,
+                   seq=32, grad_accum=1, lr=1e-3)
+    l2 = train_run("musicgen-large", reduced=True, steps=3, batch=8,
+                   seq=32, grad_accum=2, lr=1e-3)
+    np.testing.assert_allclose(l1, l2, rtol=2e-3)
+
+
+def test_serve_with_tl_pallas_attention():
+    """The TL-generated Pallas kernels drive inference end-to-end (the
+    TL pipeline emits forward kernels; training uses the same math via the
+    differentiable xla_flash path)."""
+    import dataclasses
+    from repro.models import registry, transformer as T
+    from repro.serve import ServeEngine
+
+    cfg = dataclasses.replace(registry.get_reduced("musicgen-large"),
+                              attn_impl="tl_pallas")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    res = engine.generate([[1, 2, 3, 4], [5, 6, 7, 8]], max_new_tokens=4)
+    assert res.tokens.shape == (2, 4)
+    # agrees with the xla_flash engine
+    cfg2 = dataclasses.replace(cfg, attn_impl="xla_flash")
+    engine2 = ServeEngine(cfg2, params, max_batch=2, max_len=64)
+    res2 = engine2.generate([[1, 2, 3, 4], [5, 6, 7, 8]], max_new_tokens=4)
+    np.testing.assert_array_equal(res.tokens, res2.tokens)

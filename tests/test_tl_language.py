@@ -1,0 +1,105 @@
+"""TL language tests: parsing, printing, round-trip property."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.tl.ast import (
+    Allocate, ComputeGEMM, ComputeOp, Copy, ForLoop, MemSpace, Reshape,
+    TensorRef, TLProgram,
+)
+from repro.core.tl.parser import TLSyntaxError, parse
+from repro.core.tl.printer import to_text
+
+
+def test_parse_paper_listing_fragments():
+    # statements taken verbatim from the paper's listings/prompts
+    prog = parse("""
+Allocate A in global (M, K) with offset batch_offset
+Copy A from global to shared
+Copy Q (BM, HeadDim) in coordinate [L = block_idx] from global to shared memory
+Compute GEMM Q_shared, K_shared.T and get S
+Compute Softmax S
+Reshape rS from mma_C to mma_A
+Compute GEMM S, V_shared and accumulate O_register
+for i = 0:N
+    Copy K (BN, HeadDim) in coordinate [L = i+1] from global to shared
+end
+""")
+    kinds = [type(s).__name__ for s in prog.body]
+    assert kinds == ["Allocate", "Copy", "Copy", "ComputeGEMM", "ComputeOp",
+                     "Reshape", "ComputeGEMM", "ForLoop"]
+    gemm = prog.body[3]
+    assert gemm.a.name == "Q_shared" and not gemm.a.transposed
+    assert gemm.b.name == "K_shared" and gemm.b.transposed
+    assert prog.body[6].accumulate
+    loop = prog.body[7]
+    assert loop.var == "i" and loop.body[0].coords == {"L": "i+1"}
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(TLSyntaxError):
+        parse("Frobnicate Q into the warp scheduler")
+
+
+def test_unbalanced_blocks_rejected():
+    with pytest.raises(TLSyntaxError):
+        parse("for i = 0:4\nCompute Softmax S")
+    with pytest.raises(TLSyntaxError):
+        parse("end")
+
+
+_names = st.sampled_from(["Q", "K", "V", "S", "P", "acc", "m", "l", "O"])
+_dims = st.sampled_from(["BM", "BN", "HeadDim", "M", "N", 128, 64])
+_spaces = st.sampled_from(list(MemSpace))
+
+
+@st.composite
+def _statements(draw, depth=0):
+    kind = draw(st.integers(0, 5 if depth < 2 else 4))
+    if kind == 0:
+        return Allocate(draw(_names), draw(_spaces),
+                        tuple(draw(st.lists(_dims, min_size=1, max_size=3))),
+                        dtype=draw(st.sampled_from(["bf16", "f32"])),
+                        offset=draw(st.sampled_from([None, "bh", "b"])))
+    if kind == 1:
+        src, dst = draw(_spaces), draw(_spaces)
+        shape = tuple(draw(st.lists(_dims, min_size=2, max_size=2)))
+        coords = draw(st.sampled_from([None, {"L": "i"}, {"L": "q"}]))
+        return Copy(draw(_names), src, dst, shape, coords)
+    if kind == 2:
+        return ComputeGEMM(
+            TensorRef(draw(_names), draw(st.booleans())),
+            TensorRef(draw(_names), draw(st.booleans())),
+            draw(_names), draw(st.booleans()))
+    if kind == 3:
+        return ComputeOp(
+            draw(st.sampled_from(["softmax", "scale", "divide", "cast",
+                                  "online_softmax"])),
+            tuple(draw(st.lists(_names, min_size=1, max_size=3))),
+            out=draw(st.one_of(st.none(), _names)))
+    if kind == 4:
+        return Reshape(draw(_names), "mma_C", "mma_A")
+    body = draw(st.lists(_statements(depth=depth + 1), min_size=1,
+                         max_size=3))
+    return ForLoop("i", 0, draw(st.sampled_from(["Tkv", 4])), body)
+
+
+@given(st.lists(_statements(), min_size=1, max_size=8))
+@settings(max_examples=80, deadline=None)
+def test_print_parse_roundtrip(stmts):
+    prog = TLProgram("prop", stmts)
+    text = to_text(prog)
+    re_parsed = parse(text, name="prop")
+    assert to_text(re_parsed) == text  # canonical fixed point
+
+
+def test_roundtrip_preserves_semantics_fields():
+    prog = TLProgram("x", [
+        Copy("K", MemSpace.GLOBAL, MemSpace.SHARED, ("BN", "HeadDim"),
+             {"L": "i"}),
+        ComputeGEMM(TensorRef("Q"), TensorRef("K", True), "S"),
+    ])
+    rt = parse(to_text(prog))
+    assert rt.body[0].coords == {"L": "i"}
+    assert rt.body[1].b.transposed

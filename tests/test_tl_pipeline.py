@@ -1,0 +1,120 @@
+"""The paper's workflow: sketch -> reason -> validate (+ Appendix-B
+ablation) and the autotuner's VMEM invariant."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import autotune
+from repro.core.llm import DeterministicBackend, OneStageBackend
+from repro.core.reason import BlockConfig, reason_parameters, _vmem_bytes
+from repro.core.sketch import generate_sketch, generate_sketch_text
+from repro.core.spec import AttnSpec
+from repro.core.target import get_target
+from repro.core.tl.parser import parse
+from repro.core.tl.validator import TLValidationError, check, validate
+
+SPECS = [
+    AttnSpec.mha(16, 128),
+    AttnSpec.gqa(32, 8, 128),
+    AttnSpec.mqa(32, 64),
+    AttnSpec.mla(16),
+    AttnSpec.gqa(32, 8, 128, causal=False),
+    AttnSpec.mha(16, 64, window=512),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: f"{s.variant}-{s.head_dim}-{s.causal}")
+def test_sketch_reason_validate(spec):
+    sk = generate_sketch(spec)
+    # sketches themselves are clean (non-strict mode)
+    assert not [d for d in validate(sk, strict_alloc=False) if d.is_error]
+    prog = reason_parameters(sk, spec, q_len=1024, kv_len=2048)
+    check(prog)  # no errors
+    # the critical fusion statement is present
+    from repro.core.tl.ast import Reshape
+    assert prog.find(Reshape), "reasoning must insert the Reshape"
+
+
+def test_reshape_omission_caught():
+    """Paper Appendix B, Listing 1."""
+    spec = AttnSpec.mha(16, 128)
+    prog = reason_parameters(generate_sketch(spec), spec, q_len=512,
+                             kv_len=512, omit_reshape=True)
+    with pytest.raises(TLValidationError) as ei:
+        check(prog)
+    assert any(d.code == "E001" for d in ei.value.diagnostics)
+
+
+def test_gemm_layout_error_caught():
+    """Paper Appendix B, Listing 2."""
+    spec = AttnSpec.mha(16, 128)
+    prog = reason_parameters(generate_sketch(spec), spec, q_len=512,
+                             kv_len=512, gemm_layout_bug=True)
+    with pytest.raises(TLValidationError) as ei:
+        check(prog)
+    assert any(d.code == "E002" for d in ei.value.diagnostics)
+
+
+def test_one_stage_backend_reproduces_failures():
+    for failure, code in [("reshape_omission", "E001"),
+                          ("gemm_layout_error", "E002")]:
+        backend = OneStageBackend(failure)
+        txt = backend.generate_tl_code(AttnSpec.mha(8, 64), 256, 256,
+                                       get_target("v5e"))
+        prog = parse(txt)
+        prog.meta["stage"] = "code"
+        prog.outputs = ("O",)
+        # re-derive params the pipeline way
+        from repro.core.reason import reason_parameters as rp
+        from repro.core.sketch import generate_sketch as gs
+        spec = AttnSpec.mha(8, 64)
+        prog.params = rp(gs(spec), spec, q_len=256, kv_len=256).params
+        assert any(d.code == code for d in validate(prog))
+
+
+def test_vmem_overflow_caught():
+    spec = AttnSpec.mha(16, 128)
+    prog = reason_parameters(generate_sketch(spec), spec, q_len=8192,
+                             kv_len=8192, blocks=BlockConfig(2048, 4096))
+    diags = validate(prog)
+    assert any(d.code == "E004" for d in diags)
+
+
+def test_backend_text_roundtrip():
+    backend = DeterministicBackend()
+    spec = AttnSpec.gqa(16, 4, 128)
+    sk_text = backend.generate_sketch(spec)
+    assert "Online_softmax" in sk_text and "Reshape" not in sk_text
+    code_text = backend.reason_parameters(sk_text, spec, 1024, 1024,
+                                          get_target("v5e"), None)
+    assert "Reshape" in code_text and "Allocate" in code_text
+
+
+@given(
+    q_heads=st.sampled_from([8, 16, 32, 64, 128]),
+    kv_div=st.sampled_from([1, 2, 4, 8]),
+    head_dim=st.sampled_from([64, 128]),
+    q_len=st.integers(16, 40000),
+    kv_len=st.integers(128, 40000),
+    causal=st.booleans(),
+)
+@settings(max_examples=60, deadline=None)
+def test_autotuner_always_fits_vmem(q_heads, kv_div, head_dim, q_len,
+                                    kv_len, causal):
+    """Property: tuned blocks always respect the VMEM budget and tile the
+    MXU-aligned sizes."""
+    spec = AttnSpec.gqa(q_heads, max(1, q_heads // kv_div), head_dim,
+                        causal=causal)
+    t = get_target("v5e")
+    res = autotune.tune(spec, q_len, kv_len, t)
+    assert _vmem_bytes(spec, res.blocks.bm, res.blocks.bn) <= t.vmem_budget
+    assert res.blocks.bm % 8 == 0 and res.blocks.bn % 128 == 0
+    assert res.est_time_s > 0
+
+
+def test_autotuner_mla_prefers_smaller_bm():
+    """MLA's 576-wide qk tile must squeeze BM to fit VMEM."""
+    mla = autotune.tune(AttnSpec.mla(128), 4096, 4096, "v5e")
+    mha = autotune.tune(AttnSpec.mha(128, 128), 4096, 4096, "v5e")
+    assert mla.blocks.bm <= mha.blocks.bm
