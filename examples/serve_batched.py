@@ -1,5 +1,15 @@
 """Batched serving example: prefill + KV-cache decode through the
-TL-generated attention kernels.
+TL-generated runtime-length attention kernels.
+
+Demonstrates the bucketed serving contract:
+
+  * prompt lengths in one batch may *differ* (right-padded prefill,
+    per-request last-position gather, per-request cache-length masking);
+  * decode compiles once per power-of-two length bucket — the example
+    prints the compile counters so you can see generation length not
+    showing up in them;
+  * the ``submit``/``step`` continuous-batching API admits and retires
+    requests between decode steps.
 
     PYTHONPATH=src python examples/serve_batched.py --arch deepseek-v2-lite-16b
 """
@@ -37,17 +47,39 @@ def main():
     engine = ServeEngine(cfg, params, max_batch=args.batch, max_len=256,
                          vision_embeds=vision)
 
+    # heterogeneous prompt lengths (recurrent archs need them homogeneous
+    # in batched generate; the step API below handles mixed lengths there)
     rng = np.random.default_rng(0)
-    prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
-                                          args.prompt_len)))
-               for _ in range(args.batch)]
+    lens = [max(1, args.prompt_len - 4 * i) for i in range(args.batch)]
+    if engine.recurrent or vision is not None:
+        lens = [args.prompt_len] * args.batch
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in lens]
     t0 = time.time()
     res = engine.generate(prompts, max_new_tokens=args.new_tokens)
     dt = time.time() - t0
     print(f"[serve] arch={args.arch} attn={args.attn_impl} "
-          f"{args.batch} seqs x {args.new_tokens} tokens in {dt:.2f}s")
+          f"{args.batch} seqs (lens {lens}) x {args.new_tokens} tokens "
+          f"in {dt:.2f}s")
+    print(f"[serve] compiles: prefill={engine.prefill_compiles} "
+          f"decode={engine.decode_compiles} "
+          f"(buckets, not steps — {args.new_tokens} tokens decoded)")
     for i, row in enumerate(res.tokens):
-        print(f"  seq{i}: {row.tolist()}")
+        print(f"  seq{i} (prompt {res.prompt_len[i]}): {row.tolist()}")
+
+    # continuous batching: requests enter and leave between decode steps
+    if vision is None:
+        engine2 = ServeEngine(cfg, params, max_batch=2, max_len=256)
+        for n, new in ((8, 6), (14, 3), (5, 4)):   # 3 requests, 2 slots
+            engine2.submit(list(map(int, rng.integers(0, cfg.vocab_size, n))),
+                           max_new_tokens=new)
+        t0 = time.time()
+        done = engine2.run_until_drained()
+        print(f"[serve] step API drained {len(done)} requests through 2 "
+              f"slots in {time.time() - t0:.2f}s; "
+              f"decode compiles={engine2.decode_compiles}")
+        for r in sorted(done, key=lambda r: r.uid):
+            print(f"  req{r.uid} (prompt {len(r.prompt)}): {r.tokens}")
 
 
 if __name__ == "__main__":

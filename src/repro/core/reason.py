@@ -116,6 +116,13 @@ def reason_parameters(
     dq_sym = "Dq" if mla else "HeadDim"   # score-GEMM contraction width
     dv_sym = "R" if mla else "HeadDim"    # value width
 
+    # Decode programs are runtime-length: ``N`` binds the *bucket capacity*
+    # (the compiled KV extent) and the true cache length enters the kernel
+    # as a scalar operand at call time.  One compiled kernel then serves
+    # every cache length within the bucket — the FlashDecoding-style
+    # serving contract — instead of one kernel per decode step.
+    runtime_kv = spec.mode == "decode"
+
     params: dict = {
         "M": q_len,
         "N": kv_len,
@@ -126,6 +133,10 @@ def reason_parameters(
         "QOFF": kv_len - q_len,  # bottom-right causal alignment (FA-2)
         "sm_scale": spec.scale(),
     }
+    if runtime_kv:
+        # marker visible to both translation backends (and to the TL text
+        # round-trip, which re-derives params through this function)
+        params["KV_RUNTIME"] = 1
     if mla:
         params["R"] = spec.kv_lora_rank
         params["Rr"] = spec.rope_head_dim
@@ -218,6 +229,6 @@ def reason_parameters(
                      if a.space is MemSpace.GLOBAL and a.name != "O"),
         outputs=("O",),
         meta={**sketch.meta, "stage": "code", "blocks": blocks,
-              "target": target.name},
+              "target": target.name, "runtime_kv_len": runtime_kv},
     )
     return prog

@@ -45,12 +45,19 @@ def _pad_to(x, rows):
 
 
 def translate_jnp(prog: TLProgram):
-    """Return ``fn(*global_inputs) -> output`` implementing ``prog``."""
+    """Return ``fn(*global_inputs) -> output`` implementing ``prog``.
+
+    Runtime-length programs (``meta['runtime_kv_len']`` — decode mode) take
+    a leading ``kv_len`` argument, mirroring the Pallas backend's scalar
+    operand: ``fn(kv_len, *global_inputs)``.  ``params['N']`` is only the
+    bucket capacity; columns at or past ``kv_len`` are masked.
+    """
 
     p = dict(prog.params)
     bm, bn = int(p["BM"]), int(p["BN"])
     m_real, n_real = int(p["M"]), int(p["N"])
     tkv = int(p["Tkv"])
+    runtime_kv = bool(prog.meta.get("runtime_kv_len") or p.get("KV_RUNTIME"))
     n_pad = tkv * bn
     tq = -(-m_real // bm)
     m_pad = tq * bm
@@ -60,8 +67,12 @@ def translate_jnp(prog: TLProgram):
                  "f16": jnp.float16,
                  "fp8": jnp.bfloat16}[allocs[out_name].dtype]
 
-    def run_block(env: dict, q_idx: int) -> jnp.ndarray:
-        """Execute the TL body for one q-tile coordinate."""
+    def run_block(env: dict, q_idx: int, kv_limit=None) -> jnp.ndarray:
+        """Execute the TL body for one q-tile coordinate.
+
+        ``kv_limit``: the runtime cache length for runtime-length programs
+        (None for compile-time-length programs).
+        """
 
         state: dict = {}
         # register allocations -> initial values
@@ -149,7 +160,10 @@ def translate_jnp(prog: TLProgram):
             elif op == "online_softmax":
                 s_nm, m_nm, l_nm, acc_nm = [base_name(a) for a in s.args]
                 scores = state[s_nm]
-                if n_pad != n_real:  # padded KV columns
+                if kv_limit is not None:   # runtime cache length
+                    scores = semantics.mask_bounds(
+                        scores, k_positions(i), kv_limit)
+                elif n_pad != n_real:  # padded KV columns
                     scores = semantics.mask_bounds(
                         scores, k_positions(i), n_real)
                 pmat, state[m_nm], state[l_nm], state[acc_nm] = \
@@ -178,16 +192,25 @@ def translate_jnp(prog: TLProgram):
     input_names = tuple(prog.inputs)
 
     def fn(*arrays):
+        kv_limit = None
+        if runtime_kv:
+            kv_len, *arrays = arrays
+            try:
+                kv_limit = int(kv_len)
+            except TypeError:  # traced scalar: fine, only used in jnp.where
+                kv_limit = kv_len
         if len(arrays) != len(input_names):
-            raise ValueError(f"expected inputs {input_names}")
+            raise ValueError(f"expected inputs {input_names}"
+                             + (" with a leading kv_len" if runtime_kv else ""))
         env = {}
         for nm, arr in zip(input_names, arrays):
             rows = m_pad if allocs[nm].shape[0] == "M" else n_pad
             env[nm] = _pad_to(arr, rows)
-        blocks = [run_block(env, qi) for qi in range(tq)]
+        blocks = [run_block(env, qi, kv_limit) for qi in range(tq)]
         out = jnp.concatenate(blocks, axis=0)[:m_real]
         return out
 
     fn.input_names = input_names
     fn.program = prog
+    fn.runtime_kv_len = runtime_kv
     return fn

@@ -109,12 +109,22 @@ def translate_pallas(
     ``M`` must be a multiple of BM and ``Npad`` a multiple of BN; the real
     KV length is ``prog.params['N']`` and padded columns are masked inside
     the kernel.  (The ``ops.py`` wrappers do the padding.)
+
+    Runtime-length programs (``meta['runtime_kv_len']`` — decode mode) take
+    a *leading* ``kv_len`` operand instead: ``fn(kv_len, q, *kv)``.
+    ``prog.params['N']`` is then only the compiled bucket capacity;
+    ``kv_len`` — a python int, a scalar, or a per-batch-row ``(B,)``
+    vector — is staged into SMEM (the TPU scalar-prefetch tier) and the
+    kernel masks score columns and skips dead KV blocks against it at run
+    time.  One compiled kernel serves every cache length ≤ capacity.
     """
 
     p = dict(prog.params)
     bm, bn = int(p["BM"]), int(p["BN"])
     n_real = int(p["N"])
     tkv = int(p["Tkv"])
+    runtime_kv = bool(prog.meta.get("runtime_kv_len")
+                      or p.get("KV_RUNTIME"))
     allocs = prog.allocations()
     structure = _split(prog)
     out_name = prog.outputs[0]
@@ -130,11 +140,17 @@ def translate_pallas(
 
     # ---- the generated kernel body -----------------------------------------
     def kernel(*refs):
+        kv_ref = None
+        if runtime_kv:
+            kv_ref, *refs = refs
         in_refs = refs[: len(prog.inputs)]
         o_ref = refs[len(prog.inputs)]
         acc_ref, m_ref, l_ref = refs[len(prog.inputs) + 1:]
         qi = pl.program_id(1)
         ki = pl.program_id(2)
+        # this grid step's cache length: the (1, 1) SMEM tile the BlockSpec
+        # indexed to this batch row (Copy g->SMEM of the scalar operand)
+        kv_len = kv_ref[0, 0] if runtime_kv else None
 
         @pl.when(ki == 0)
         def _init():
@@ -207,7 +223,11 @@ def translate_pallas(
                     env[nm], q_pos(), k_pos(), int(p["W"]), q_off)
             elif op == "online_softmax":
                 scores = env[base_name(s.args[0])]
-                if tkv * bn != n_real:
+                if runtime_kv:
+                    # runtime bounds mask: the true cache length (≤ the
+                    # compiled capacity, which the padding already honours)
+                    scores = semantics.mask_bounds(scores, k_pos(), kv_len)
+                elif tkv * bn != n_real:
                     scores = semantics.mask_bounds(scores, k_pos(), n_real)
                 pmat, m_new, l_new, acc_new = semantics.online_softmax(
                     scores, m_ref[...], l_ref[...], acc_ref[...])
@@ -241,6 +261,12 @@ def translate_pallas(
         if window is not None and causal_block_skip:
             lo = (ki + 1) * bn - 1 > qi * bm + q_off - int(window)
             live = lo if live is None else (live & lo)
+        if runtime_kv:
+            # KV blocks entirely past the runtime length contribute nothing:
+            # skip them so a short cache in a large bucket pays for the
+            # blocks it uses, not the bucket capacity
+            rt = ki * bn < kv_len
+            live = rt if live is None else (live & rt)
         if live is not None:
             @pl.when(live)
             def _body():
@@ -256,7 +282,11 @@ def translate_pallas(
                 run_stmt(s, "epilogue")
 
     # ---- BlockSpecs from the TL Copy statements ------------------------------
-    def build(q, *kv):
+    def build(*operands):
+        kv_len_arg = None
+        if runtime_kv:
+            kv_len_arg, *operands = operands
+        q, *kv = operands
         bsz, hq, m, dqk = q.shape
         if m % bm:
             raise ValueError(f"q rows {m} not a multiple of BM={bm}")
@@ -291,6 +321,16 @@ def translate_pallas(
             ]
             args = (q, k, v)
 
+        if runtime_kv:
+            # scalar operand: (B, 1) int32 in SMEM, one row per batch —
+            # per-request cache lengths in a heterogeneous decode batch
+            lens = jnp.asarray(kv_len_arg, jnp.int32).reshape(-1)
+            lens = jnp.broadcast_to(lens, (bsz,)).reshape(bsz, 1)
+            in_specs.insert(0, pl.BlockSpec(
+                (1, 1), lambda bh, qi, ki: (bh // hq, 0),
+                memory_space=pltpu.SMEM))
+            args = (lens,) + args
+
         grid = (bsz * hq, tq, tkv)
         out_spec = pl.BlockSpec(
             (1, 1, bm, dv), lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0))
@@ -318,4 +358,5 @@ def translate_pallas(
 
     build.program = prog
     build.block_config = (bm, bn)
+    build.runtime_kv_len = runtime_kv
     return build

@@ -32,8 +32,14 @@ def mask_window(s, q_pos, k_pos, window: int, q_off: int = 0):
     return jnp.where(k_pos > q_pos + q_off - window, s, NEG_INF)
 
 
-def mask_bounds(s, k_pos, kv_len: int):
-    """Mask padded KV columns (wrapper pads N up to a multiple of BN)."""
+def mask_bounds(s, k_pos, kv_len):
+    """Mask KV columns at or past ``kv_len``.
+
+    ``kv_len`` is a python int for compile-time-length programs (wrapper
+    pads N up to a multiple of BN) or a traced scalar for runtime-length
+    decode programs (the true cache length inside a bucket, read from the
+    kernel's SMEM operand).
+    """
     return jnp.where(k_pos < kv_len, s, NEG_INF)
 
 

@@ -6,8 +6,14 @@ so the G = Hq/Hkv query heads that share a KV head become the *rows* of one
 q tile — a single MXU pass per KV head per KV block — and the KV dimension
 rides the sequential grid with the online-softmax state in VMEM scratch.
 The same TL program as prefill serves decode with different parameters
-(M = G, causal off, bounds mask at the cache length), which is the paper's
-"same sketch, different reasoning" parameterisation story.
+(M = G, causal off), which is the paper's "same sketch, different
+reasoning" parameterisation story.
+
+Decode programs are *runtime-length*: the reasoning stage binds ``N`` to a
+bucket capacity and the true cache length is a scalar kernel operand
+(``fn(kv_len, q, k, v)``), so one compiled kernel serves every decode step
+whose cache fits the bucket — the serving engine compiles O(log max_len)
+kernels total instead of one per step.
 
 Batched wrappers: :func:`repro.kernels.ops.flash_decode` / ``mla_decode``.
 """
@@ -18,9 +24,13 @@ from ..core.pipeline import GeneratedKernel, generate_attention_kernel
 from ..core.spec import AttnSpec
 
 
-def make_decode_kernel(num_kv_heads: int, q_rows: int, cache_len: int,
+def make_decode_kernel(num_kv_heads: int, q_rows: int, bucket_len: int,
                        head_dim: int, **kw) -> GeneratedKernel:
+    """Decode kernel for a KV *bucket capacity* of ``bucket_len`` entries.
+
+    The returned kernel's ``pallas_fn``/``oracle_fn`` take a leading
+    runtime ``kv_len`` operand (see module docstring)."""
     spec = AttnSpec(variant="mha", num_q_heads=num_kv_heads,
                     num_kv_heads=num_kv_heads, head_dim=head_dim,
                     causal=False, mode="decode")
-    return generate_attention_kernel(spec, q_rows, cache_len, **kw)
+    return generate_attention_kernel(spec, q_rows, bucket_len, **kw)

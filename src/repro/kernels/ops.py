@@ -93,16 +93,31 @@ def mla_attention(
     return out[:, :, :m, :]
 
 
+def _norm_cache_len(cache_len, batch: int, capacity: int):
+    """Normalise ``cache_len`` to a (B,) int32 vector for the runtime-length
+    decode kernels.  Accepts None (full capacity), a python int, a traced
+    scalar, or a per-request (B,) vector — the serving engine's
+    length-heterogeneous decode batches."""
+    if cache_len is None:
+        return jnp.full((batch,), capacity, jnp.int32)
+    lens = jnp.asarray(cache_len, jnp.int32).reshape(-1)
+    return jnp.broadcast_to(lens, (batch,))
+
+
 def flash_decode(
     q, k_cache, v_cache, *,
-    cache_len: Optional[int] = None,
+    cache_len=None,
     interpret: bool = True,
     target: str = "v5e",
 ):
     """Single-token decode against a KV cache.
 
-    q: (B, Hq, 1, D); caches: (B, Hkv, N, D).  ``cache_len`` (static) is the
-    number of valid cache entries; the rest is masked.
+    q: (B, Hq, 1, D); caches: (B, Hkv, N, D).  ``cache_len`` is the number
+    of valid cache entries — a *runtime* quantity: a python int, a traced
+    scalar, or a per-request (B,) vector for length-heterogeneous batches.
+    The kernel is compiled once per cache *capacity* N (the caller's length
+    bucket) and masks/skips past ``cache_len`` at run time, so serving a
+    growing cache inside one bucket never retraces.
 
     TPU adaptation: GPU FlashDecoding parallelises KV splits across SMs.  On
     TPU the MXU wants >=8 rows, so the G = Hq/Hkv query heads of one KV head
@@ -113,25 +128,24 @@ def flash_decode(
     assert one == 1, "decode takes exactly one new token"
     hkv, n = k_cache.shape[1], k_cache.shape[2]
     g = hq // hkv
-    kv_len = int(cache_len) if cache_len is not None else n
     # q heads -> rows: (B, Hq, 1, D) -> (B, Hkv, G, D)
     q_rows = q.reshape(b, hkv, g, d)
     spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
                     head_dim=d, causal=False, mode="decode",
                     dtype=_DT[q.dtype])
-    kern = cached_kernel(spec, g, kv_len, target, interpret, False)
+    kern = cached_kernel(spec, g, n, target, interpret, False)
     bm, bn = kern.blocks.bm, kern.blocks.bn
     qp = _pad_rows(q_rows, 2, bm)
-    n_used = -(-kv_len // bn) * bn
-    kp = _pad_rows(k_cache[:, :, :min(n_used, n), :], 2, bn)
-    vp = _pad_rows(v_cache[:, :, :min(n_used, n), :], 2, bn)
-    out = kern.pallas_fn(qp, kp, vp)               # (B, Hkv, Gpad, D)
+    kp = _pad_rows(k_cache, 2, bn)
+    vp = _pad_rows(v_cache, 2, bn)
+    lens = _norm_cache_len(cache_len, b, n)
+    out = kern.pallas_fn(lens, qp, kp, vp)         # (B, Hkv, Gpad, D)
     return out[:, :, :g, :].reshape(b, hq, 1, d)
 
 
 def mla_decode(
     q_latent, c_cache, *,
-    cache_len: Optional[int] = None,
+    cache_len=None,
     interpret: bool = True,
     target: str = "v5e",
     kv_lora_rank: int = 512,
@@ -139,19 +153,20 @@ def mla_decode(
 ):
     """Single-token MLA decode: all H latent queries share the single latent
     cache, so the H heads are the tile rows (same TPU adaptation as
-    :func:`flash_decode`)."""
+    :func:`flash_decode`).  Like :func:`flash_decode`, compiled per cache
+    *capacity*; ``cache_len`` (int, traced scalar, or per-request (B,)
+    vector) is runtime data."""
     b, h, one, dq = q_latent.shape
     assert one == 1
     n = c_cache.shape[1]
-    kv_len = int(cache_len) if cache_len is not None else n
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=False,
                         mode="decode", dtype=_DT[q_latent.dtype])
-    kern = cached_kernel(spec, h, kv_len, target, interpret, False)
+    kern = cached_kernel(spec, h, n, target, interpret, False)
     bm, bn = kern.blocks.bm, kern.blocks.bn
     # heads -> rows: (B, H, 1, Dq) -> (B, 1, H, Dq)
     q_rows = q_latent.reshape(b, 1, h, dq)
     qp = _pad_rows(q_rows, 2, bm)
-    n_used = -(-kv_len // bn) * bn
-    cp = _pad_rows(c_cache[:, :min(n_used, n), :], 1, bn)
-    out = kern.pallas_fn(qp, cp)                   # (B, 1, Hpad, R)
+    cp = _pad_rows(c_cache, 1, bn)
+    lens = _norm_cache_len(cache_len, b, n)
+    out = kern.pallas_fn(lens, qp, cp)             # (B, 1, Hpad, R)
     return out[:, 0, :h, :].reshape(b, h, 1, kv_lora_rank)

@@ -23,7 +23,14 @@ def _mask(scores, q_len, kv_len, causal, window, kv_valid=None):
     if window is not None:
         keep &= mk > mq - window
     if kv_valid is not None:
-        keep &= mk < kv_valid
+        # scalar, or a per-batch-row (B,) vector of valid lengths (the
+        # serving engine's length-heterogeneous batches)
+        kv_valid = jnp.asarray(kv_valid)
+        if kv_valid.ndim == 1:
+            keep = keep[None, None] & (
+                mk[None, None] < kv_valid[:, None, None, None])
+        else:
+            keep &= mk < kv_valid
     return jnp.where(keep, scores, NEG_INF)
 
 

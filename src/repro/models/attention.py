@@ -36,7 +36,10 @@ from .config import ModelConfig
 def xla_flash(q, k, v, *, causal: bool, scale: float,
               window: Optional[int] = None, kv_valid=None,
               chunk: int = 1024):
-    """Chunked online-softmax attention.  q: (B,Hq,M,D), k/v: (B,Hkv,N,Dv)."""
+    """Chunked online-softmax attention.  q: (B,Hq,M,D), k/v: (B,Hkv,N,Dv).
+
+    ``kv_valid``: number of valid KV entries — None (all), a scalar, or a
+    per-batch-row (B,) vector (length-heterogeneous serving batches)."""
     b, hq, m, d = q.shape
     hkv, n = k.shape[1], k.shape[2]
     g = hq // hkv
@@ -47,13 +50,18 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
     if npad != n:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, npad - n), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, npad - n), (0, 0)))
-    kv_limit = n if kv_valid is None else kv_valid
+    if kv_valid is None:
+        kv_limit = n
+    else:
+        kv_limit = jnp.asarray(kv_valid)
+        if kv_limit.ndim == 1:   # per-row lengths: broadcast over (B,K,G,M,C)
+            kv_limit = kv_limit.reshape(b, 1, 1, 1, 1)
     q5 = q.reshape(b, hkv, g, m, d)
     q_off = kv_limit - m  # bottom-right causal alignment (last q = last key)
     kc = k.reshape(b, hkv, nc, chunk, k.shape[-1]).transpose(2, 0, 1, 3, 4)
     vc = v.reshape(b, hkv, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
 
-    q_pos = jnp.arange(m)[:, None] + q_off                   # (M, 1)
+    q_pos = jnp.arange(m).reshape(1, 1, 1, m, 1) + q_off
 
     def step(carry, xs):
         m_run, l_run, acc = carry
@@ -61,12 +69,12 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
         s = jnp.einsum("bkgmd,bknd->bkgmn", q5.astype(jnp.float32),
                        k_i.astype(jnp.float32),
                        preferred_element_type=jnp.float32) * scale
-        k_pos = ci * chunk + jnp.arange(chunk)[None, :]      # (1, C)
+        k_pos = (ci * chunk + jnp.arange(chunk)).reshape(1, 1, 1, 1, chunk)
         keep = k_pos < kv_limit
         if causal:
-            keep &= k_pos <= q_pos
+            keep = keep & (k_pos <= q_pos)
         if window is not None:
-            keep &= k_pos > q_pos - window
+            keep = keep & (k_pos > q_pos - window)
         s = jnp.where(keep, s, semantics.NEG_INF)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_run, m_cur)
@@ -101,11 +109,15 @@ def run_attention(q, k, v, *, cfg: ModelConfig, causal: bool,
     if impl == "tl_pallas":
         from ..kernels import ops
         if kv_valid is not None and q.shape[2] == 1:
+            # decode: runtime-length kernel — kv_valid may be an int, a
+            # traced scalar, or a per-request (B,) vector; the compiled
+            # kernel is keyed on the cache *capacity* (the caller's length
+            # bucket), never on the step count
             return ops.flash_decode(q, k, v, cache_len=kv_valid).astype(q.dtype)
         if kv_valid is not None:
             # prefill into a cache buffer: only the first kv_valid entries
             # are real — slice them (kv_valid is static in the serve path;
-            # a traced length falls back to the masked XLA path)
+            # a traced/per-row length falls back to the masked XLA path)
             try:
                 n_valid = int(kv_valid)
             except (TypeError, jax.errors.TracerIntegerConversionError):
@@ -149,9 +161,28 @@ def _constrain(v, spec):
     return jax.lax.with_sharding_constraint(v, spec)
 
 
+def _cache_append(buf, new, start, axis: int):
+    """Write ``new`` into ``buf`` at ``start`` along ``axis`` (post-batch).
+
+    ``start`` is a scalar (length-homogeneous batch) or a per-batch-row
+    (B,) vector — each request in a heterogeneous decode batch appends at
+    its own cache length."""
+    if jnp.ndim(start) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, start, axis)
+    upd = jax.vmap(
+        lambda b, n, s: jax.lax.dynamic_update_slice_in_dim(b, n, s, axis - 1))
+    return upd(buf, new, start)
+
+
 def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
-               cross_kv=None, causal=True, head_sharding=None):
-    """x: (B, T, d).  ``cache``: optional dict(k, v, len) for decode.
+               cross_kv=None, causal=True, head_sharding=None,
+               kv_bucket=None):
+    """x: (B, T, d).  ``cache``: optional dict(k, v, len) for decode;
+    ``cache['len']`` may be a scalar or a per-request (B,) vector.
+    ``kv_bucket``: static length bucket — attention reads only the first
+    ``kv_bucket`` cache entries (the update still writes the full buffer),
+    so the serving engine compiles one decode step per bucket instead of
+    one per cache length.
     ``cross_kv``: (B, P, vision_d) patch embeddings for cross-attention.
     ``head_sharding``: PartitionSpec for (B, H, T, D) tensors — pins the
     q/o head dim to the 'model' axis so GSPMD never resolves the attention
@@ -173,11 +204,16 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
 
     kv_valid = None
     if cache is not None:
-        # decode: append new kv at cache['len'], attend to the prefix
-        k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache["len"], 2)
-        v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache["len"], 2)
+        # decode: append new kv at cache['len'] (per-request positions for
+        # heterogeneous batches), attend to the prefix
+        k = _cache_append(cache["k"], k, cache["len"], 2)
+        v = _cache_append(cache["v"], v, cache["len"], 2)
         cache = {"k": k, "v": v, "len": cache["len"] + t}
         kv_valid = cache["len"]
+        if kv_bucket is not None:
+            # static bucket slice: compute reads bucket-many entries, the
+            # runtime kv_valid mask handles the tail inside the bucket
+            k, v = k[:, :, :kv_bucket], v[:, :, :kv_bucket]
 
     o = run_attention(q, k, v, cfg=cfg,
                       causal=causal and cross_kv is None,
@@ -250,9 +286,11 @@ def mla_init(key, cfg: ModelConfig):
 
 
 def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
-              causal=True, head_sharding=None, latent_sharding=None):
+              causal=True, head_sharding=None, latent_sharding=None,
+              kv_bucket=None):
     """Absorbed MLA.  The latent cache (R + Rr per token, head-independent)
-    is both K and V — read once for both GEMMs (paper Table 2 workload)."""
+    is both K and V — read once for both GEMMs (paper Table 2 workload).
+    ``cache['len']``/``kv_bucket`` follow :func:`attn_apply`."""
     b, t, d = x.shape
     h, r, rr = cfg.num_q_heads, cfg.kv_lora_rank, cfg.rope_head_dim
     nope = cfg.nope_head_dim
@@ -286,15 +324,18 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
 
     kv_valid = None
     if cache is not None:
-        latent = jax.lax.dynamic_update_slice_in_dim(
-            cache["c"], latent, cache["len"], 1)
+        latent = _cache_append(cache["c"], latent, cache["len"], 1)
         cache = {"c": latent, "len": cache["len"] + t}
         kv_valid = cache["len"]
+        if kv_bucket is not None:
+            latent = latent[:, :kv_bucket]
 
     scale = (nope + rr) ** -0.5
     if cfg.attn_impl == "tl_pallas":
         from ..kernels import ops
         if cache is not None and t == 1:
+            # runtime-length decode: one compiled kernel per latent-cache
+            # capacity; kv_valid (int / traced / per-row vector) is data
             o_lat = ops.mla_decode(q_full, latent, cache_len=kv_valid,
                                    kv_lora_rank=r, rope_head_dim=rr)
         else:

@@ -103,11 +103,13 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
             o, new_cache = attention.mla_apply(
                 p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
                 cache=cache, head_sharding=ctx.get("head_sharding"),
-                latent_sharding=ctx.get("latent_sharding"))
+                latent_sharding=ctx.get("latent_sharding"),
+                kv_bucket=ctx.get("kv_bucket"))
         else:
             o, new_cache = attention.attn_apply(
                 p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
-                cache=cache, head_sharding=ctx.get("head_sharding"))
+                cache=cache, head_sharding=ctx.get("head_sharding"),
+                kv_bucket=ctx.get("kv_bucket"))
         if new_cache is not None:
             new_cache.pop("len", None)  # length tracked by the caller
     elif kind == "cross":
@@ -186,13 +188,18 @@ def abstract_params(cfg: ModelConfig):
 # --------------------------------------------------------------------------
 
 def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
-          caches=None, cache_len=None, positions=None, act_sharding=None,
-          ep_sharding=None, head_sharding=None, latent_sharding=None,
-          moe_mesh=None):
+          caches=None, cache_len=None, positions=None, kv_bucket=None,
+          act_sharding=None, ep_sharding=None, head_sharding=None,
+          latent_sharding=None, moe_mesh=None):
     """tokens: (B, T) int32 -> logits (B, T, V) f32.
 
     ``caches``: pytree from :func:`init_caches` for decode; ``cache_len``
-    scalar count of valid cache entries.  Returns (logits, aux, new_caches).
+    counts valid cache entries — a python int, a traced scalar, or a
+    per-request (B,) vector (length-heterogeneous serving batches; RoPE
+    positions then differ per row).  ``kv_bucket`` (static int) bounds how
+    many cache entries attention *reads*: the serving engine passes a
+    power-of-two bucket ≥ cache_len+T so decode compiles once per bucket,
+    not once per step.  Returns (logits, aux, new_caches).
 
     ``act_sharding``: optional PartitionSpec for the (B, T, d) residual
     stream.  Constraining it *inside* the period scan is what shards the
@@ -224,7 +231,10 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     x = constrain(x)
     if positions is None:
         start = cache_len if cache_len is not None else 0
-        positions = start + jnp.arange(t)
+        if jnp.ndim(start) == 1:   # per-request lengths -> (B, T) positions
+            positions = start[:, None] + jnp.arange(t)[None, :]
+        else:
+            positions = start + jnp.arange(t)
 
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -233,6 +243,7 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     def make_ctx(cache):
         return {"positions": positions, "vision": vision_embeds,
                 "cache": cache, "cache_len": clen,
+                "kv_bucket": kv_bucket,
                 "ep_sharding": ep_sharding,
                 "head_sharding": head_sharding,
                 "latent_sharding": latent_sharding,

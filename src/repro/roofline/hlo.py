@@ -44,7 +44,10 @@ _WHILE_RE = re.compile(r"while\(.*?\).*?condition=%([\w.\-]+).*?body=%([\w.\-]+)
 _CALLEE_RE = re.compile(
     r"(?:to_apply|calls|body|condition|branch_computations=\{)=?%?([\w.\-]+)")
 _CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
-_DOT_OPERANDS = re.compile(r"dot\(\s*%([\w.\-]+),\s*%([\w.\-]+)\)")
+# operands may carry an inline type token (newer XLA text: ``dot(f32[64,32]
+# {1,0} %lhs, f32[32,16]{1,0} %rhs)``) or not (older: ``dot(%lhs, %rhs)``)
+_DOT_OPERANDS = re.compile(
+    r"dot\(\s*(?:[^%)]*\s)?%([\w.\-]+),\s*(?:[^%)]*\s)?%([\w.\-]+)\)")
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
@@ -218,7 +221,8 @@ def analyze_hlo(text: str) -> HLOCosts:
                     if kind == "all-reduce":
                         moved = 2.0 * res_bytes
                     elif kind in ("reduce-scatter", "all-to-all"):
-                        op_m = re.search(rf"{kind}\(\s*%([\w.\-]+)", rhs)
+                        op_m = re.search(
+                            rf"{kind}\(\s*(?:[^%)]*\s)?%([\w.\-]+)", rhs)
                         src = shapes.get(op_m.group(1)) if op_m else None
                         moved = float(_shape_bytes(*src)) if src else float(res_bytes)
                     else:

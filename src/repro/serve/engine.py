@@ -1,15 +1,29 @@
-"""Batched serving engine: prefill + decode with persistent KV caches.
+"""Batched serving engine: prefill + bucketed runtime-length decode.
 
-Length bucketing keeps jit cache size bounded (prompt lengths are padded up
-to power-of-two buckets; decode is a single (B, 1) step shape).  Greedy and
-temperature sampling.  The engine is mesh-agnostic: pass ``shardings`` for
-params/caches to serve on a pjit mesh, or nothing for single-device.
+The decode step is compiled per power-of-two *length bucket*, not per cache
+length: ``cache_len`` is a traced per-request vector and the bucket (the
+number of cache entries attention reads) is the only static shape input.
+The jit cache is therefore bounded at O(log2(max_len)) decode entries
+instead of one per generated token — the FlashDecoding-style serving
+contract over the TL-generated runtime-length kernels.
+
+Prompt batches may be length-heterogeneous (attention-cache architectures):
+prompts are right-padded to a shared bucket, next-token logits are gathered
+at each request's true last position, and every downstream step masks the
+cache at the per-request length.  Recurrent architectures (RWKV / Mamba
+hybrids) carry state, so right-padding would contaminate it; batched
+``generate`` keeps the homogeneous-length requirement for them, while the
+``submit``/``step`` continuous-batching path prefills each request alone at
+its exact length and so serves mixed lengths for every architecture.
+
+``submit()``/``step()`` are the continuous-batching seam: requests are
+admitted into free slots and retired between decode steps while the rest
+of the batch keeps running.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -34,75 +48,272 @@ class GenResult:
     steps: int
 
 
+@dataclasses.dataclass
+class Request:
+    """One serving request moving through the continuous-batching loop."""
+
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    temperature: float = 0.0
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
 class ServeEngine:
+    """Mesh-agnostic serving engine (pass ``shardings`` upstream via params).
+
+    Compile accounting: ``prefill_compiles`` / ``decode_compiles`` count jit
+    traces of the two step functions — the load-bearing guarantee is that
+    ``decode_compiles`` stays ≤ the number of distinct length buckets
+    touched, independent of how many tokens are generated.
+    """
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_len: int = 2048, vision_embeds=None):
+                 max_len: int = 2048, vision_embeds=None,
+                 decode_bucket_lo: int = 64, prompt_bucket_lo: int = 16):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.vision = vision_embeds
+        self.decode_bucket_lo = decode_bucket_lo
+        self.prompt_bucket_lo = prompt_bucket_lo
+        # recurrent state (RWKV / Mamba hybrid) cannot be right-padded
+        self.recurrent = bool(getattr(cfg, "rwkv", False)
+                              or getattr(cfg, "hybrid_period", 0))
+        self.prefill_compiles = 0
+        self.decode_compiles = 0
 
-        @functools.partial(jax.jit, static_argnames=("prompt_pad",))
-        def prefill(params, tokens, caches, prompt_pad):
+        def prefill(params, tokens, caches):
+            self.prefill_compiles += 1          # runs once per jit trace
             logits, _, caches = transformer.apply(
                 params, tokens, cfg, caches=caches, cache_len=0,
                 vision_embeds=self.vision)
             return logits, caches
 
-        # cache_len is static: the TL-Pallas decode kernel is specialised
-        # per KV length.  Production serving buckets decode lengths (e.g.
-        # powers of two) to bound recompilation; tests take the per-step
-        # retrace.
-        @functools.partial(jax.jit, static_argnames=("cache_len",))
-        def decode(params, tok, caches, cache_len):
+        # cache_len is runtime data (a per-request vector); only the length
+        # bucket — how many cache entries attention reads — is static, so
+        # generating T tokens costs at most O(log2 max_len) decode traces.
+        def decode(params, tok, caches, cache_len, kv_bucket):
+            self.decode_compiles += 1           # runs once per jit trace
             logits, _, caches = transformer.apply(
                 params, tok, cfg, caches=caches, cache_len=cache_len,
-                vision_embeds=self.vision)
+                kv_bucket=kv_bucket, vision_embeds=self.vision)
             return logits[:, -1], caches
 
-        self._prefill = prefill
-        self._decode = decode
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, static_argnames=("kv_bucket",))
+
+        # continuous-batching state (submit/step API)
+        self._queue: list[Request] = []
+        self._active: list[Optional[Request]] = []
+        self._slot_caches = None
+        self._slot_logits = None
+        self._slot_lens: Optional[np.ndarray] = None
+        self._next_uid = 0
+        self._key = jax.random.PRNGKey(0)
+
+    # ------------------------------------------------------------------
+    # shared helpers
+    # ------------------------------------------------------------------
+
+    def _decode_bucket(self, needed: int) -> int:
+        """Smallest power-of-two bucket covering ``needed`` cache entries."""
+        if needed > self.max_len:
+            raise ValueError(f"cache length {needed} exceeds max_len "
+                             f"{self.max_len}")
+        return min(_bucket(needed, self.decode_bucket_lo), self.max_len)
+
+    def _sample(self, logits, temperature: float, key):
+        """Returns (tokens, next_key).  The key is threaded explicitly so
+        batched ``generate`` and the submit/step API keep independent
+        sampling streams."""
+        if temperature > 0.0:
+            key, k2 = jax.random.split(key)
+            return jax.random.categorical(k2, logits / temperature,
+                                          axis=-1), key
+        return jnp.argmax(logits, axis=-1), key
+
+    # ------------------------------------------------------------------
+    # batch generate (one-shot; heterogeneous prompt lengths allowed)
+    # ------------------------------------------------------------------
 
     def generate(self, prompts: list[list[int]], *, max_new_tokens: int = 16,
                  temperature: float = 0.0, seed: int = 0) -> GenResult:
-        """Greedy/temperature generation for a batch of prompts."""
+        """Greedy/temperature generation for a batch of prompts.
+
+        Prompt lengths may differ (attention-cache architectures): the batch
+        is right-padded to a shared bucket, per-request last-position logits
+        seed decoding, and each request's cache length is tracked
+        separately.  Recurrent architectures require homogeneous lengths
+        here — use :meth:`submit`/:meth:`step` for mixed lengths there.
+        """
         if len(prompts) > self.max_batch:
             raise ValueError(f"batch {len(prompts)} > max_batch "
                              f"{self.max_batch}")
         b = len(prompts)
         lens = [len(p) for p in prompts]
-        if len(set(lens)) != 1:
+        if max(lens) + max_new_tokens > self.max_len:
             raise ValueError(
-                "ServeEngine batches must be length-homogeneous; group "
+                f"prompt ({max(lens)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_len {self.max_len}; raise max_len or shorten "
+                "the request (step() truncates at capacity instead)")
+        if self.recurrent and len(set(lens)) != 1:
+            raise ValueError(
+                "recurrent architectures carry state, so right-padded "
+                "heterogeneous prefill would contaminate it; group "
                 f"requests by prompt length (got {sorted(set(lens))})")
-        # exact-length prefill: recurrent archs (RWKV/Mamba) carry state, so
-        # right-padding would contaminate it; one jit entry per distinct
-        # prompt length (group-by-length batching bounds this in practice)
-        pad_to = lens[0]
-        toks = np.asarray(prompts, np.int32)
+        # homogeneous batches prefill at the exact length (recurrent-safe
+        # and numerically identical to a manual decode); heterogeneous
+        # batches right-pad to a shared bucket and mask per request
+        pad_to = lens[0] if len(set(lens)) == 1 else \
+            min(_bucket(max(lens), self.prompt_bucket_lo), self.max_len)
+        toks = np.zeros((b, pad_to), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
 
         caches = transformer.init_caches(self.cfg, b, self.max_len)
-        logits, caches = self._prefill(self.params, jnp.asarray(toks),
-                                       caches, prompt_pad=pad_to)
+        logits, caches = self._prefill(self.params, jnp.asarray(toks), caches)
         # next-token logits come from each prompt's true last position
         last = jnp.asarray([l - 1 for l in lens])
         step_logits = logits[jnp.arange(b), last]
 
         key = jax.random.PRNGKey(seed)
         out = np.zeros((b, max_new_tokens), np.int32)
-        cache_len = lens[0]
-        tok = None
+        lens_v = np.asarray(lens, np.int32)
         for t in range(max_new_tokens):
-            if temperature > 0.0:
-                key, k2 = jax.random.split(key)
-                tok = jax.random.categorical(
-                    k2, step_logits / temperature, axis=-1)
-            else:
-                tok = jnp.argmax(step_logits, axis=-1)
+            tok, key = self._sample(step_logits, temperature, key)
             out[:, t] = np.asarray(tok)
+            bucket = self._decode_bucket(int(lens_v.max()) + 1)
             step_logits, caches = self._decode(
                 self.params, tok[:, None].astype(jnp.int32), caches,
-                cache_len)
-            cache_len += 1
+                jnp.asarray(lens_v), kv_bucket=bucket)
+            lens_v = lens_v + 1
         return GenResult(tokens=out, prompt_len=lens, steps=max_new_tokens)
+
+    # ------------------------------------------------------------------
+    # continuous batching: submit / step
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt: list[int], *, max_new_tokens: int = 16,
+               temperature: float = 0.0) -> int:
+        """Queue a request; it is admitted at the next :meth:`step`."""
+        if self.vision is not None:
+            raise ValueError(
+                "submit()/step() admit requests one at a time, but "
+                "vision_embeds are bound to the whole batch — use "
+                "generate() for vision engines")
+        req = Request(uid=self._next_uid, prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, temperature=temperature)
+        self._next_uid += 1
+        self._queue.append(req)
+        return req.uid
+
+    @property
+    def active_requests(self) -> list[Request]:
+        return [r for r in self._active if r is not None]
+
+    def _ensure_slots(self):
+        if self._slot_caches is None:
+            self._active = [None] * self.max_batch
+            self._slot_caches = transformer.init_caches(
+                self.cfg, self.max_batch, self.max_len)
+            self._slot_lens = np.zeros((self.max_batch,), np.int32)
+            vocab = self.cfg.vocab_size
+            self._slot_logits = jnp.zeros((self.max_batch, vocab),
+                                          jnp.float32)
+
+    def _write_slot(self, slot: int, slot_caches, logits_row):
+        """Scatter a batch-1 prefill result into a batch slot.
+
+        Cache layout: scanned-block leaves are (nper, B, ...), leading
+        dense-layer leaves are (B, ...) — the batch axis is 1 and 0
+        respectively."""
+        def upd(axis):
+            return lambda big, small: jax.lax.dynamic_update_index_in_dim(
+                big, jnp.squeeze(small, axis), slot, axis)
+        new = {"blocks": jax.tree.map(upd(1), self._slot_caches["blocks"],
+                                      slot_caches["blocks"])}
+        if "first" in self._slot_caches:
+            new["first"] = jax.tree.map(upd(0), self._slot_caches["first"],
+                                        slot_caches["first"])
+        self._slot_caches = new
+        self._slot_logits = self._slot_logits.at[slot].set(logits_row)
+
+    def _admit(self):
+        free = [i for i, r in enumerate(self._active) if r is None]
+        while free and self._queue:
+            req = self._queue.pop(0)
+            slot = free.pop(0)
+            # exact-length batch-1 prefill (recurrent-safe), scattered into
+            # the slot row; jit cache grows per distinct prompt length —
+            # round to a prompt bucket upstream if that matters
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            caches = transformer.init_caches(self.cfg, 1, self.max_len)
+            logits, caches = self._prefill(self.params, toks, caches)
+            self._write_slot(slot, caches, logits[0, len(req.prompt) - 1])
+            self._slot_lens[slot] = len(req.prompt)
+            req.slot = slot
+            self._active[slot] = req
+
+    def step(self) -> list[Request]:
+        """One decode step for every active slot.
+
+        Admits queued requests into free slots first, then decodes one
+        token for the whole batch (idle slots ride along masked at length
+        1), and retires finished requests.  Returns the requests that
+        finished this step.
+        """
+        self._ensure_slots()
+        self._admit()
+        active = self.active_requests
+        if not active:
+            return []
+
+        # one batched greedy pass for the whole slot matrix; only
+        # temperature>0 requests pay for an individual sampling dispatch
+        greedy = np.asarray(jnp.argmax(self._slot_logits, axis=-1))
+        toks = np.zeros((self.max_batch,), np.int32)
+        for r in active:
+            if r.temperature > 0.0:
+                tok, self._key = self._sample(self._slot_logits[r.slot],
+                                              r.temperature, self._key)
+                tok = int(np.asarray(tok))
+            else:
+                tok = int(greedy[r.slot])
+            r.tokens.append(tok)
+            toks[r.slot] = tok
+
+        # idle slots decode a dummy token against a length-1 cache window;
+        # their rows are garbage and never read back
+        lens = self._slot_lens.copy()
+        needed = int(lens.max()) + 1
+        bucket = self._decode_bucket(needed)
+        step_logits, self._slot_caches = self._decode(
+            self.params, jnp.asarray(toks)[:, None], self._slot_caches,
+            jnp.asarray(lens, np.int32), kv_bucket=bucket)
+        self._slot_logits = step_logits
+        for r in active:
+            self._slot_lens[r.slot] += 1
+
+        finished = []
+        for r in active:
+            if r.done or self._slot_lens[r.slot] + 1 > self.max_len:
+                finished.append(r)
+                self._active[r.slot] = None
+                self._slot_lens[r.slot] = 0
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        """Drive :meth:`step` until queue and slots are empty."""
+        done: list[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self._queue and not self.active_requests:
+                break
+        return done

@@ -1,0 +1,48 @@
+"""Degrade hypothesis-based property tests to skips when hypothesis is
+absent.
+
+The test extra (``pip install -e .[test]``) pins hypothesis, but the tier-1
+suite must still *collect and pass* in environments without it — property
+tests import ``given``/``settings``/``st`` from here instead of from
+hypothesis, and when the real library is missing each ``@given`` test
+becomes a single skipped test.
+"""
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal environments
+    HAVE_HYPOTHESIS = False
+
+    class _Anything:
+        """Stand-in for the strategies module: any attribute access, call,
+        or composition yields another stand-in, so module-level strategy
+        definitions (``st.sampled_from``, ``@st.composite``) still import.
+        The stand-ins are never *executed* — every ``@given`` test skips."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _Anything()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            import pytest
+
+            def skipper():
+                pytest.skip("hypothesis not installed (pip install -e "
+                            "'.[test]' enables property tests)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

@@ -1,0 +1,232 @@
+"""Runtime-length decode kernels: parity with the jnp oracle / closed-form
+reference, bucket invariance, and bounded compilation.
+
+The contract under test (the PR's tentpole): decode-mode TL programs bind
+``N`` to a *bucket capacity* and take the true cache length as a runtime
+scalar operand, so one compiled kernel serves every ``cache_len`` within a
+bucket — including per-request lengths in a heterogeneous batch.
+
+Deterministic seeded sweeps always run; the hypothesis variants widen the
+draw when the ``test`` extra is installed (see ``hypothesis_compat``).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core.pipeline import cached_kernel
+from repro.core.spec import AttnSpec
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 1e-2}
+
+_DT = {"bfloat16": "bf16", "float32": "f32"}
+
+
+def _draw_case(seed: int):
+    """One random (bucket, cache_len, head geometry, dtype) binding."""
+    rng = np.random.default_rng(seed)
+    bucket = int(rng.choice([64, 128, 256]))
+    cache_len = int(rng.integers(1, bucket + 1))
+    hq, hkv = [(4, 4), (8, 2), (4, 1), (6, 3)][rng.integers(0, 4)]  # MHA/GQA/MQA
+    d = int(rng.choice([32, 64]))
+    dtype = [jnp.float32, jnp.float32, jnp.bfloat16][rng.integers(0, 3)]
+    return rng, bucket, cache_len, hq, hkv, d, dtype
+
+
+def _decode_check(rng, bucket, cache_len, hq, hkv, d, dtype, b=2):
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)) * 0.5, dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, bucket, d)) * 0.5, dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, bucket, d)) * 0.5, dtype)
+    out = ops.flash_decode(q, k, v, cache_len=cache_len)
+    gold = ref.decode_attention(q, k, v, cache_len=cache_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(gold, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+        err_msg=f"bucket={bucket} cache_len={cache_len} "
+                f"Hq={hq} Hkv={hkv} D={d} {jnp.dtype(dtype).name}")
+    return q, k, v, out
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_flash_decode_runtime_length_vs_ref(seed):
+    """Random (bucket, cache_len ≤ bucket, geometry, dtype) draws: the
+    runtime-length Pallas decode matches the closed-form reference."""
+    _decode_check(*_draw_case(seed))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_flash_decode_pallas_vs_jnp_oracle(seed):
+    """Backend agreement on the same TL program: the Pallas kernel and the
+    jnp oracle take the same runtime kv_len operand and must agree."""
+    rng, bucket, cache_len, hq, hkv, d, dtype = _draw_case(seed)
+    g = hq // hkv
+    spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
+                    head_dim=d, causal=False, mode="decode",
+                    dtype=_DT[jnp.dtype(dtype).name])
+    kern = cached_kernel(spec, g, bucket, "v5e", True, False)
+    assert kern.pallas_fn.runtime_kv_len and kern.oracle_fn.runtime_kv_len
+    q = jnp.asarray(rng.standard_normal((1, hkv, g, d)) * 0.5, dtype)
+    k = jnp.asarray(rng.standard_normal((1, hkv, bucket, d)) * 0.5, dtype)
+    v = jnp.asarray(rng.standard_normal((1, hkv, bucket, d)) * 0.5, dtype)
+    qp = ops._pad_rows(q, 2, kern.blocks.bm)
+    out = kern.pallas_fn(cache_len, qp, k, v)[0, :, :g]
+    for h in range(hkv):
+        o = kern.oracle_fn(cache_len, qp[0, h], k[0, h], v[0, h])[:g]
+        np.testing.assert_allclose(
+            np.asarray(out[h], np.float32), np.asarray(o, np.float32),
+            atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_flash_decode_bucket_invariance(seed):
+    """The answer must not depend on which bucket served the request: the
+    same cache prefix decoded from a small and a large bucket agrees."""
+    rng = np.random.default_rng(1000 + seed)
+    hq, hkv, d = [(4, 4), (8, 2), (4, 1)][seed % 3], None, None
+    hq, hkv = hq
+    d = 32
+    small, big = 128, 512
+    cache_len = int(rng.integers(1, small + 1))
+    q = jnp.asarray(rng.standard_normal((2, hq, 1, d)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, hkv, big, d)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, hkv, big, d)) * 0.5, jnp.float32)
+    out_small = ops.flash_decode(q, k[:, :, :small], v[:, :, :small],
+                                 cache_len=cache_len)
+    out_big = ops.flash_decode(q, k, v, cache_len=cache_len)
+    np.testing.assert_allclose(np.asarray(out_small, np.float32),
+                               np.asarray(out_big, np.float32),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_flash_decode_per_request_lengths():
+    """A (B,) cache_len vector masks each batch row at its own length —
+    the serving engine's heterogeneous decode batches."""
+    rng = np.random.default_rng(7)
+    b, hq, hkv, d, bucket = 3, 8, 2, 64, 128
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, bucket, d)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, bucket, d)) * 0.5, jnp.float32)
+    lens = np.asarray([1, 57, 128], np.int32)
+    out = ops.flash_decode(q, k, v, cache_len=jnp.asarray(lens))
+    for i, cl in enumerate(lens):
+        gold = ref.decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                    cache_len=int(cl))
+        np.testing.assert_allclose(np.asarray(out[i:i + 1], np.float32),
+                                   np.asarray(gold, np.float32),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"row {i}")
+
+
+# --------------------------------------------------------------------------
+# MLA
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_mla_decode_runtime_length_vs_ref(seed):
+    rng = np.random.default_rng(2000 + seed)
+    bucket = int(rng.choice([64, 128, 256]))
+    cache_len = int(rng.integers(1, bucket + 1))
+    h = int(rng.choice([4, 8, 16]))
+    r, rr = int(rng.choice([32, 64])), 16
+    dtype = jnp.float32 if seed % 3 else jnp.bfloat16
+    ql = jnp.asarray(rng.standard_normal((2, h, 1, r + rr)) * 0.3, dtype)
+    c = jnp.asarray(rng.standard_normal((2, bucket, r + rr)) * 0.3, dtype)
+    out = ops.mla_decode(ql, c, cache_len=cache_len, kv_lora_rank=r,
+                         rope_head_dim=rr)
+    gold = ref.mla_attention(ql, c, rope_dim=rr, scale=(128 + rr) ** -0.5,
+                             causal=False, kv_valid=cache_len)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype],
+                               err_msg=f"bucket={bucket} len={cache_len}")
+
+
+def test_mla_decode_bucket_invariance_and_per_row():
+    rng = np.random.default_rng(9)
+    h, r, rr, small, big = 8, 64, 16, 128, 256
+    ql = jnp.asarray(rng.standard_normal((2, h, 1, r + rr)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((2, big, r + rr)) * 0.3, jnp.float32)
+    a = ops.mla_decode(ql, c[:, :small], cache_len=100, kv_lora_rank=r,
+                       rope_head_dim=rr)
+    b_ = ops.mla_decode(ql, c, cache_len=100, kv_lora_rank=r,
+                        rope_head_dim=rr)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               atol=1e-6, rtol=1e-6)
+    lens = jnp.asarray([13, 222], jnp.int32)
+    out = ops.mla_decode(ql, c, cache_len=lens, kv_lora_rank=r,
+                         rope_head_dim=rr)
+    for i, cl in enumerate([13, 222]):
+        gold = ref.mla_attention(ql[i:i + 1], c[i:i + 1], rope_dim=rr,
+                                 scale=(128 + rr) ** -0.5, causal=False,
+                                 kv_valid=cl)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]),
+                                   np.asarray(gold, np.float32),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"row {i}")
+
+
+# --------------------------------------------------------------------------
+# bounded compilation at the kernel layer
+# --------------------------------------------------------------------------
+
+def test_one_kernel_per_bucket_capacity():
+    """Every cache_len within one capacity reuses one generated kernel:
+    the TL pipeline cache gains at most one entry however many lengths
+    are decoded."""
+    rng = np.random.default_rng(11)
+    b, hq, hkv, d, bucket = 1, 4, 2, 32, 128
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, bucket, d)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, bucket, d)) * 0.5, jnp.float32)
+    ops.flash_decode(q, k, v, cache_len=1)          # warm the capacity
+    before = cached_kernel.cache_info()
+    for cl in range(2, 40):
+        ops.flash_decode(q, k, v, cache_len=cl)
+    after = cached_kernel.cache_info()
+    assert after.misses == before.misses, (
+        "decode retraced the TL pipeline for a cache length inside an "
+        "already-compiled bucket")
+    assert after.hits > before.hits
+
+
+# --------------------------------------------------------------------------
+# hypothesis variants (skip when the test extra is not installed)
+# --------------------------------------------------------------------------
+
+@given(
+    bucket=st.sampled_from([64, 128, 256]),
+    frac=st.floats(0.0, 1.0),
+    geom=st.sampled_from([(4, 4), (8, 2), (4, 1), (6, 3)]),
+    d=st.sampled_from([32, 64]),
+    use_bf16=st.booleans(),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=20, deadline=None)
+def test_flash_decode_runtime_length_property(bucket, frac, geom, d,
+                                              use_bf16, seed):
+    rng = np.random.default_rng(seed)
+    hq, hkv = geom
+    cache_len = max(1, min(bucket, int(round(frac * bucket))))
+    dtype = jnp.bfloat16 if use_bf16 else jnp.float32
+    _decode_check(rng, bucket, cache_len, hq, hkv, d, dtype, b=1)
+
+
+@given(
+    frac=st.floats(0.0, 1.0),
+    h=st.sampled_from([4, 8]),
+    r=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=10, deadline=None)
+def test_mla_decode_runtime_length_property(frac, h, r, seed):
+    rng = np.random.default_rng(seed)
+    bucket, rr = 128, 16
+    cache_len = max(1, min(bucket, int(round(frac * bucket))))
+    ql = jnp.asarray(rng.standard_normal((1, h, 1, r + rr)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((1, bucket, r + rr)) * 0.3, jnp.float32)
+    out = ops.mla_decode(ql, c, cache_len=cache_len, kv_lora_rank=r,
+                         rope_head_dim=rr)
+    gold = ref.mla_attention(ql, c, rope_dim=rr, scale=(128 + rr) ** -0.5,
+                             causal=False, kv_valid=cache_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold, np.float32),
+                               atol=1e-5, rtol=1e-5)

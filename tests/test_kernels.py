@@ -161,8 +161,7 @@ def test_rwkv6_chunked_vs_sequential(shape):
 # --------------------------------------------------------------------------
 # property: the XLA compile path agrees with the reference on random shapes
 # --------------------------------------------------------------------------
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 
 @given(

@@ -10,7 +10,11 @@ import pytest
 from repro.launch.train import run as train_run
 from repro.ckpt import checkpoint as C
 
+# the end-to-end train loops take tens of seconds each on CPU; tier-1
+# excludes them by default (`pytest -m slow` / `pytest -m ""` opts in)
 
+
+@pytest.mark.slow
 def test_train_loss_decreases_and_checkpoints(tmp_path):
     losses = train_run("deepseek-7b", reduced=True, steps=12, batch=8,
                        seq=64, ckpt_dir=str(tmp_path), ckpt_every=5,
@@ -19,6 +23,7 @@ def test_train_loss_decreases_and_checkpoints(tmp_path):
     assert C.latest_step(str(tmp_path)) == 12
 
 
+@pytest.mark.slow
 def test_restart_resumes_from_checkpoint(tmp_path):
     train_run("rwkv6-1.6b", reduced=True, steps=6, batch=4, seq=32,
               ckpt_dir=str(tmp_path), ckpt_every=3, lr=1e-3)
@@ -31,6 +36,7 @@ def test_restart_resumes_from_checkpoint(tmp_path):
     assert len(losses2) == 3  # only steps 6..8 were run
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
     """grad_accum=2 over the same global batch matches accum=1 closely."""
     l1 = train_run("musicgen-large", reduced=True, steps=3, batch=8,
@@ -40,6 +46,7 @@ def test_grad_accum_equivalence():
     np.testing.assert_allclose(l1, l2, rtol=2e-3)
 
 
+@pytest.mark.interpret
 def test_serve_with_tl_pallas_attention():
     """The TL-generated Pallas kernels drive inference end-to-end (the
     TL pipeline emits forward kernels; training uses the same math via the

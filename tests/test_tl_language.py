@@ -1,8 +1,7 @@
 """TL language tests: parsing, printing, round-trip property."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.core.tl.ast import (
     Allocate, ComputeGEMM, ComputeOp, Copy, ForLoop, MemSpace, Reshape,

@@ -1,9 +1,8 @@
 """The paper's workflow: sketch -> reason -> validate (+ Appendix-B
 ablation) and the autotuner's VMEM invariant."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.core import autotune
 from repro.core.llm import DeterministicBackend, OneStageBackend
