@@ -11,7 +11,6 @@ at bf16 numerics (no fp8 hardware here — documented in DESIGN.md A4).
 
 from __future__ import annotations
 
-import dataclasses
 
 from repro.core import autotune
 from repro.core.pipeline import generate_attention_kernel

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core.spec import AttnSpec
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from .common import CsvOut, timeit
 
 

@@ -77,7 +77,11 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--attn-impl", default="xla_flash",
                     choices=["tl_pallas", "xla_flash", "naive"])
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale smoke run for CI")
     args = ap.parse_args()
+    if args.tiny:
+        args.batch, args.prompt_len, args.new_tokens = 2, 12, 4
 
     cfg = dataclasses.replace(registry.get_reduced(args.arch),
                               attn_impl=args.attn_impl)

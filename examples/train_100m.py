@@ -10,7 +10,6 @@ synthetic Markov stream — the curve is printed at the end.
 """
 
 import argparse
-import dataclasses
 
 from repro.launch.train import run
 from repro.models.config import ModelConfig

@@ -24,7 +24,6 @@ Properties required at 1000-node scale (DESIGN.md §3.1):
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os

@@ -20,7 +20,6 @@ from .reason import BlockConfig, reason_parameters
 from .sketch import generate_sketch, generate_sketch_text
 from .spec import AttnSpec
 from .target import TPUTarget
-from .tl.ast import TLProgram
 from .tl.parser import parse
 
 

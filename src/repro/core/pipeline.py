@@ -27,7 +27,6 @@ from .spec import AttnSpec
 from .target import TPUTarget, get_target
 from .tl.ast import TLProgram
 from .tl.parser import parse
-from .tl.printer import to_text
 from .tl.validator import Diagnostic, check, validate
 from .translate.jnp_backend import translate_jnp
 from .translate.pallas_backend import translate_pallas
@@ -100,6 +99,9 @@ def generate_attention_kernel(
     diags = validate(prog, target)
     if strict:
         check(prog, target)
+    # the reasoning stage may have re-aligned the blocks (paged decode
+    # clamps BN to the page size); the reasoned config is authoritative
+    blocks = prog.meta.get("blocks", blocks)
 
     pallas_fn = translate_pallas(
         prog, interpret=interpret, causal_block_skip=causal_block_skip)

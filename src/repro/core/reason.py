@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import math
 from typing import Optional
 
 from .spec import AttnSpec
@@ -123,6 +124,27 @@ def reason_parameters(
     # serving contract — instead of one kernel per decode step.
     runtime_kv = spec.mode == "decode"
 
+    # Paged decode layout: the KV cache is a pool of PAGE_SIZE-token pages
+    # and a second runtime operand — the per-request block table — selects
+    # which physical page holds each logical KV tile.  The page size is a
+    # reasoned block parameter: BN is aligned down so every KV tile lies
+    # inside exactly one page (a tile must never straddle a page boundary,
+    # or the gather would need two DMAs per tile).
+    paged = spec.paged
+    if paged:
+        page = spec.page_size
+        if kv_len % page:
+            raise ReasonError(
+                f"paged decode capacity N={kv_len} must be a multiple of "
+                f"page_size={page} (the block table addresses whole pages)")
+        bn = blocks.bn
+        if bn > page:
+            bn = page
+        if page % bn:
+            bn = math.gcd(page, bn)
+        if bn != blocks.bn:
+            blocks = BlockConfig(bm=blocks.bm, bn=bn)
+
     params: dict = {
         "M": q_len,
         "N": kv_len,
@@ -137,6 +159,9 @@ def reason_parameters(
         # marker visible to both translation backends (and to the TL text
         # round-trip, which re-derives params through this function)
         params["KV_RUNTIME"] = 1
+    if paged:
+        params["KV_PAGED"] = 1
+        params["PAGE_SIZE"] = spec.page_size
     if mla:
         params["R"] = spec.kv_lora_rank
         params["Rr"] = spec.rope_head_dim
@@ -229,6 +254,7 @@ def reason_parameters(
                      if a.space is MemSpace.GLOBAL and a.name != "O"),
         outputs=("O",),
         meta={**sketch.meta, "stage": "code", "blocks": blocks,
-              "target": target.name, "runtime_kv_len": runtime_kv},
+              "target": target.name, "runtime_kv_len": runtime_kv,
+              "paged": paged},
     )
     return prog

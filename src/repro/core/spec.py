@@ -32,18 +32,37 @@ class AttnSpec:
     rope_head_dim: int = 64
     dtype: str = "bf16"
     sm_scale: Optional[float] = None
+    # Paged KV layout (decode only).  None = dense runtime-length cache;
+    # an int = the cache is a pool of fixed-size pages of this many tokens,
+    # gathered through a per-request block table at run time.  The page
+    # size is a *reasoned* block parameter: the reasoning stage aligns the
+    # KV block size BN to it so every KV tile lives inside one page.
+    page_size: Optional[int] = None
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
             raise ValueError(f"variant {self.variant!r} not in {VARIANTS}")
         if self.mode not in MODES:
             raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.page_size is not None:
+            if self.mode != "decode":
+                raise ValueError("paged KV layout (page_size) is a decode-"
+                                 "cache contract; prefill/train specs are "
+                                 "dense")
+            if self.page_size <= 0 or self.page_size % 8:
+                raise ValueError(f"page_size {self.page_size} must be a "
+                                 "positive multiple of the f32 sublane (8)")
         if self.variant == "mha" and self.num_q_heads != self.num_kv_heads:
             raise ValueError("MHA requires num_q_heads == num_kv_heads")
         if self.variant == "mqa" and self.num_kv_heads != 1:
             raise ValueError("MQA requires num_kv_heads == 1")
         if self.variant == "gqa" and self.num_q_heads % self.num_kv_heads:
             raise ValueError("GQA requires num_q_heads % num_kv_heads == 0")
+
+    @property
+    def paged(self) -> bool:
+        """True when the decode KV cache is a page pool + block table."""
+        return self.page_size is not None
 
     @property
     def q_per_kv(self) -> int:

@@ -13,8 +13,6 @@ wrapper's job (``kernels/ops.py``).
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,6 +49,15 @@ def translate_jnp(prog: TLProgram):
     a leading ``kv_len`` argument, mirroring the Pallas backend's scalar
     operand: ``fn(kv_len, *global_inputs)``.  ``params['N']`` is only the
     bucket capacity; columns at or past ``kv_len`` are masked.
+
+    Paged programs (``meta['paged']``) take ``fn(kv_len, block_table,
+    *global_inputs)`` — the identical gather contract as the Pallas
+    backend, so parity tests stay backend-agnostic.  The KV inputs are
+    page pools flattened to 2-D — ``(P * PAGE_SIZE, D)`` — and
+    ``block_table`` is this row's ``(N // PAGE_SIZE,)`` vector of physical
+    page indices (a *concrete* sequence: the oracle runs the loop in
+    Python).  Logical KV tile ``i`` is read from physical rows
+    ``table[i*BN // PAGE_SIZE] * PAGE_SIZE + (i*BN) % PAGE_SIZE`` onward.
     """
 
     p = dict(prog.params)
@@ -58,6 +65,9 @@ def translate_jnp(prog: TLProgram):
     m_real, n_real = int(p["M"]), int(p["N"])
     tkv = int(p["Tkv"])
     runtime_kv = bool(prog.meta.get("runtime_kv_len") or p.get("KV_RUNTIME"))
+    paged = bool(prog.meta.get("paged") or p.get("KV_PAGED"))
+    page = int(p["PAGE_SIZE"]) if paged else None
+    mpp = page // bn if paged else None    # KV tiles per page
     n_pad = tkv * bn
     tq = -(-m_real // bm)
     m_pad = tq * bm
@@ -67,11 +77,13 @@ def translate_jnp(prog: TLProgram):
                  "f16": jnp.float16,
                  "fp8": jnp.bfloat16}[allocs[out_name].dtype]
 
-    def run_block(env: dict, q_idx: int, kv_limit=None) -> jnp.ndarray:
+    def run_block(env: dict, q_idx: int, kv_limit=None,
+                  table=None) -> jnp.ndarray:
         """Execute the TL body for one q-tile coordinate.
 
         ``kv_limit``: the runtime cache length for runtime-length programs
-        (None for compile-time-length programs).
+        (None for compile-time-length programs).  ``table``: the physical
+        page index per logical page for paged programs (concrete ints).
         """
 
         state: dict = {}
@@ -119,8 +131,16 @@ def translate_jnp(prog: TLProgram):
                     if s.src is MemSpace.GLOBAL:
                         i = coord_of(s)
                         rows = prog.resolve(s.shape[0])
-                        state[nm] = jnp.asarray(
-                            env[nm][i * rows:(i + 1) * rows])
+                        if table is not None and allocs[nm].shape[0] == "N":
+                            # paged gather: logical tile i -> physical rows
+                            # (BN | PAGE_SIZE, so a tile never straddles)
+                            start = int(table[i // mpp]) * page \
+                                + (i % mpp) * bn
+                            state[nm] = jnp.asarray(
+                                env[nm][start:start + rows])
+                        else:
+                            state[nm] = jnp.asarray(
+                                env[nm][i * rows:(i + 1) * rows])
                     elif s.dst is MemSpace.GLOBAL:
                         state["__out__"] = state[nm]
                     continue
@@ -192,8 +212,19 @@ def translate_jnp(prog: TLProgram):
     input_names = tuple(prog.inputs)
 
     def fn(*arrays):
-        kv_limit = None
-        if runtime_kv:
+        kv_limit = table = None
+        if paged:
+            kv_len, table, *arrays = arrays
+            table = np.asarray(table).reshape(-1)
+            if table.shape[0] * mpp != tkv:
+                raise ValueError(
+                    f"block table covers {table.shape[0]} pages; the "
+                    f"program capacity N={n_real} needs {tkv // mpp}")
+            try:
+                kv_limit = int(kv_len)
+            except TypeError:
+                kv_limit = kv_len
+        elif runtime_kv:
             kv_len, *arrays = arrays
             try:
                 kv_limit = int(kv_len)
@@ -204,13 +235,21 @@ def translate_jnp(prog: TLProgram):
                              + (" with a leading kv_len" if runtime_kv else ""))
         env = {}
         for nm, arr in zip(input_names, arrays):
-            rows = m_pad if allocs[nm].shape[0] == "M" else n_pad
-            env[nm] = _pad_to(arr, rows)
-        blocks = [run_block(env, qi, kv_limit) for qi in range(tq)]
+            if allocs[nm].shape[0] == "M":
+                env[nm] = _pad_to(arr, m_pad)
+            elif paged:
+                # page pool, flattened (P * PAGE_SIZE, D): rows are gathered
+                # through the table, never sliced positionally — no padding
+                env[nm] = jnp.asarray(arr)
+            else:
+                env[nm] = _pad_to(arr, n_pad)
+        blocks = [run_block(env, qi, kv_limit, table) for qi in range(tq)]
         out = jnp.concatenate(blocks, axis=0)[:m_real]
         return out
 
     fn.input_names = input_names
     fn.program = prog
     fn.runtime_kv_len = runtime_kv
+    fn.paged = paged
+    fn.page_size = page
     return fn

@@ -24,6 +24,18 @@ TL statement           Pallas/Mosaic realisation
 ``Copy r->g (epilogue)`` output ref store predicated on the last grid step
 =====================  ====================================================
 
+Runtime operand classes (decode mode) extend the table:
+
+=====================  ====================================================
+runtime cache length     SMEM scalar operand (scalar-prefetch tier); the
+                         kernel masks score columns and skips dead KV
+                         blocks against it
+block table (paged)      SMEM int vector per batch row, read by the KV
+                         ``BlockSpec`` *index maps* — the HBM->VMEM DMA
+                         itself is redirected to the physical page, so the
+                         gather costs nothing over the dense copy
+=====================  ====================================================
+
 The translator is a *staging interpreter*: it walks the TL AST once at trace
 time and emits the corresponding JAX ops inside the generated kernel body.
 It supports the statement family the sketch generator produces (fused
@@ -34,8 +46,6 @@ otherwise — mirroring the paper's per-statement translation contract.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -117,6 +127,18 @@ def translate_pallas(
     vector — is staged into SMEM (the TPU scalar-prefetch tier) and the
     kernel masks score columns and skips dead KV blocks against it at run
     time.  One compiled kernel serves every cache length ≤ capacity.
+
+    Paged programs (``meta['paged']``) additionally take a *block table*:
+    ``fn(kv_len, block_tables, q, k_pool, v_pool)`` (or ``(..., c_pool)``
+    for MLA).  The KV operands are page *pools* — ``k/v: (P, Hkv,
+    PAGE_SIZE, D)``, ``c: (P, PAGE_SIZE, Dqk)`` — shared by every request,
+    and ``block_tables: (B, N // PAGE_SIZE) int32`` maps each batch row's
+    logical page ``j`` to a physical pool page.  Both runtime operands ride
+    the scalar-prefetch tier; the KV ``BlockSpec`` index maps read the
+    table, so Mosaic's pipelined DMA gathers pages directly.  Rows whose
+    table is shorter than ``N // PAGE_SIZE`` pages must pad with any valid
+    page index (the engine uses a reserved dump page): the gather still
+    issues the DMA, the runtime length mask discards the values.
     """
 
     p = dict(prog.params)
@@ -125,6 +147,9 @@ def translate_pallas(
     tkv = int(p["Tkv"])
     runtime_kv = bool(prog.meta.get("runtime_kv_len")
                       or p.get("KV_RUNTIME"))
+    paged = bool(prog.meta.get("paged") or p.get("KV_PAGED"))
+    page = int(p["PAGE_SIZE"]) if paged else None
+    mpp = page // bn if paged else None     # KV tiles per page (BN | PAGE_SIZE)
     allocs = prog.allocations()
     structure = _split(prog)
     out_name = prog.outputs[0]
@@ -132,194 +157,299 @@ def translate_pallas(
     in_dtype = _JDTYPE[allocs[prog.inputs[0]].dtype]
     dv = prog.resolve(allocs[out_name].shape[1])
     mla = "C" in prog.inputs
-    spec = prog.meta.get("spec")
-    causal = any(
-        isinstance(s, ComputeOp) and s.op == "mask_causal" for s in prog.walk())
     lane = int(p.get("LANE", 128))
     q_off = int(p.get("QOFF", 0))
+    causal = any(
+        isinstance(s, ComputeOp) and s.op == "mask_causal" for s in prog.walk())
 
     # ---- the generated kernel body -----------------------------------------
-    def kernel(*refs):
-        kv_ref = None
-        if runtime_kv:
-            kv_ref, *refs = refs
-        in_refs = refs[: len(prog.inputs)]
-        o_ref = refs[len(prog.inputs)]
-        acc_ref, m_ref, l_ref = refs[len(prog.inputs) + 1:]
-        qi = pl.program_id(1)
-        ki = pl.program_id(2)
-        # this grid step's cache length: the (1, 1) SMEM tile the BlockSpec
-        # indexed to this batch row (Copy g->SMEM of the scalar operand)
-        kv_len = kv_ref[0, 0] if runtime_kv else None
+    def make_kernel(hq: int):
+        """``hq`` (q-heads per batch row) maps grid dim 0 back to the batch
+        row for the per-row scalar operands; only the paged path needs it."""
 
-        @pl.when(ki == 0)
-        def _init():
-            acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
-            m_ref[...] = jnp.full(m_ref.shape, semantics.NEG_INF, m_ref.dtype)
-            l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
+        def kernel(*refs):
+            kv_len = None
+            if paged:
+                # scalar-prefetch tier: full (B,) lens + (B, Tp) table in
+                # SMEM; the table is consumed by the BlockSpec index maps
+                lens_ref, _table_ref, *refs = refs
+                kv_len = lens_ref[pl.program_id(0) // hq]
+            elif runtime_kv:
+                # the (1, 1) SMEM tile the BlockSpec indexed to this row
+                kv_ref, *refs = refs
+                kv_len = kv_ref[0, 0]
+            in_refs = refs[: len(prog.inputs)]
+            o_ref = refs[len(prog.inputs)]
+            acc_ref, m_ref, l_ref = refs[len(prog.inputs) + 1:]
+            qi = pl.program_id(1)
+            ki = pl.program_id(2)
 
-        env: dict = {}
-        for nm, ref in zip(prog.inputs, in_refs):
-            env[nm + "__ref"] = ref
+            @pl.when(ki == 0)
+            def _init():
+                acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+                m_ref[...] = jnp.full(m_ref.shape, semantics.NEG_INF,
+                                      m_ref.dtype)
+                l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
 
-        def q_pos():
-            rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
-            return qi * bm + rows
+            env: dict = {}
+            for nm, ref in zip(prog.inputs, in_refs):
+                env[nm + "__ref"] = ref
 
-        def k_pos():
-            cols = jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
-            return ki * bn + cols
+            def q_pos():
+                rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+                return qi * bm + rows
 
-        def run_stmt(s, phase: str):
-            if isinstance(s, Allocate):
-                return
-            if isinstance(s, Copy):
-                nm = base_name(s.name)
-                if s.src is MemSpace.GLOBAL:
-                    # Copy g->s: the BlockSpec already staged the tile into
-                    # VMEM; materialise it into the trace environment.
-                    ref = env[nm + "__ref"]
-                    env[nm] = ref[...].reshape(ref.shape[-2:])
-                elif s.dst is MemSpace.GLOBAL:
-                    val = env[nm].astype(out_dtype)
-                    o_ref[...] = val.reshape(o_ref.shape)
-                return
-            if isinstance(s, Reshape):
-                # mma_C -> mma_A: f32 accumulator tile re-declared as an
-                # input-dtype MXU operand tile.
-                env[base_name(s.name)] = env[base_name(s.name)].astype(in_dtype)
-                return
-            if isinstance(s, ComputeGEMM):
-                a = env[base_name(s.a.name)]
-                b = env[base_name(s.b.name)]
-                if s.a.transposed:
-                    a = a.T
-                if s.b.transposed:
-                    b = b.T
-                r = jnp.dot(a, b, preferred_element_type=jnp.float32)
-                nm = base_name(s.out)
-                if s.accumulate:
-                    acc_ref[...] += r
+            def k_pos():
+                # logical KV positions: the paged gather restores logical
+                # order inside the tile, so ki * bn is correct there too
+                cols = jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+                return ki * bn + cols
+
+            def run_stmt(s, phase: str):
+                if isinstance(s, Allocate):
+                    return
+                if isinstance(s, Copy):
+                    nm = base_name(s.name)
+                    if s.src is MemSpace.GLOBAL:
+                        # Copy g->s: the BlockSpec already staged the tile
+                        # into VMEM; materialise it into the trace env.
+                        ref = env[nm + "__ref"]
+                        env[nm] = ref[...].reshape(ref.shape[-2:])
+                    elif s.dst is MemSpace.GLOBAL:
+                        val = env[nm].astype(out_dtype)
+                        o_ref[...] = val.reshape(o_ref.shape)
+                    return
+                if isinstance(s, Reshape):
+                    # mma_C -> mma_A: f32 accumulator tile re-declared as an
+                    # input-dtype MXU operand tile.
+                    env[base_name(s.name)] = \
+                        env[base_name(s.name)].astype(in_dtype)
+                    return
+                if isinstance(s, ComputeGEMM):
+                    a = env[base_name(s.a.name)]
+                    b = env[base_name(s.b.name)]
+                    if s.a.transposed:
+                        a = a.T
+                    if s.b.transposed:
+                        b = b.T
+                    r = jnp.dot(a, b, preferred_element_type=jnp.float32)
+                    nm = base_name(s.out)
+                    if s.accumulate:
+                        acc_ref[...] += r
+                    else:
+                        env[nm] = r
+                    return
+                if isinstance(s, ComputeOp):
+                    run_op(s)
+                    return
+                raise TranslateError(f"unsupported statement {s!r} in {phase}")
+
+            def run_op(s: ComputeOp):
+                op = s.op
+                if op == "scale":
+                    env[base_name(s.out)] = semantics.scale(
+                        env[base_name(s.args[0])], float(p[s.args[1]]))
+                elif op == "mask_causal":
+                    nm = base_name(s.args[0])
+                    env[nm] = semantics.mask_causal(
+                        env[nm], q_pos(), k_pos(), q_off)
+                elif op == "mask_window":
+                    nm = base_name(s.args[0])
+                    env[nm] = semantics.mask_window(
+                        env[nm], q_pos(), k_pos(), int(p["W"]), q_off)
+                elif op == "online_softmax":
+                    scores = env[base_name(s.args[0])]
+                    if runtime_kv:
+                        # runtime bounds mask: the true cache length (≤ the
+                        # compiled capacity, which the padding honours)
+                        scores = semantics.mask_bounds(scores, k_pos(),
+                                                       kv_len)
+                    elif tkv * bn != n_real:
+                        scores = semantics.mask_bounds(scores, k_pos(),
+                                                       n_real)
+                    pmat, m_new, l_new, acc_new = semantics.online_softmax(
+                        scores, m_ref[...], l_ref[...], acc_ref[...])
+                    m_ref[...] = m_new
+                    l_ref[...] = l_new
+                    acc_ref[...] = acc_new
+                    env[base_name(s.out)] = pmat
+                elif op == "slice":
+                    src = env[base_name(s.args[0])]
+                    lo, hi = prog.resolve(s.args[1]), prog.resolve(s.args[2])
+                    env[base_name(s.out)] = src[:, lo:hi]
+                elif op == "divide":
+                    env[base_name(s.out)] = semantics.divide(
+                        acc_ref[...], l_ref[...])
+                elif op == "cast":
+                    env[base_name(s.out)] = \
+                        env[base_name(s.args[0])].astype(out_dtype)
                 else:
-                    env[nm] = r
-                return
-            if isinstance(s, ComputeOp):
-                run_op(s)
-                return
-            raise TranslateError(f"unsupported statement {s!r} in {phase}")
+                    raise TranslateError(f"unsupported TL op {op!r}")
 
-        def run_op(s: ComputeOp):
-            op = s.op
-            if op == "scale":
-                env[base_name(s.out)] = semantics.scale(
-                    env[base_name(s.args[0])], float(p[s.args[1]]))
-            elif op == "mask_causal":
-                nm = base_name(s.args[0])
-                env[nm] = semantics.mask_causal(
-                    env[nm], q_pos(), k_pos(), q_off)
-            elif op == "mask_window":
-                nm = base_name(s.args[0])
-                env[nm] = semantics.mask_window(
-                    env[nm], q_pos(), k_pos(), int(p["W"]), q_off)
-            elif op == "online_softmax":
-                scores = env[base_name(s.args[0])]
-                if runtime_kv:
-                    # runtime bounds mask: the true cache length (≤ the
-                    # compiled capacity, which the padding already honours)
-                    scores = semantics.mask_bounds(scores, k_pos(), kv_len)
-                elif tkv * bn != n_real:
-                    scores = semantics.mask_bounds(scores, k_pos(), n_real)
-                pmat, m_new, l_new, acc_new = semantics.online_softmax(
-                    scores, m_ref[...], l_ref[...], acc_ref[...])
-                m_ref[...] = m_new
-                l_ref[...] = l_new
-                acc_ref[...] = acc_new
-                env[base_name(s.out)] = pmat
-            elif op == "slice":
-                src = env[base_name(s.args[0])]
-                lo, hi = prog.resolve(s.args[1]), prog.resolve(s.args[2])
-                env[base_name(s.out)] = src[:, lo:hi]
-            elif op == "divide":
-                env[base_name(s.out)] = semantics.divide(
-                    acc_ref[...], l_ref[...])
-            elif op == "cast":
-                env[base_name(s.out)] = env[base_name(s.args[0])].astype(out_dtype)
+            for s in structure.prologue:
+                run_stmt(s, "prologue")
+
+            # KV-loop body.  With a causal mask, tiles strictly above the
+            # diagonal contribute nothing; with a sliding window, neither do
+            # tiles entirely below it — predicate the whole body away
+            # (compute skip; the DMA still ran, see EXPERIMENTS.md §Perf).
+            window = p.get("W")
+            live = None
+            if causal and causal_block_skip:
+                live = ki * bn <= qi * bm + (bm - 1) + q_off
+            if window is not None and causal_block_skip:
+                lo = (ki + 1) * bn - 1 > qi * bm + q_off - int(window)
+                live = lo if live is None else (live & lo)
+            if runtime_kv:
+                # KV blocks entirely past the runtime length contribute
+                # nothing: skip them so a short cache in a large bucket pays
+                # for the blocks it uses, not the bucket capacity
+                rt = ki * bn < kv_len
+                live = rt if live is None else (live & rt)
+            if live is not None:
+                @pl.when(live)
+                def _body():
+                    for s in structure.loop.body:
+                        run_stmt(s, "loop")
             else:
-                raise TranslateError(f"unsupported TL op {op!r}")
-
-        for s in structure.prologue:
-            run_stmt(s, "prologue")
-
-        # KV-loop body.  With a causal mask, tiles strictly above the
-        # diagonal contribute nothing; with a sliding window, neither do
-        # tiles entirely below it — predicate the whole body away
-        # (compute skip; the DMA still ran, see EXPERIMENTS.md §Perf).
-        window = p.get("W")
-        live = None
-        if causal and causal_block_skip:
-            live = ki * bn <= qi * bm + (bm - 1) + q_off
-        if window is not None and causal_block_skip:
-            lo = (ki + 1) * bn - 1 > qi * bm + q_off - int(window)
-            live = lo if live is None else (live & lo)
-        if runtime_kv:
-            # KV blocks entirely past the runtime length contribute nothing:
-            # skip them so a short cache in a large bucket pays for the
-            # blocks it uses, not the bucket capacity
-            rt = ki * bn < kv_len
-            live = rt if live is None else (live & rt)
-        if live is not None:
-            @pl.when(live)
-            def _body():
                 for s in structure.loop.body:
                     run_stmt(s, "loop")
-        else:
-            for s in structure.loop.body:
-                run_stmt(s, "loop")
 
-        @pl.when(ki == tkv - 1)
-        def _epilogue():
-            for s in structure.epilogue:
-                run_stmt(s, "epilogue")
+            @pl.when(ki == tkv - 1)
+            def _epilogue():
+                for s in structure.epilogue:
+                    run_stmt(s, "epilogue")
+
+        return kernel
 
     # ---- BlockSpecs from the TL Copy statements ------------------------------
     def build(*operands):
-        kv_len_arg = None
-        if runtime_kv:
+        kv_len_arg = table_arg = None
+        if paged:
+            kv_len_arg, table_arg, *operands = operands
+        elif runtime_kv:
             kv_len_arg, *operands = operands
         q, *kv = operands
         bsz, hq, m, dqk = q.shape
         if m % bm:
             raise ValueError(f"q rows {m} not a multiple of BM={bm}")
         tq = m // bm
+
+        if paged:
+            table = jnp.asarray(table_arg, jnp.int32)
+            if table.ndim != 2 or table.shape[0] != bsz:
+                raise ValueError(f"block table must be (B={bsz}, Tp), got "
+                                 f"{table.shape}")
+            if table.shape[1] * mpp != tkv:
+                raise ValueError(
+                    f"block table covers {table.shape[1]} pages = "
+                    f"{table.shape[1] * page} tokens; the compiled capacity "
+                    f"is N={n_real} ({tkv} KV tiles)")
+
+            # paged index maps receive the scalar-prefetch refs; logical KV
+            # tile ki lives in page table[b, ki // mpp] at tile ki % mpp
+            def kv_page(table_ref, b, ki):
+                return table_ref[b, ki // mpp]
+
         if mla:
             (c,) = kv
-            if c.shape[1] % bn:
-                raise ValueError(f"kv rows {c.shape[1]} not a multiple of BN={bn}")
             hkv = 1
-            in_specs = [
-                pl.BlockSpec((1, 1, bm, dqk),
-                             lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
-                pl.BlockSpec((1, bn, dqk),
-                             lambda bh, qi, ki: (bh // hq, ki, 0)),
-            ]
+            if paged:
+                if c.shape[-2] != page:
+                    raise ValueError(f"latent pool page axis {c.shape[-2]} "
+                                     f"!= PAGE_SIZE={page}")
+                in_specs = [
+                    pl.BlockSpec((1, 1, bm, dqk),
+                                 lambda bh, qi, ki, lens, tbl:
+                                 (bh // hq, bh % hq, qi, 0)),
+                    pl.BlockSpec((1, bn, dqk),
+                                 lambda bh, qi, ki, lens, tbl:
+                                 (kv_page(tbl, bh // hq, ki), ki % mpp, 0)),
+                ]
+            else:
+                if c.shape[1] % bn:
+                    raise ValueError(
+                        f"kv rows {c.shape[1]} not a multiple of BN={bn}")
+                in_specs = [
+                    pl.BlockSpec((1, 1, bm, dqk),
+                                 lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
+                    pl.BlockSpec((1, bn, dqk),
+                                 lambda bh, qi, ki: (bh // hq, ki, 0)),
+                ]
             args = (q, c)
         else:
             k, v = kv
-            if k.shape[2] % bn:
-                raise ValueError(f"kv rows {k.shape[2]} not a multiple of BN={bn}")
-            hkv = k.shape[1]
-            qpk = hq // hkv
-            in_specs = [
-                pl.BlockSpec((1, 1, bm, dqk),
-                             lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
-                pl.BlockSpec((1, 1, bn, dqk),
-                             lambda bh, qi, ki:
-                             (bh // hq, (bh % hq) // qpk, ki, 0)),
-                pl.BlockSpec((1, 1, bn, v.shape[-1]),
-                             lambda bh, qi, ki:
-                             (bh // hq, (bh % hq) // qpk, ki, 0)),
-            ]
+            if paged:
+                hkv = k.shape[1]
+                qpk = hq // hkv
+                if k.shape[-2] != page:
+                    raise ValueError(f"KV pool page axis {k.shape[-2]} != "
+                                     f"PAGE_SIZE={page}")
+                in_specs = [
+                    pl.BlockSpec((1, 1, bm, dqk),
+                                 lambda bh, qi, ki, lens, tbl:
+                                 (bh // hq, bh % hq, qi, 0)),
+                    pl.BlockSpec((1, 1, bn, dqk),
+                                 lambda bh, qi, ki, lens, tbl:
+                                 (kv_page(tbl, bh // hq, ki),
+                                  (bh % hq) // qpk, ki % mpp, 0)),
+                    pl.BlockSpec((1, 1, bn, v.shape[-1]),
+                                 lambda bh, qi, ki, lens, tbl:
+                                 (kv_page(tbl, bh // hq, ki),
+                                  (bh % hq) // qpk, ki % mpp, 0)),
+                ]
+            else:
+                if k.shape[2] % bn:
+                    raise ValueError(
+                        f"kv rows {k.shape[2]} not a multiple of BN={bn}")
+                hkv = k.shape[1]
+                qpk = hq // hkv
+                in_specs = [
+                    pl.BlockSpec((1, 1, bm, dqk),
+                                 lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
+                    pl.BlockSpec((1, 1, bn, dqk),
+                                 lambda bh, qi, ki:
+                                 (bh // hq, (bh % hq) // qpk, ki, 0)),
+                    pl.BlockSpec((1, 1, bn, v.shape[-1]),
+                                 lambda bh, qi, ki:
+                                 (bh // hq, (bh % hq) // qpk, ki, 0)),
+                ]
             args = (q, k, v)
+
+        grid = (bsz * hq, tq, tkv)
+        scratch = [
+            pltpu.VMEM((bm, dv), jnp.float32),
+            pltpu.VMEM((bm, lane), jnp.float32),
+            pltpu.VMEM((bm, lane), jnp.float32),
+        ]
+        kwargs = {}
+        cp = _compiler_params(("parallel", "parallel", "arbitrary"))
+        if cp is not None and not interpret:
+            kwargs["compiler_params"] = cp
+        out_shape = jax.ShapeDtypeStruct((bsz, hq, m, dv), out_dtype)
+
+        if paged:
+            lens = jnp.asarray(kv_len_arg, jnp.int32).reshape(-1)
+            lens = jnp.broadcast_to(lens, (bsz,))
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=grid,
+                in_specs=in_specs,
+                out_specs=pl.BlockSpec(
+                    (1, 1, bm, dv),
+                    lambda bh, qi, ki, lens, tbl:
+                    (bh // hq, bh % hq, qi, 0)),
+                scratch_shapes=scratch,
+            )
+            call = pl.pallas_call(
+                make_kernel(hq),
+                grid_spec=grid_spec,
+                out_shape=out_shape,
+                interpret=interpret,
+                debug=debug,
+                **kwargs,
+            )
+            return call(lens, table, *args)
 
         if runtime_kv:
             # scalar operand: (B, 1) int32 in SMEM, one row per batch —
@@ -331,24 +461,14 @@ def translate_pallas(
                 memory_space=pltpu.SMEM))
             args = (lens,) + args
 
-        grid = (bsz * hq, tq, tkv)
         out_spec = pl.BlockSpec(
             (1, 1, bm, dv), lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0))
-        scratch = [
-            pltpu.VMEM((bm, dv), jnp.float32),
-            pltpu.VMEM((bm, lane), jnp.float32),
-            pltpu.VMEM((bm, lane), jnp.float32),
-        ]
-        kwargs = {}
-        cp = _compiler_params(("parallel", "parallel", "arbitrary"))
-        if cp is not None and not interpret:
-            kwargs["compiler_params"] = cp
         call = pl.pallas_call(
-            kernel,
+            make_kernel(hq),
             grid=grid,
             in_specs=in_specs,
             out_specs=out_spec,
-            out_shape=jax.ShapeDtypeStruct((bsz, hq, m, dv), out_dtype),
+            out_shape=out_shape,
             scratch_shapes=scratch,
             interpret=interpret,
             debug=debug,
@@ -359,4 +479,6 @@ def translate_pallas(
     build.program = prog
     build.block_config = (bm, bn)
     build.runtime_kv_len = runtime_kv
+    build.paged = paged
+    build.page_size = page
     return build

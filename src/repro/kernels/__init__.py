@@ -8,4 +8,6 @@ from .ops import (  # noqa: F401
     flash_decode,
     mla_attention,
     mla_decode,
+    paged_flash_decode,
+    paged_mla_decode,
 )

@@ -15,7 +15,15 @@ bucket capacity and the true cache length is a scalar kernel operand
 whose cache fits the bucket — the serving engine compiles O(log max_len)
 kernels total instead of one per step.
 
-Batched wrappers: :func:`repro.kernels.ops.flash_decode` / ``mla_decode``.
+Specs with ``page_size`` set additionally take a per-row *block table*
+operand (``fn(kv_len, block_tables, q, k_pool, v_pool)``): the KV cache is
+then a pool of fixed-size pages gathered through the table by the kernel's
+BlockSpec index maps — the PagedAttention serving layout, expressed as TL
+reasoning (``PAGE_SIZE`` aligned with ``BN``) rather than a hand-patched
+kernel.
+
+Batched wrappers: :func:`repro.kernels.ops.flash_decode` / ``mla_decode`` /
+``paged_flash_decode`` / ``paged_mla_decode``.
 """
 
 from __future__ import annotations

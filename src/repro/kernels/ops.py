@@ -8,10 +8,8 @@ decisions are static so every wrapper jits cleanly.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from ..core.pipeline import cached_kernel
@@ -141,6 +139,74 @@ def flash_decode(
     lens = _norm_cache_len(cache_len, b, n)
     out = kern.pallas_fn(lens, qp, kp, vp)         # (B, Hkv, Gpad, D)
     return out[:, :, :g, :].reshape(b, hq, 1, d)
+
+
+def paged_flash_decode(
+    q, k_pool, v_pool, block_tables, *,
+    cache_len=None,
+    interpret: bool = True,
+    target: str = "v5e",
+):
+    """Single-token decode against a *paged* KV cache.
+
+    q: (B, Hq, 1, D).  ``k_pool``/``v_pool``: (P, Hkv, page_size, D) page
+    pools shared by every request; ``block_tables``: (B, Tp) int32 mapping
+    each row's logical page j to a physical pool page (entries past the
+    row's ``ceil(cache_len / page_size)`` used pages must still be valid
+    pool indices — pad with a reserved page).  ``cache_len`` follows
+    :func:`flash_decode` (int / traced scalar / per-request (B,) vector).
+
+    The kernel is compiled once per *bucket capacity* ``Tp * page_size``
+    and per page size — never per pool size P, cache length, or table
+    contents: pools and tables are runtime data, so a growing paged cache
+    inside one bucket never retraces.
+    """
+    b, hq, one, d = q.shape
+    assert one == 1, "decode takes exactly one new token"
+    hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    bucket = tbl.shape[-1] * ps
+    g = hq // hkv
+    q_rows = q.reshape(b, hkv, g, d)
+    spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
+                    head_dim=d, causal=False, mode="decode",
+                    dtype=_DT[q.dtype], page_size=ps)
+    kern = cached_kernel(spec, g, bucket, target, interpret, False)
+    qp = _pad_rows(q_rows, 2, kern.blocks.bm)
+    lens = _norm_cache_len(cache_len, b, bucket)
+    out = kern.pallas_fn(lens, tbl, qp, k_pool, v_pool)   # (B, Hkv, Gpad, D)
+    return out[:, :, :g, :].reshape(b, hq, 1, d)
+
+
+def paged_mla_decode(
+    q_latent, c_pool, block_tables, *,
+    cache_len=None,
+    interpret: bool = True,
+    target: str = "v5e",
+    kv_lora_rank: int = 512,
+    rope_head_dim: int = 64,
+):
+    """Single-token MLA decode against a paged latent cache.
+
+    ``c_pool``: (P, page_size, R+Rr) latent page pool; ``block_tables`` and
+    ``cache_len`` follow :func:`paged_flash_decode`.  Compiled per bucket
+    capacity ``Tp * page_size`` and page size only.
+    """
+    b, h, one, dq = q_latent.shape
+    assert one == 1
+    ps = c_pool.shape[1]
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    bucket = tbl.shape[-1] * ps
+    spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=False,
+                        mode="decode", dtype=_DT[q_latent.dtype],
+                        page_size=ps)
+    kern = cached_kernel(spec, h, bucket, target, interpret, False)
+    # heads -> rows: (B, H, 1, Dq) -> (B, 1, H, Dq)
+    q_rows = q_latent.reshape(b, 1, h, dq)
+    qp = _pad_rows(q_rows, 2, kern.blocks.bm)
+    lens = _norm_cache_len(cache_len, b, bucket)
+    out = kern.pallas_fn(lens, tbl, qp, c_pool)           # (B, 1, Hpad, R)
+    return out[:, 0, :h, :].reshape(b, h, 1, kv_lora_rank)
 
 
 def mla_decode(

@@ -6,8 +6,6 @@ backend) are tested against — slow, obvious, numerically f32.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -25,12 +25,10 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import dp_size, make_production_mesh
 from repro.models import registry, transformer
-from repro.models.config import ModelConfig
 from repro.parallel import sharding as shd
 from repro.roofline import analyze_hlo, roofline_terms
 from repro.train.optimizer import AdamWConfig

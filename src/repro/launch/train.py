@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.ckpt import CheckpointManager
 from repro.data import SyntheticTokens
-from repro.launch.mesh import dp_size, make_host_mesh
+from repro.launch.mesh import make_host_mesh
 from repro.models import registry
 from repro.parallel import sharding as shd
 from repro.train.optimizer import AdamWConfig

@@ -18,7 +18,6 @@ materialised per q-head (matters at Hq/Hkv = 16 on llama3-405b).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -35,21 +34,33 @@ from .config import ModelConfig
 
 def xla_flash(q, k, v, *, causal: bool, scale: float,
               window: Optional[int] = None, kv_valid=None,
-              chunk: int = 1024):
+              chunk: int = 1024, prechunked: bool = False):
     """Chunked online-softmax attention.  q: (B,Hq,M,D), k/v: (B,Hkv,N,Dv).
 
     ``kv_valid``: number of valid KV entries — None (all), a scalar, or a
-    per-batch-row (B,) vector (length-heterogeneous serving batches)."""
+    per-batch-row (B,) vector (length-heterogeneous serving batches).
+
+    ``prechunked``: k/v are already in the scan-operand layout
+    ``(nc, B, Hkv, chunk, D)`` — the shape a paged-cache page gather
+    produces naturally (one chunk per page), which skips materialising
+    the dense ``(B, Hkv, N, D)`` view just to re-chunk it here."""
     b, hq, m, d = q.shape
-    hkv, n = k.shape[1], k.shape[2]
+    if prechunked:
+        nc, _, hkv, chunk, dv = v.shape
+        n = nc * chunk
+        kc, vc = k, v
+    else:
+        hkv, n = k.shape[1], k.shape[2]
+        dv = v.shape[-1]
+        chunk = min(chunk, n)
+        nc = -(-n // chunk)
+        npad = nc * chunk
+        if npad != n:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, npad - n), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, npad - n), (0, 0)))
+        kc = k.reshape(b, hkv, nc, chunk, k.shape[-1]).transpose(2, 0, 1, 3, 4)
+        vc = v.reshape(b, hkv, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
     g = hq // hkv
-    dv = v.shape[-1]
-    chunk = min(chunk, n)
-    nc = -(-n // chunk)
-    npad = nc * chunk
-    if npad != n:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, npad - n), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, npad - n), (0, 0)))
     if kv_valid is None:
         kv_limit = n
     else:
@@ -58,8 +69,6 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
             kv_limit = kv_limit.reshape(b, 1, 1, 1, 1)
     q5 = q.reshape(b, hkv, g, m, d)
     q_off = kv_limit - m  # bottom-right causal alignment (last q = last key)
-    kc = k.reshape(b, hkv, nc, chunk, k.shape[-1]).transpose(2, 0, 1, 3, 4)
-    vc = v.reshape(b, hkv, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
 
     q_pos = jnp.arange(m).reshape(1, 1, 1, m, 1) + q_off
 
@@ -101,6 +110,67 @@ def naive_attention(q, k, v, *, causal, scale, window=None, kv_valid=None):
     from ..kernels import ref
     return ref.attention(q, k, v, causal=causal, window=window, scale=scale,
                          kv_valid=kv_valid).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# paged KV cache (decode)
+# --------------------------------------------------------------------------
+
+def gather_pages(pool, tables):
+    """Materialise the dense per-row cache view of a page pool.
+
+    ``pool``: (P, Hkv, ps, D) KV pool or (P, ps, D) MLA latent pool;
+    ``tables``: (B, Tp) int32 physical page per logical page.  Returns
+    (B, Hkv, Tp*ps, D) / (B, Tp*ps, D).  This is the *definition* of the
+    paged layout — the Pallas kernel's block-table gather must agree with
+    it, and the XLA/naive decode fallbacks attend through it directly.
+    """
+    g = pool[tables]                                  # (B, Tp, ...)
+    if pool.ndim == 4:
+        b, tp, hkv, ps, d = g.shape
+        return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, tp * ps, d)
+    b, tp, ps, d = g.shape
+    return g.reshape(b, tp * ps, d)
+
+
+def paged_scatter(pool, tables, pos, new):
+    """Write one new token per batch row into its pool page.
+
+    ``pool``: (P, Hkv, ps, D) or (P, ps, D); ``tables``: (B, Tmax) int32;
+    ``pos``: (B,) logical write positions (the rows' cache lengths);
+    ``new``: (B, Hkv, D) / (B, D) token values.  The page
+    ``tables[b, pos // ps]`` must already be allocated (the engine's
+    allocate-on-write step guarantees it; idle rows point at a reserved
+    dump page)."""
+    ps = pool.shape[-2]
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    pages = jnp.take_along_axis(
+        jnp.asarray(tables, jnp.int32), (pos // ps)[:, None], axis=1)[:, 0]
+    if pool.ndim == 4:
+        return pool.at[pages, :, pos % ps].set(new)
+    return pool.at[pages, pos % ps].set(new)
+
+
+def run_paged_decode(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
+                     cache_len, scale: float):
+    """Decode attention through a block table (see :func:`gather_pages`).
+
+    The Pallas kernel gathers pages inside its BlockSpec DMAs; the XLA
+    path feeds the page gather straight into the flash scan as one chunk
+    per page (``prechunked``), so neither materialises the dense
+    ``(B, Hkv, N, D)`` cache view."""
+    if cfg.attn_impl == "tl_pallas":
+        from ..kernels import ops
+        return ops.paged_flash_decode(
+            q, k_pool, v_pool, tables, cache_len=cache_len).astype(q.dtype)
+    if cfg.attn_impl == "naive":
+        return naive_attention(q, gather_pages(k_pool, tables),
+                               gather_pages(v_pool, tables),
+                               causal=False, scale=scale, kv_valid=cache_len)
+    kc = jnp.moveaxis(k_pool[tables], 1, 0)     # (tp, B, Hkv, ps, D)
+    vc = jnp.moveaxis(v_pool[tables], 1, 0)
+    return xla_flash(q, kc, vc, causal=False, scale=scale, kv_valid=cache_len,
+                     prechunked=True)
 
 
 def run_attention(q, k, v, *, cfg: ModelConfig, causal: bool,
@@ -176,13 +246,18 @@ def _cache_append(buf, new, start, axis: int):
 
 def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                cross_kv=None, causal=True, head_sharding=None,
-               kv_bucket=None):
+               kv_bucket=None, block_tables=None, page_size=None):
     """x: (B, T, d).  ``cache``: optional dict(k, v, len) for decode;
     ``cache['len']`` may be a scalar or a per-request (B,) vector.
     ``kv_bucket``: static length bucket — attention reads only the first
     ``kv_bucket`` cache entries (the update still writes the full buffer),
     so the serving engine compiles one decode step per bucket instead of
     one per cache length.
+    ``block_tables``/``page_size``: paged decode — ``cache['k']/['v']`` are
+    then (P, Hkv, page_size, D) page *pools* shared across the batch, and
+    ``block_tables`` (B, Tmax) maps logical to physical pages; the new
+    token is scattered into its row's current page and attention gathers
+    through the first ``kv_bucket // page_size`` table columns.
     ``cross_kv``: (B, P, vision_d) patch embeddings for cross-attention.
     ``head_sharding``: PartitionSpec for (B, H, T, D) tensors — pins the
     q/o head dim to the 'model' axis so GSPMD never resolves the attention
@@ -203,7 +278,25 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
         k = layers.apply_rope(k, positions, cfg.rope_theta)
 
     kv_valid = None
-    if cache is not None:
+    paged = cache is not None and block_tables is not None
+    if paged:
+        # paged decode: scatter the one new token into its row's current
+        # pool page, then attend through the block table
+        if page_size is None:
+            raise ValueError("block_tables given without page_size — the "
+                             "paged cache layout needs both")
+        if t != 1:
+            raise ValueError("paged KV cache is a decode contract (T == 1);"
+                             " prefill writes pages engine-side")
+        kp = paged_scatter(cache["k"], block_tables, cache["len"], k[:, :, 0])
+        vp = paged_scatter(cache["v"], block_tables, cache["len"], v[:, :, 0])
+        cache = {"k": kp, "v": vp, "len": cache["len"] + t}
+        kv_valid = cache["len"]
+        tp = ((kv_bucket if kv_bucket is not None
+               else block_tables.shape[1] * page_size) // page_size)
+        o = run_paged_decode(q, kp, vp, block_tables[:, :tp], cfg=cfg,
+                             cache_len=kv_valid, scale=hd ** -0.5)
+    elif cache is not None:
         # decode: append new kv at cache['len'] (per-request positions for
         # heterogeneous batches), attend to the prefix
         k = _cache_append(cache["k"], k, cache["len"], 2)
@@ -215,9 +308,10 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             # runtime kv_valid mask handles the tail inside the bucket
             k, v = k[:, :, :kv_bucket], v[:, :, :kv_bucket]
 
-    o = run_attention(q, k, v, cfg=cfg,
-                      causal=causal and cross_kv is None,
-                      scale=hd ** -0.5, kv_valid=kv_valid)
+    if not paged:
+        o = run_attention(q, k, v, cfg=cfg,
+                          causal=causal and cross_kv is None,
+                          scale=hd ** -0.5, kv_valid=kv_valid)
     o = _constrain(o, head_sharding)
     o = o.astype(x.dtype)
     if cfg.pad_q_heads_to > cfg.num_q_heads:
@@ -287,10 +381,11 @@ def mla_init(key, cfg: ModelConfig):
 
 def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
               causal=True, head_sharding=None, latent_sharding=None,
-              kv_bucket=None):
+              kv_bucket=None, block_tables=None, page_size=None):
     """Absorbed MLA.  The latent cache (R + Rr per token, head-independent)
     is both K and V — read once for both GEMMs (paper Table 2 workload).
-    ``cache['len']``/``kv_bucket`` follow :func:`attn_apply`."""
+    ``cache['len']``/``kv_bucket``/``block_tables``/``page_size`` follow
+    :func:`attn_apply`; the paged pool is (P, page_size, R+Rr)."""
     b, t, d = x.shape
     h, r, rr = cfg.num_q_heads, cfg.kv_lora_rank, cfg.rope_head_dim
     nope = cfg.nope_head_dim
@@ -323,7 +418,19 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
     latent = _constrain(latent, latent_sharding)
 
     kv_valid = None
-    if cache is not None:
+    paged = cache is not None and block_tables is not None
+    if paged:
+        if page_size is None:
+            raise ValueError("block_tables given without page_size — the "
+                             "paged cache layout needs both")
+        if t != 1:
+            raise ValueError("paged KV cache is a decode contract (T == 1);"
+                             " prefill writes pages engine-side")
+        pool = paged_scatter(cache["c"], block_tables, cache["len"],
+                             latent[:, 0])
+        cache = {"c": pool, "len": cache["len"] + t}
+        kv_valid = cache["len"]
+    elif cache is not None:
         latent = _cache_append(cache["c"], latent, cache["len"], 1)
         cache = {"c": latent, "len": cache["len"] + t}
         kv_valid = cache["len"]
@@ -331,7 +438,22 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             latent = latent[:, :kv_bucket]
 
     scale = (nope + rr) ** -0.5
-    if cfg.attn_impl == "tl_pallas":
+    if paged:
+        tp = ((kv_bucket if kv_bucket is not None
+               else block_tables.shape[1] * page_size) // page_size)
+        tbl = block_tables[:, :tp]
+        if cfg.attn_impl == "tl_pallas":
+            from ..kernels import ops
+            o_lat = ops.paged_mla_decode(q_full, pool, tbl,
+                                         cache_len=kv_valid,
+                                         kv_lora_rank=r, rope_head_dim=rr)
+        else:
+            # page gather straight into the flash scan: one chunk per page
+            lat = jnp.moveaxis(pool[tbl], 1, 0)[:, :, None]  # (tp,B,1,ps,R+Rr)
+            o_lat = xla_flash(q_full, lat, lat[..., :r], causal=False,
+                              scale=scale, kv_valid=kv_valid,
+                              prechunked=True)
+    elif cfg.attn_impl == "tl_pallas":
         from ..kernels import ops
         if cache is not None and t == 1:
             # runtime-length decode: one compiled kernel per latent-cache

@@ -7,8 +7,6 @@ field is static (hashable) so configs can key jit caches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:

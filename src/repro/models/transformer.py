@@ -104,12 +104,16 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                 p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
                 cache=cache, head_sharding=ctx.get("head_sharding"),
                 latent_sharding=ctx.get("latent_sharding"),
-                kv_bucket=ctx.get("kv_bucket"))
+                kv_bucket=ctx.get("kv_bucket"),
+                block_tables=ctx.get("block_tables"),
+                page_size=ctx.get("page_size"))
         else:
             o, new_cache = attention.attn_apply(
                 p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
                 cache=cache, head_sharding=ctx.get("head_sharding"),
-                kv_bucket=ctx.get("kv_bucket"))
+                kv_bucket=ctx.get("kv_bucket"),
+                block_tables=ctx.get("block_tables"),
+                page_size=ctx.get("page_size"))
         if new_cache is not None:
             new_cache.pop("len", None)  # length tracked by the caller
     elif kind == "cross":
@@ -189,6 +193,7 @@ def abstract_params(cfg: ModelConfig):
 
 def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
           caches=None, cache_len=None, positions=None, kv_bucket=None,
+          block_tables=None, page_size=None,
           act_sharding=None, ep_sharding=None, head_sharding=None,
           latent_sharding=None, moe_mesh=None):
     """tokens: (B, T) int32 -> logits (B, T, V) f32.
@@ -200,6 +205,11 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     many cache entries attention *reads*: the serving engine passes a
     power-of-two bucket ≥ cache_len+T so decode compiles once per bucket,
     not once per step.  Returns (logits, aux, new_caches).
+
+    ``block_tables`` + ``page_size``: paged decode — the attention caches
+    in ``caches`` are then page pools (see ``init_caches(paged=True)``)
+    and ``block_tables`` (B, Tmax) int32 maps each row's logical pages to
+    physical pool pages, shared by every layer.  Decode-only (T == 1).
 
     ``act_sharding``: optional PartitionSpec for the (B, T, d) residual
     stream.  Constraining it *inside* the period scan is what shards the
@@ -244,6 +254,7 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
         return {"positions": positions, "vision": vision_embeds,
                 "cache": cache, "cache_len": clen,
                 "kv_bucket": kv_bucket,
+                "block_tables": block_tables, "page_size": page_size,
                 "ep_sharding": ep_sharding,
                 "head_sharding": head_sharding,
                 "latent_sharding": latent_sharding,
@@ -327,14 +338,25 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
 # KV / state caches for decode
 # --------------------------------------------------------------------------
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
+                paged: bool = False, page_size: int = 64,
+                num_pages: Optional[int] = None):
     """Decode caches, stacked over periods for the scanned blocks.
 
     Cache entries do NOT carry the running length — pass ``cache_len`` to
     :func:`apply`; per-sub-layer dicts get it injected there.
+
+    ``paged=True`` replaces the dense per-row attention caches with page
+    *pools* shared across the batch — ``(num_pages, Hkv, page_size, D)``
+    per KV tensor (``(num_pages, page_size, R+Rr)`` for MLA) — addressed
+    through the ``block_tables`` argument of :func:`apply`.  HBM is then
+    reserved per *pool*, not per ``batch x max_len`` slot; recurrent /
+    cross-attention state stays per-row (it is O(1) in sequence length).
     """
     kinds, nper = period_spec(cfg)
     dt = layers.jdtype(cfg.dtype)
+    if paged and num_pages is None:
+        raise ValueError("paged caches need num_pages (the pool capacity)")
 
     def one_cache(kind):
         if kind == "cross":
@@ -343,6 +365,15 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
                     "v": jnp.zeros((batch, cfg.num_kv_heads,
                                     cfg.num_patches, cfg.head_dim), dt)}
         if kind in ("attn", "self"):
+            if paged:
+                if cfg.mla:
+                    return {"c": jnp.zeros(
+                        (num_pages, page_size,
+                         cfg.kv_lora_rank + cfg.rope_head_dim), dt)}
+                return {"k": jnp.zeros((num_pages, cfg.num_kv_heads,
+                                        page_size, cfg.head_dim), dt),
+                        "v": jnp.zeros((num_pages, cfg.num_kv_heads,
+                                        page_size, cfg.head_dim), dt)}
             if cfg.mla:
                 return {"c": jnp.zeros(
                     (batch, max_len, cfg.kv_lora_rank + cfg.rope_head_dim), dt)}

@@ -21,8 +21,6 @@ dims (periods) are automatically skipped.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

@@ -25,7 +25,6 @@ ignores VMEM-resident reuse between fused ops — stated in EXPERIMENTS.md).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from collections import defaultdict
 

@@ -1,1 +1,1 @@
-from .engine import ServeEngine  # noqa: F401
+from .engine import PageAllocator, ServeEngine  # noqa: F401

@@ -1,4 +1,5 @@
-"""Batched serving engine: prefill + bucketed runtime-length decode.
+"""Batched serving engine: prefill + bucketed runtime-length decode over a
+paged KV cache.
 
 The decode step is compiled per power-of-two *length bucket*, not per cache
 length: ``cache_len`` is a traced per-request vector and the bucket (the
@@ -6,6 +7,18 @@ number of cache entries attention reads) is the only static shape input.
 The jit cache is therefore bounded at O(log2(max_len)) decode entries
 instead of one per generated token — the FlashDecoding-style serving
 contract over the TL-generated runtime-length kernels.
+
+KV storage for the ``submit()``/``step()`` path is *paged*: instead of one
+dense ``(max_batch, Hkv, max_len, D)`` reservation per slot, every
+attention layer owns a pool of fixed-size pages and a :class:`PageAllocator`
+hands them out — ``ceil(len / page_size)`` pages per request, allocated on
+write as the request grows and freed when it retires.  A request therefore
+reserves HBM proportional to its *true* length, admitted-request capacity
+is bounded by total pages rather than ``max_batch x max_len``, and the
+per-row block table rides into the decode kernel as a runtime operand (the
+TL paged-decode layout).  When the pool runs dry mid-decode the youngest
+request is preempted — its pages are freed and it re-queues for
+re-prefill — so neighbours' pages are never corrupted.
 
 Prompt batches may be length-heterogeneous (attention-cache architectures):
 prompts are right-padded to a shared bucket, next-token logits are gathered
@@ -17,8 +30,10 @@ hybrids) carry state, so right-padding would contaminate it; batched
 its exact length and so serves mixed lengths for every architecture.
 
 ``submit()``/``step()`` are the continuous-batching seam: requests are
-admitted into free slots and retired between decode steps while the rest
-of the batch keeps running.
+admitted into free slots (gated on both a free slot *and* free pages) and
+retired between decode steps while the rest of the batch keeps running.
+The one-shot ``generate()`` path keeps the dense per-row cache — it admits
+a whole batch at once and drops it at the end, so paging buys it nothing.
 """
 
 from __future__ import annotations
@@ -41,6 +56,43 @@ def _bucket(n: int, lo: int = 64) -> int:
     return b
 
 
+class PageAllocator:
+    """Free-list allocator over a fixed pool of KV-cache pages.
+
+    Pages are the unit of HBM reservation: a request holds
+    ``ceil(len / page_size)`` pages, so its reservation is O(true length)
+    rather than O(max_len).  :meth:`alloc` is all-or-nothing — it returns
+    ``None`` when the pool cannot satisfy the request, and the caller
+    queues or preempts; a request is never given a partial allocation.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0:
+            raise ValueError(f"num_pages {num_pages} must be positive")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self._free = list(range(self.num_pages - 1, -1, -1))  # LIFO
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` cache entries."""
+        return -(-int(tokens) // self.page_size)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if not 0 <= p < self.num_pages or p in self._free:
+                raise ValueError(f"double/invalid free of page {p}")
+        self._free.extend(pages)
+
+
 @dataclasses.dataclass
 class GenResult:
     tokens: np.ndarray          # (B, new)
@@ -58,6 +110,7 @@ class Request:
     temperature: float = 0.0
     tokens: list[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    seq: int = -1               # admission order (preemption picks max)
 
     @property
     def done(self) -> bool:
@@ -68,14 +121,33 @@ class ServeEngine:
     """Mesh-agnostic serving engine (pass ``shardings`` upstream via params).
 
     Compile accounting: ``prefill_compiles`` / ``decode_compiles`` count jit
-    traces of the two step functions — the load-bearing guarantee is that
+    traces of the two step functions — the load-bearing guarantees are that
     ``decode_compiles`` stays ≤ the number of distinct length buckets
-    touched, independent of how many tokens are generated.
+    touched (independent of how many tokens are generated), and
+    ``prefill_compiles`` on the submit/step path stays ≤ the number of
+    distinct *prompt buckets* touched (independent of how many distinct
+    prompt lengths arrive).  Architectures where right-padding perturbs
+    numerics — recurrent state, capacity-truncated MoE routing — prefill
+    at the exact length and trace per distinct length instead.
+
+    Paging: ``paged=True`` (the default for attention-cache architectures)
+    stores the submit/step KV cache as page pools managed by a
+    :class:`PageAllocator` — see the module docstring.  ``page_size`` must
+    be a power of two ≤ the decode buckets and divide ``max_len``
+    (validated when submit/step first materialise the pools — the dense
+    ``generate()`` path has no such constraints); ``num_pages`` defaults to
+    dense-capacity parity (``max_batch * max_len / page_size`` + the
+    reserved dump page) — pass fewer to bound KV HBM below the dense
+    reservation, at the cost of queueing/preemption under pressure.
+    Architectures with no attention cache (pure RWKV/Mamba state) have
+    nothing to page; ``paged`` silently turns off there.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 2048, vision_embeds=None,
-                 decode_bucket_lo: int = 64, prompt_bucket_lo: int = 16):
+                 decode_bucket_lo: int = 64, prompt_bucket_lo: int = 16,
+                 paged: bool = True, page_size: int = 64,
+                 num_pages: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -86,6 +158,22 @@ class ServeEngine:
         # recurrent state (RWKV / Mamba hybrid) cannot be right-padded
         self.recurrent = bool(getattr(cfg, "rwkv", False)
                               or getattr(cfg, "hybrid_period", 0))
+        # right-padding is numerics-preserving only when every layer is
+        # per-token: recurrent state integrates the pad tokens, and
+        # capacity-truncated MoE routing lets pad tokens displace real ones
+        # from expert buffers — both prefill at the exact length instead
+        # (one trace per distinct prompt length, documented trade-off)
+        self._pad_safe_prefill = not (self.recurrent
+                                      or bool(getattr(cfg, "moe", False)))
+        kinds, _ = transformer.period_spec(cfg)
+        has_attn_cache = any(k in ("attn", "self") for k in kinds) or (
+            bool(cfg.first_k_dense) and not getattr(cfg, "rwkv", False))
+        self.paged = bool(paged and has_attn_cache)
+        self.page_size = int(page_size)
+        # layout constraints are checked at first *paged* use (submit/step
+        # materialise the pools) so generate()-only engines — which keep
+        # the dense per-row cache — accept any max_len, as before
+        self.num_pages = None if num_pages is None else int(num_pages)
         self.prefill_compiles = 0
         self.decode_compiles = 0
 
@@ -99,11 +187,14 @@ class ServeEngine:
         # cache_len is runtime data (a per-request vector); only the length
         # bucket — how many cache entries attention reads — is static, so
         # generating T tokens costs at most O(log2 max_len) decode traces.
-        def decode(params, tok, caches, cache_len, kv_bucket):
+        # ``tables`` is the paged path's block-table operand (None = dense).
+        def decode(params, tok, caches, cache_len, tables, kv_bucket):
             self.decode_compiles += 1           # runs once per jit trace
             logits, _, caches = transformer.apply(
                 params, tok, cfg, caches=caches, cache_len=cache_len,
-                kv_bucket=kv_bucket, vision_embeds=self.vision)
+                kv_bucket=kv_bucket, block_tables=tables,
+                page_size=self.page_size if tables is not None else None,
+                vision_embeds=self.vision)
             return logits[:, -1], caches
 
         self._prefill = jax.jit(prefill)
@@ -115,7 +206,13 @@ class ServeEngine:
         self._slot_caches = None
         self._slot_logits = None
         self._slot_lens: Optional[np.ndarray] = None
+        self._allocator: Optional[PageAllocator] = None
+        self._slot_tables: Optional[np.ndarray] = None
+        self._slot_pages: list[list[int]] = []
+        self._dump_page = 0
         self._next_uid = 0
+        self._admit_seq = 0
+        self._finished_early: list[Request] = []
         self._key = jax.random.PRNGKey(0)
 
     # ------------------------------------------------------------------
@@ -123,11 +220,15 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def _decode_bucket(self, needed: int) -> int:
-        """Smallest power-of-two bucket covering ``needed`` cache entries."""
+        """Smallest power-of-two bucket covering ``needed`` cache entries
+        (paged engines never go below one page)."""
         if needed > self.max_len:
             raise ValueError(f"cache length {needed} exceeds max_len "
                              f"{self.max_len}")
-        return min(_bucket(needed, self.decode_bucket_lo), self.max_len)
+        lo = self.decode_bucket_lo
+        if self.paged:
+            lo = max(lo, self.page_size)
+        return min(_bucket(needed, lo), self.max_len)
 
     def _sample(self, logits, temperature: float, key):
         """Returns (tokens, next_key).  The key is threaded explicitly so
@@ -152,6 +253,8 @@ class ServeEngine:
         seed decoding, and each request's cache length is tracked
         separately.  Recurrent architectures require homogeneous lengths
         here — use :meth:`submit`/:meth:`step` for mixed lengths there.
+        This one-shot path keeps the dense per-row cache (see module
+        docstring); the paged storage belongs to the submit/step loop.
         """
         if len(prompts) > self.max_batch:
             raise ValueError(f"batch {len(prompts)} > max_batch "
@@ -192,7 +295,7 @@ class ServeEngine:
             bucket = self._decode_bucket(int(lens_v.max()) + 1)
             step_logits, caches = self._decode(
                 self.params, tok[:, None].astype(jnp.int32), caches,
-                jnp.asarray(lens_v), kv_bucket=bucket)
+                jnp.asarray(lens_v), None, kv_bucket=bucket)
             lens_v = lens_v + 1
         return GenResult(tokens=out, prompt_len=lens, steps=max_new_tokens)
 
@@ -208,6 +311,18 @@ class ServeEngine:
                 "submit()/step() admit requests one at a time, but "
                 "vision_embeds are bound to the whole batch — use "
                 "generate() for vision engines")
+        if not prompt:
+            raise ValueError("empty prompt: nothing to prefill")
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt ({len(prompt)}) leaves no room to "
+                             f"decode within max_len {self.max_len}")
+        if self.paged:
+            need = self._page_allocator().pages_for(len(prompt))
+            if need > self._page_allocator().num_pages - 1:
+                raise ValueError(
+                    f"prompt needs {need} pages but the pool only has "
+                    f"{self._page_allocator().num_pages - 1} allocatable "
+                    "pages; raise num_pages")
         req = Request(uid=self._next_uid, prompt=list(prompt),
                       max_new_tokens=max_new_tokens, temperature=temperature)
         self._next_uid += 1
@@ -218,62 +333,261 @@ class ServeEngine:
     def active_requests(self) -> list[Request]:
         return [r for r in self._active if r is not None]
 
+    @property
+    def allocator(self) -> Optional[PageAllocator]:
+        """The page allocator (None until first step / for dense engines)."""
+        return self._allocator
+
+    def _page_allocator(self) -> PageAllocator:
+        self._ensure_slots()
+        return self._allocator
+
     def _ensure_slots(self):
         if self._slot_caches is None:
+            if self.paged:
+                if self.page_size & (self.page_size - 1):
+                    raise ValueError(
+                        f"page_size {self.page_size} must be a power of "
+                        "two (decode buckets are powers of two)")
+                if self.max_len % self.page_size:
+                    raise ValueError(
+                        f"max_len {self.max_len} must be a multiple of "
+                        f"page_size {self.page_size} for the paged "
+                        "submit/step path (generate() has no such "
+                        "constraint)")
+                if self.num_pages is None:
+                    # dense-capacity parity + the reserved dump page
+                    self.num_pages = self.max_batch * \
+                        (self.max_len // self.page_size) + 1
             self._active = [None] * self.max_batch
             self._slot_caches = transformer.init_caches(
-                self.cfg, self.max_batch, self.max_len)
+                self.cfg, self.max_batch, self.max_len, paged=self.paged,
+                page_size=self.page_size,
+                num_pages=self.num_pages if self.paged else None)
             self._slot_lens = np.zeros((self.max_batch,), np.int32)
             vocab = self.cfg.vocab_size
             self._slot_logits = jnp.zeros((self.max_batch, vocab),
                                           jnp.float32)
+            if self.paged:
+                self._allocator = PageAllocator(self.num_pages,
+                                                self.page_size)
+                # reserved dump page: idle slot rows' table entries point
+                # here, so their ride-along decode writes can never land in
+                # a live request's pages
+                self._dump_page = self._allocator.alloc(1)[0]
+                self._slot_tables = np.full(
+                    (self.max_batch, self.max_len // self.page_size),
+                    self._dump_page, np.int32)
+                self._slot_pages = [[] for _ in range(self.max_batch)]
 
-    def _write_slot(self, slot: int, slot_caches, logits_row):
+    # ---- paged slot storage ------------------------------------------
+
+    def _scatter_prefill(self, pool, dense, pages: list[int], plen: int,
+                         *, stacked: bool, latent: bool):
+        """Write the first ``plen`` tokens of a batch-1 dense prefill cache
+        into this request's pool ``pages`` — one scatter dispatch per leaf
+        (not per page: pool-sized copies per page would make admission
+        O(request_pages x pool_bytes)).
+
+        ``stacked``: scanned-block leaves carry a leading ``nper`` axis.
+        ``latent``: MLA pools are (P, ps, R+Rr); KV pools (P, Hkv, ps, D).
+        """
+        ps = self.page_size
+        dn = dense[:, 0] if stacked else dense[0]   # drop the batch-1 axis
+        # token axis of dn / (page, within-page) axes of the pool
+        tok_ax = (1 if latent else 2) if stacked else (0 if latent else 1)
+        page_ax = 1 if stacked else 0
+        slot_ax = page_ax + (1 if latent else 2)
+        # page-shape the true prefix: (npages, ps, rest...); the zero tail
+        # of the last page lands in freshly-allocated rows nobody reads
+        dn = jnp.moveaxis(dn, tok_ax, 0)[:plen]
+        npg = len(pages)
+        pad = npg * ps - plen
+        if pad:
+            dn = jnp.pad(dn, [(0, pad)] + [(0, 0)] * (dn.ndim - 1))
+        dn = dn.reshape(npg, ps, *dn.shape[1:])
+        pool_v = jnp.moveaxis(pool, (page_ax, slot_ax), (0, 1))
+        pool_v = pool_v.at[jnp.asarray(pages, jnp.int32)].set(
+            dn.astype(pool.dtype))
+        return jnp.moveaxis(pool_v, (0, 1), (page_ax, slot_ax))
+
+    def _write_slot(self, slot: int, slot_caches, logits_row, *,
+                    pages: Optional[list[int]] = None, plen: int = 0):
         """Scatter a batch-1 prefill result into a batch slot.
 
-        Cache layout: scanned-block leaves are (nper, B, ...), leading
-        dense-layer leaves are (B, ...) — the batch axis is 1 and 0
-        respectively."""
+        Dense layout: scanned-block leaves are (nper, B, ...), leading
+        dense-layer leaves are (B, ...) — the batch axis (1 and 0
+        respectively) is updated at ``slot``.  Paged layout: attention
+        leaves are page pools, so the prefix is written into this request's
+        ``pages`` instead; recurrent/cross state stays per-row.
+        """
+        kinds, _ = transformer.period_spec(self.cfg)
+
         def upd(axis):
             return lambda big, small: jax.lax.dynamic_update_index_in_dim(
                 big, jnp.squeeze(small, axis), slot, axis)
-        new = {"blocks": jax.tree.map(upd(1), self._slot_caches["blocks"],
-                                      slot_caches["blocks"])}
+
+        new_blocks = {}
+        for s, kind in enumerate(kinds):
+            key = f"sub{s}"
+            if key not in self._slot_caches["blocks"]:
+                continue
+            big = self._slot_caches["blocks"][key]
+            small = slot_caches["blocks"][key]
+            if self.paged and kind in ("attn", "self"):
+                new_blocks[key] = {
+                    kk: self._scatter_prefill(big[kk], small[kk], pages,
+                                              plen, stacked=True,
+                                              latent=(kk == "c"))
+                    for kk in big}
+            else:
+                new_blocks[key] = jax.tree.map(upd(1), big, small)
+        new = {"blocks": new_blocks}
         if "first" in self._slot_caches:
-            new["first"] = jax.tree.map(upd(0), self._slot_caches["first"],
-                                        slot_caches["first"])
+            fk = "attn" if not getattr(self.cfg, "rwkv", False) else "rwkv"
+            firsts = []
+            for i, big in enumerate(self._slot_caches["first"]):
+                small = slot_caches["first"][i]
+                if self.paged and fk == "attn":
+                    firsts.append({
+                        kk: self._scatter_prefill(big[kk], small[kk], pages,
+                                                  plen, stacked=False,
+                                                  latent=(kk == "c"))
+                        for kk in big})
+                else:
+                    firsts.append(jax.tree.map(upd(0), big, small))
+            new["first"] = firsts
         self._slot_caches = new
         self._slot_logits = self._slot_logits.at[slot].set(logits_row)
+
+    def _preempt(self, req: Request):
+        """Evict an active request: free its pages, requeue it at the front
+        for re-prefill (prompt + generated so far — no tokens are lost)."""
+        slot = req.slot
+        self._allocator.free(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self._slot_tables[slot, :] = self._dump_page
+        self._slot_lens[slot] = 0
+        self._active[slot] = None
+        req.slot = -1
+        self._queue.insert(0, req)
+
+    def _grow_pages(self):
+        """Allocate-on-write: every active row whose next token starts a
+        fresh page gets one before the decode writes it.  On pool
+        exhaustion the youngest-admitted request is preempted (possibly the
+        one asking) until the write can proceed."""
+        for r in list(self.active_requests):
+            if self._active[r.slot] is not r:
+                continue                     # preempted by an earlier row
+            pos = int(self._slot_lens[r.slot])
+            if pos % self.page_size:
+                continue                     # current page still has room
+            pidx = pos // self.page_size
+            while self._active[r.slot] is r:
+                got = self._allocator.alloc(1)
+                if got is not None:
+                    self._slot_pages[r.slot].append(got[0])
+                    self._slot_tables[r.slot, pidx] = got[0]
+                    break
+                before = self._allocator.free_pages
+                self._preempt(max(self.active_requests,
+                                  key=lambda a: a.seq))
+                if self._allocator.free_pages == before:  # pragma: no cover
+                    raise RuntimeError("page pool deadlock: preemption "
+                                       "freed no pages")
+
+    # ---- admission ----------------------------------------------------
 
     def _admit(self):
         free = [i for i, r in enumerate(self._active) if r is None]
         while free and self._queue:
-            req = self._queue.pop(0)
+            req = self._queue[0]
+            # a preempted request re-prefills prompt + generated tokens,
+            # so admission cost is its full current context
+            ctx = req.prompt + req.tokens
+            plen = len(ctx)
+            if plen >= self.max_len:
+                # a preempted request re-admitted with a full cache has
+                # nowhere to write its next token: retire it truncated at
+                # max_len — the same rule step() applies to live slots
+                self._queue.pop(0)
+                self._finished_early.append(req)
+                continue
+            pages = None
+            if self.paged:
+                need = self._allocator.pages_for(plen)
+                if need > self._allocator.num_pages - 1:
+                    # a preempted request whose context outgrew the whole
+                    # pool can never be re-admitted: retire it truncated at
+                    # pool capacity (the analogue of max_len truncation) so
+                    # it cannot livelock itself and everything queued
+                    # behind it
+                    self._queue.pop(0)
+                    self._finished_early.append(req)
+                    continue
+                pages = self._allocator.alloc(need)
+                if pages is None:
+                    break   # head-of-line waits for pages (FIFO preserved)
+            self._queue.pop(0)
             slot = free.pop(0)
-            # exact-length batch-1 prefill (recurrent-safe), scattered into
-            # the slot row; jit cache grows per distinct prompt length —
-            # round to a prompt bucket upstream if that matters
-            toks = jnp.asarray([req.prompt], jnp.int32)
-            caches = transformer.init_caches(self.cfg, 1, self.max_len)
-            logits, caches = self._prefill(self.params, toks, caches)
-            self._write_slot(slot, caches, logits[0, len(req.prompt) - 1])
-            self._slot_lens[slot] = len(req.prompt)
+            # batch-1 prefill scattered into the slot row.  Prompts are
+            # right-padded to a prompt bucket so the prefill jit cache is
+            # bounded by O(log2 max_len) buckets, not one trace per
+            # distinct prompt length — except where padding perturbs the
+            # numerics (recurrent state / capacity-truncated MoE), which
+            # prefill at the exact length.
+            pad_to = min(_bucket(plen, self.prompt_bucket_lo),
+                         self.max_len) if self._pad_safe_prefill else plen
+            toks = np.zeros((1, pad_to), np.int32)
+            toks[0, :plen] = ctx
+            # paged slots copy only the true prefix out of the prefill
+            # cache, so the transient buffer can be bucket-sized; dense
+            # slots are written by a whole-buffer row update
+            cap = pad_to if self.paged else self.max_len
+            caches = transformer.init_caches(self.cfg, 1, cap)
+            logits, caches = self._prefill(self.params, jnp.asarray(toks),
+                                           caches)
+            if self.paged:
+                self._slot_tables[slot, :] = self._dump_page
+                self._slot_tables[slot, :len(pages)] = pages
+                self._slot_pages[slot] = pages
+            self._write_slot(slot, caches, logits[0, plen - 1],
+                             pages=pages, plen=plen)
+            self._slot_lens[slot] = plen
             req.slot = slot
+            req.seq = self._admit_seq
+            self._admit_seq += 1
             self._active[slot] = req
+
+    def _retire(self, r: Request):
+        """Release a request's slot and pages (it keeps its tokens)."""
+        self._active[r.slot] = None
+        self._slot_lens[r.slot] = 0
+        if self.paged:
+            self._allocator.free(self._slot_pages[r.slot])
+            self._slot_pages[r.slot] = []
+            self._slot_tables[r.slot, :] = self._dump_page
 
     def step(self) -> list[Request]:
         """One decode step for every active slot.
 
-        Admits queued requests into free slots first, then decodes one
-        token for the whole batch (idle slots ride along masked at length
-        1), and retires finished requests.  Returns the requests that
-        finished this step.
+        Admits queued requests into free slots first (paged engines also
+        require pages for the prompt), samples one token per active
+        request, retires the ones that are now done (their final token
+        never needs to enter the cache), then decodes the rest as a batch
+        (idle slots ride along masked at length 0, writing into the
+        reserved dump page) and retires requests that hit max_len.
+        Returns the requests that finished this step — including any that
+        were truncated at pool capacity after a preemption.
         """
         self._ensure_slots()
         self._admit()
+        finished = self._finished_early
+        self._finished_early = []
         active = self.active_requests
         if not active:
-            return []
+            return finished
 
         # one batched greedy pass for the whole slot matrix; only
         # temperature>0 requests pay for an individual sampling dispatch
@@ -289,31 +603,73 @@ class ServeEngine:
             r.tokens.append(tok)
             toks[r.slot] = tok
 
-        # idle slots decode a dummy token against a length-1 cache window;
-        # their rows are garbage and never read back
+        # retire requests their last sampled token just completed — before
+        # page growth and decode, so a done request can neither be
+        # preempted (which would re-generate past its limit) nor pay for a
+        # cache write nobody will read
+        still = []
+        for r in active:
+            if r.done:
+                finished.append(r)
+                self._retire(r)
+            else:
+                still.append(r)
+        active = still
+        if not active:
+            return finished
+
+        if self.paged:
+            # allocate this step's write pages; may preempt (the preempted
+            # request keeps its sampled token and re-prefills later)
+            self._grow_pages()
+            active = self.active_requests
+            if not active:
+                return finished
+
+        # idle slots decode a dummy token against a length-0 cache window;
+        # their rows are garbage and never read back (paged: written to the
+        # dump page)
         lens = self._slot_lens.copy()
         needed = int(lens.max()) + 1
         bucket = self._decode_bucket(needed)
+        tables = None
+        if self.paged:
+            tables = jnp.asarray(
+                self._slot_tables[:, :bucket // self.page_size])
         step_logits, self._slot_caches = self._decode(
             self.params, jnp.asarray(toks)[:, None], self._slot_caches,
-            jnp.asarray(lens, np.int32), kv_bucket=bucket)
+            jnp.asarray(lens, np.int32), tables, kv_bucket=bucket)
         self._slot_logits = step_logits
         for r in active:
             self._slot_lens[r.slot] += 1
 
-        finished = []
         for r in active:
-            if r.done or self._slot_lens[r.slot] + 1 > self.max_len:
+            if self._slot_lens[r.slot] + 1 > self.max_len:
                 finished.append(r)
-                self._active[r.slot] = None
-                self._slot_lens[r.slot] = 0
+                self._retire(r)
         return finished
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
-        """Drive :meth:`step` until queue and slots are empty."""
+        """Drive :meth:`step` until queue and slots are empty.
+
+        Raises ``RuntimeError`` if ``max_steps`` is exhausted while
+        requests are still queued or active — partial progress is never
+        silently dropped: the already-finished requests ride on the
+        exception as ``err.finished``, and the un-finished ones keep their
+        state on the engine (``active_requests`` / the queue), so a second
+        call resumes where this one stopped."""
         done: list[Request] = []
         for _ in range(max_steps):
             done.extend(self.step())
             if not self._queue and not self.active_requests:
-                break
-        return done
+                return done
+        pending = [r.uid for r in self._queue] \
+            + [r.uid for r in self.active_requests]
+        err = RuntimeError(
+            f"run_until_drained: {len(pending)} request(s) still pending "
+            f"after max_steps={max_steps} (uids {pending}); raise "
+            "max_steps and call again — already-finished requests are on "
+            "this exception's .finished, un-finished ones stay live on "
+            "the engine")
+        err.finished = done
+        raise err

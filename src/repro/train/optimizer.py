@@ -9,8 +9,6 @@ here: moments are upcast before use).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -1,7 +1,6 @@
 """Checkpoint fault-tolerance properties: atomic commit, integrity
 verification, keep-last-k GC, restore-with-structure-check."""
 
-import json
 import os
 
 import jax

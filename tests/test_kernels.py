@@ -1,7 +1,6 @@
 """Per-kernel allclose sweeps: TL-Pallas kernel (interpret) vs the TL-jnp
 oracle vs the closed-form reference, across shapes and dtypes."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,269 @@
+"""Paged KV-cache decode kernels: block-table gather parity with the dense
+runtime-length kernels, the jnp oracle, and the closed-form reference.
+
+The contract under test (this PR's tentpole): a paged decode program reads
+its KV cache as a pool of ``page_size``-token pages addressed through a
+per-request block table — a second runtime operand next to the cache
+length.  Whatever the physical page placement (contiguous, permuted,
+interleaved with other requests' pages), the result must be bitwise-close
+to decoding the same logical cache densely, for every head geometry and
+dtype, and the compiled-kernel count must stay bounded by the buckets
+touched.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core.pipeline import cached_kernel
+from repro.core.reason import ReasonError, reason_parameters
+from repro.core.sketch import generate_sketch
+from repro.core.spec import AttnSpec
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 1e-2}
+
+_DT = {"bfloat16": "bf16", "float32": "f32"}
+
+
+def _paged_case(rng, *, b, hq, hkv, d, ps, tp, pool_pages, dtype):
+    """Random pool + per-row permuted, non-contiguous block tables, plus
+    the dense per-row view the table encodes."""
+    kp = jnp.asarray(rng.standard_normal((pool_pages, hkv, ps, d)) * 0.5,
+                     dtype)
+    vp = jnp.asarray(rng.standard_normal((pool_pages, hkv, ps, d)) * 0.5,
+                     dtype)
+    # every row draws tp distinct pages from the pool, in arbitrary order;
+    # rows may not overlap (each page belongs to one request)
+    perm = rng.permutation(pool_pages)[: b * tp]
+    tables = np.asarray(perm, np.int32).reshape(b, tp)
+    kd = jnp.stack([jnp.concatenate([kp[t] for t in row], axis=1)
+                    for row in tables])
+    vd = jnp.stack([jnp.concatenate([vp[t] for t in row], axis=1)
+                    for row in tables])
+    return kp, vp, tables, kd, vd
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_paged_flash_decode_matches_dense_and_ref(seed):
+    """Paged decode == dense runtime-length decode == closed-form reference
+    for random (page_size, bucket, geometry, dtype, cache_len) draws."""
+    rng = np.random.default_rng(seed)
+    hq, hkv = [(4, 4), (8, 2), (4, 1), (6, 3)][seed % 4]   # MHA/GQA/MQA
+    d = int(rng.choice([32, 64]))
+    ps = int(rng.choice([16, 32, 64]))
+    tp = int(rng.choice([1, 2, 4]))
+    dtype = [jnp.float32, jnp.float32, jnp.bfloat16][seed % 3]
+    b = 2
+    bucket = ps * tp
+    cache_len = int(rng.integers(1, bucket + 1))
+    kp, vp, tables, kd, vd = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, tp=tp,
+        pool_pages=b * tp + 3, dtype=dtype)
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)) * 0.5, dtype)
+
+    out = ops.paged_flash_decode(q, kp, vp, tables, cache_len=cache_len)
+    dense = ops.flash_decode(q, kd, vd, cache_len=cache_len)
+    # paged clamps BN to the page size, so the online softmax may visit the
+    # cache in different block partitions than dense — identical logical
+    # values, f32-tight, one-ulp-loose at bf16 output precision
+    tol = 1e-6 if dtype == jnp.float32 else TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(dense, np.float32),
+        atol=tol, rtol=tol,
+        err_msg=f"paged != dense: ps={ps} tp={tp} Hq={hq} Hkv={hkv}")
+    gold = ref.decode_attention(q, kd, vd, cache_len=cache_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(gold, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+        err_msg=f"paged != ref: ps={ps} tp={tp} len={cache_len}")
+
+
+def test_paged_decode_per_row_lengths_and_tables():
+    """Heterogeneous batches: each row has its own cache length AND its own
+    scattered pages; table entries past a row's used pages point anywhere
+    valid (the engine's dump page) and must not leak into the output."""
+    rng = np.random.default_rng(42)
+    b, hq, hkv, d, ps, tp = 3, 8, 2, 32, 32, 4
+    kp, vp, tables, kd, vd = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, tp=tp,
+        pool_pages=b * tp + 1, dtype=jnp.float32)
+    # rows use 1, 57 and 128 entries; redirect the unused tail of row 0's
+    # table at row 2's pages — a live neighbour — to prove masking wins
+    tables = tables.copy()
+    tables[0, 1:] = tables[2, 1:]
+    lens = np.asarray([1, 57, 128], np.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)) * 0.5, jnp.float32)
+    out = ops.paged_flash_decode(q, kp, vp, tables,
+                                 cache_len=jnp.asarray(lens))
+    kd = jnp.stack([jnp.concatenate([kp[t] for t in row], axis=1)
+                    for row in tables])
+    vd = jnp.stack([jnp.concatenate([vp[t] for t in row], axis=1)
+                    for row in tables])
+    for i, cl in enumerate(lens):
+        gold = ref.decode_attention(q[i:i + 1], kd[i:i + 1], vd[i:i + 1],
+                                    cache_len=int(cl))
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]),
+                                   np.asarray(gold, np.float32),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"row {i}")
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_paged_pallas_vs_jnp_oracle(seed):
+    """Backend agreement on the same paged TL program: the Pallas kernel's
+    block-table gather and the jnp oracle's must be the same function."""
+    rng = np.random.default_rng(100 + seed)
+    hq, hkv, d, ps, tp = 8, 2, 32, 32, 2
+    bucket = ps * tp
+    dtype = jnp.float32 if seed % 2 else jnp.bfloat16
+    b = 2
+    kp, vp, tables, _, _ = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, tp=tp,
+        pool_pages=b * tp + 2, dtype=dtype)
+    lens = np.asarray([int(rng.integers(1, bucket + 1)) for _ in range(b)],
+                      np.int32)
+    g = hq // hkv
+    spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
+                    head_dim=d, causal=False, mode="decode",
+                    dtype=_DT[jnp.dtype(dtype).name], page_size=ps)
+    kern = cached_kernel(spec, g, bucket, "v5e", True, False)
+    assert kern.pallas_fn.paged and kern.oracle_fn.paged
+    assert kern.pallas_fn.page_size == kern.oracle_fn.page_size == ps
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, d)) * 0.5, dtype)
+    qp = ops._pad_rows(q, 2, kern.blocks.bm)
+    out = kern.pallas_fn(jnp.asarray(lens), jnp.asarray(tables), qp, kp, vp)
+    for bi in range(b):
+        for h in range(hkv):
+            o = kern.oracle_fn(int(lens[bi]), tables[bi], qp[bi, h],
+                               kp[:, h].reshape(-1, d),
+                               vp[:, h].reshape(-1, d))[:g]
+            np.testing.assert_allclose(
+                np.asarray(out[bi, h, :g], np.float32),
+                np.asarray(o, np.float32),
+                atol=TOL[dtype], rtol=TOL[dtype],
+                err_msg=f"row {bi} kv-head {h}")
+
+
+# --------------------------------------------------------------------------
+# MLA
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_paged_mla_decode_matches_dense_and_ref(seed):
+    rng = np.random.default_rng(200 + seed)
+    h = int(rng.choice([4, 8]))
+    r, rr = int(rng.choice([32, 64])), 16
+    ps = int(rng.choice([16, 32]))
+    tp = int(rng.choice([2, 4]))
+    bucket = ps * tp
+    dtype = jnp.float32 if seed % 3 else jnp.bfloat16
+    b = 2
+    pool_pages = b * tp + 2
+    cp = jnp.asarray(rng.standard_normal((pool_pages, ps, r + rr)) * 0.3,
+                     dtype)
+    tables = np.asarray(rng.permutation(pool_pages)[: b * tp],
+                        np.int32).reshape(b, tp)
+    lens = np.asarray([int(rng.integers(1, bucket + 1)) for _ in range(b)],
+                      np.int32)
+    ql = jnp.asarray(rng.standard_normal((b, h, 1, r + rr)) * 0.3, dtype)
+
+    out = ops.paged_mla_decode(ql, cp, tables, cache_len=jnp.asarray(lens),
+                               kv_lora_rank=r, rope_head_dim=rr)
+    cd = jnp.stack([jnp.concatenate([cp[t] for t in row], axis=0)
+                    for row in tables])
+    dense = ops.mla_decode(ql, cd, cache_len=jnp.asarray(lens),
+                           kv_lora_rank=r, rope_head_dim=rr)
+    tol = 1e-6 if dtype == jnp.float32 else TOL[dtype]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(dense, np.float32),
+                               atol=tol, rtol=tol)
+    gold = ref.mla_attention(ql, cd, rope_dim=rr, scale=(128 + rr) ** -0.5,
+                             causal=False, kv_valid=jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(gold, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype],
+                               err_msg=f"ps={ps} tp={tp}")
+
+
+# --------------------------------------------------------------------------
+# spec / reasoning invariants + bounded compilation
+# --------------------------------------------------------------------------
+
+def test_paged_spec_validation():
+    with pytest.raises(ValueError, match="decode"):
+        AttnSpec.mha(4, 32, mode="full", page_size=64)
+    with pytest.raises(ValueError, match="multiple"):
+        AttnSpec.mha(4, 32, mode="decode", causal=False, page_size=12)
+
+
+def test_reasoning_aligns_bn_to_page_size():
+    """The page size is a reasoned block parameter: BN must divide it so a
+    KV tile never straddles a page boundary."""
+    spec = AttnSpec(variant="mha", num_q_heads=2, num_kv_heads=2,
+                    head_dim=32, causal=False, mode="decode", page_size=32)
+    prog = reason_parameters(generate_sketch(spec), spec, q_len=8,
+                             kv_len=128)
+    assert prog.params["KV_PAGED"] == 1
+    assert prog.params["PAGE_SIZE"] == 32
+    bn = prog.params["BN"]
+    assert 32 % bn == 0, f"BN={bn} does not divide page_size=32"
+    assert prog.params["Tkv"] * bn == 128
+    # capacity must be whole pages
+    with pytest.raises(ReasonError, match="multiple"):
+        reason_parameters(generate_sketch(spec), spec, q_len=8, kv_len=100)
+
+
+def test_one_kernel_per_paged_bucket():
+    """Every (cache_len, table permutation) within one capacity reuses one
+    generated kernel — pools and tables are runtime data."""
+    rng = np.random.default_rng(7)
+    b, hq, hkv, d, ps, tp = 1, 4, 2, 32, 32, 2
+    kp = jnp.asarray(rng.standard_normal((6, hkv, ps, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((6, hkv, ps, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)), jnp.float32)
+    ops.paged_flash_decode(q, kp, vp, np.asarray([[0, 1]], np.int32),
+                           cache_len=1)          # warm the capacity
+    before = cached_kernel.cache_info()
+    for cl in range(2, 30):
+        tbl = np.asarray([rng.permutation(6)[:tp]], np.int32)
+        ops.paged_flash_decode(q, kp, vp, tbl, cache_len=cl)
+    after = cached_kernel.cache_info()
+    assert after.misses == before.misses, (
+        "paged decode retraced the TL pipeline for runtime data (cache "
+        "length / block table) inside an already-compiled bucket")
+    assert after.hits > before.hits
+
+
+# --------------------------------------------------------------------------
+# hypothesis variants (skip when the test extra is not installed)
+# --------------------------------------------------------------------------
+
+@given(
+    ps=st.sampled_from([16, 32, 64]),
+    tp=st.sampled_from([1, 2, 4]),
+    frac=st.floats(0.0, 1.0),
+    geom=st.sampled_from([(4, 4), (8, 2), (4, 1), (6, 3)]),
+    use_bf16=st.booleans(),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=15, deadline=None)
+def test_paged_decode_property(ps, tp, frac, geom, use_bf16, seed):
+    """For any page geometry, cache fraction, head geometry and dtype:
+    paged == dense on the logical cache the table encodes."""
+    rng = np.random.default_rng(seed)
+    hq, hkv = geom
+    d = 32
+    dtype = jnp.bfloat16 if use_bf16 else jnp.float32
+    bucket = ps * tp
+    cache_len = max(1, min(bucket, int(round(frac * bucket))))
+    kp, vp, tables, kd, vd = _paged_case(
+        rng, b=1, hq=hq, hkv=hkv, d=d, ps=ps, tp=tp, pool_pages=tp + 2,
+        dtype=dtype)
+    q = jnp.asarray(rng.standard_normal((1, hq, 1, d)) * 0.5, dtype)
+    out = ops.paged_flash_decode(q, kp, vp, tables, cache_len=cache_len)
+    dense = ops.flash_decode(q, kd, vd, cache_len=cache_len)
+    tol = 1e-6 if dtype == jnp.float32 else TOL[dtype]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(dense, np.float32),
+                               atol=tol, rtol=tol)

@@ -4,7 +4,6 @@ multipliers) is validated against analytically known workloads."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.roofline import analyze_hlo
 from repro.roofline.report import model_flops

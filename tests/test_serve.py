@@ -1,4 +1,5 @@
-"""Serving engine: generation consistency and bucketing."""
+"""Serving engine: generation consistency, bucketing, and the paged KV
+cache (PageAllocator slot storage, exhaustion queueing, preemption)."""
 
 import jax
 import jax.numpy as jnp
@@ -7,7 +8,14 @@ import pytest
 
 from repro.models import registry
 from repro.models import transformer as T
-from repro.serve import ServeEngine
+from repro.serve import PageAllocator, ServeEngine
+
+
+def _solo_tokens(cfg, params, prompt, n, max_len=128):
+    """Reference: what this prompt generates alone on a dense engine."""
+    solo = ServeEngine(cfg, params, max_batch=1, max_len=max_len,
+                      paged=False)
+    return solo.generate([prompt], max_new_tokens=n).tokens[0]
 
 
 @pytest.mark.parametrize("arch", ["deepseek-7b", "rwkv6-1.6b",
@@ -124,7 +132,259 @@ def test_continuous_batching_step_api():
 
     # per-request greedy tokens match solo generation
     for uid, prompt, n in ((0, p1, 5), (1, p2, 3), (2, p3, 4)):
-        solo = ServeEngine(cfg, params, max_batch=1, max_len=128)
-        ref_toks = solo.generate([prompt], max_new_tokens=n).tokens[0]
+        ref_toks = _solo_tokens(cfg, params, prompt, n)
         np.testing.assert_array_equal(np.asarray(by_uid[uid]), ref_toks,
                                       err_msg=f"request {uid}")
+
+
+# --------------------------------------------------------------------------
+# paged KV cache (PR 2 tentpole) + serve edge cases
+# --------------------------------------------------------------------------
+
+def test_page_allocator_unit():
+    a = PageAllocator(num_pages=4, page_size=16)
+    assert a.free_pages == 4
+    assert a.pages_for(1) == 1 and a.pages_for(16) == 1
+    assert a.pages_for(17) == 2 and a.pages_for(64) == 4
+    got = a.alloc(3)
+    assert len(got) == 3 and a.free_pages == 1
+    assert a.alloc(2) is None, "partial allocation must be refused"
+    assert a.free_pages == 1, "a refused alloc must not leak pages"
+    a.free(got)
+    assert a.free_pages == 4
+    with pytest.raises(ValueError, match="free"):
+        a.free([got[0]])            # double free
+    with pytest.raises(ValueError, match="free"):
+        a.free([99])                # out of range
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "deepseek-v2-lite-16b"])
+def test_paged_engine_matches_dense_solo(arch):
+    """The paged slot storage (pools + block tables + allocator) must be
+    invisible to the tokens — GQA and MLA (latent pool + first_k_dense
+    layers outside the scan) both gather back exactly the dense cache."""
+    cfg = registry.get_reduced(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in (7, 19)]
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=128,
+                         page_size=16)
+    assert engine.paged
+    for p in prompts:
+        engine.submit(p, max_new_tokens=6)
+    done = engine.run_until_drained()
+    by_uid = {r.uid: r.tokens for r in done}
+    for uid, prompt in enumerate(prompts):
+        ref_toks = _solo_tokens(cfg, params, prompt, 6)
+        np.testing.assert_array_equal(np.asarray(by_uid[uid]), ref_toks,
+                                      err_msg=f"request {uid}")
+    # drained: every page is back in the pool (minus the reserved dump page)
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_slot_retirement_at_max_len_capacity():
+    """A request hitting the cache capacity retires early (truncated, not
+    wedged) and releases its slot AND pages for the next request."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    long_p = list(map(int, rng.integers(0, cfg.vocab_size, 60)))
+    short_p = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+    engine = ServeEngine(cfg, params, max_batch=1, max_len=64, page_size=16)
+    engine.submit(long_p, max_new_tokens=50)   # only 4 fit: 60 -> 64
+    engine.submit(short_p, max_new_tokens=3)   # queued behind it
+    done = engine.run_until_drained()
+    by_uid = {r.uid: r.tokens for r in done}
+    assert len(by_uid[0]) == 4, "capacity must truncate, not hang"
+    np.testing.assert_array_equal(
+        np.asarray(by_uid[0]), _solo_tokens(cfg, params, long_p, 4, 128))
+    np.testing.assert_array_equal(
+        np.asarray(by_uid[1]), _solo_tokens(cfg, params, short_p, 3))
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_submit_after_drain_reuses_slots_and_pages():
+    """A drained engine is not a dead engine: freed slots and pages serve
+    the next wave, with no stale cache/table state leaking across."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    wave1 = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+             for n in (9, 13)]
+    wave2 = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+             for n in (21, 5)]
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=128,
+                         page_size=16)
+    for p in wave1:
+        engine.submit(p, max_new_tokens=4)
+    engine.run_until_drained()
+    free_between = engine.allocator.free_pages
+    assert free_between == engine.num_pages - 1
+    uids = [engine.submit(p, max_new_tokens=4) for p in wave2]
+    done = engine.run_until_drained()
+    by_uid = {r.uid: r.tokens for r in done}
+    for uid, prompt in zip(uids, wave2):
+        np.testing.assert_array_equal(
+            np.asarray(by_uid[uid]), _solo_tokens(cfg, params, prompt, 4),
+            err_msg=f"request {uid} after drain")
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_page_pool_exhaustion_queues_not_corrupts():
+    """When the pool cannot hold another prompt, the request queues (FIFO)
+    instead of being admitted — and the neighbour already decoding keeps
+    producing exactly its solo tokens (no page is stolen or overwritten)."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(8)
+    p1 = list(map(int, rng.integers(0, cfg.vocab_size, 20)))
+    p2 = list(map(int, rng.integers(0, cfg.vocab_size, 20)))
+    # 2 allocatable pages (3 minus dump) of 16 tokens: each prompt needs 2
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                         page_size=16, num_pages=3)
+    engine.submit(p1, max_new_tokens=4)
+    engine.submit(p2, max_new_tokens=4)
+    engine.step()
+    assert len(engine.active_requests) == 1, "second request must queue"
+    assert len(engine._queue) == 1
+    done = engine.run_until_drained()
+    by_uid = {r.uid: r.tokens for r in done}
+    for uid, prompt in ((0, p1), (1, p2)):
+        np.testing.assert_array_equal(
+            np.asarray(by_uid[uid]), _solo_tokens(cfg, params, prompt, 4,
+                                                  max_len=64),
+            err_msg=f"request {uid}")
+    # a prompt that can never fit is rejected up front, not deadlocked
+    with pytest.raises(ValueError, match="pages"):
+        engine.submit(list(range(40)), max_new_tokens=1)
+
+
+def test_mid_decode_growth_preempts_youngest():
+    """Allocate-on-write under pressure: when a growing cache needs a page
+    and none is free, the youngest request is preempted and re-prefilled —
+    both requests still produce exactly their solo tokens."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(9)
+    pa = list(map(int, rng.integers(0, cfg.vocab_size, 16)))  # exactly 1 page
+    pb = list(map(int, rng.integers(0, cfg.vocab_size, 16)))
+    # 4 allocatable pages; each request grows 16 -> 36 tokens = 3 pages,
+    # so both cannot finish resident at once
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                         page_size=16, num_pages=5)
+    engine.submit(pa, max_new_tokens=20)
+    engine.submit(pb, max_new_tokens=20)
+    done = engine.run_until_drained()
+    by_uid = {r.uid: r.tokens for r in done}
+    for uid, prompt in ((0, pa), (1, pb)):
+        np.testing.assert_array_equal(
+            np.asarray(by_uid[uid]),
+            _solo_tokens(cfg, params, prompt, 20, max_len=64),
+            err_msg=f"request {uid}")
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_prefill_compiles_bounded_by_prompt_buckets():
+    """Satellite: _admit pads prompts to prompt_bucket_lo buckets, so N
+    distinct prompt lengths cost at most #buckets prefill traces — not N."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(10)
+    lens = [3, 5, 6, 7, 9, 11, 13, 15]          # all inside the 16-bucket
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=128,
+                         prompt_bucket_lo=16)
+    for n in lens:
+        engine.submit(list(map(int, rng.integers(0, cfg.vocab_size, n))),
+                      max_new_tokens=2)
+    engine.run_until_drained()
+    assert engine.prefill_compiles == 1, (
+        f"{len(lens)} distinct prompt lengths must share one 16-bucket "
+        f"prefill trace, saw {engine.prefill_compiles}")
+    # a longer prompt crosses into the 32-bucket: exactly one more trace
+    engine.submit(list(map(int, rng.integers(0, cfg.vocab_size, 20))),
+                  max_new_tokens=2)
+    engine.run_until_drained()
+    assert engine.prefill_compiles == 2
+
+
+def test_growth_past_pool_capacity_truncates_not_livelocks():
+    """A request whose context outgrows the entire pool cannot be
+    re-admitted after self-preemption; it must retire truncated at pool
+    capacity (like max_len truncation) instead of spinning forever and
+    starving the queue behind it."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    big = list(map(int, rng.integers(0, cfg.vocab_size, 20)))   # 2 pages
+    small = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+    # 2 allocatable pages of 16: `big` can hold at most 32 context tokens
+    engine = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                         page_size=16, num_pages=3)
+    engine.submit(big, max_new_tokens=20)
+    engine.submit(small, max_new_tokens=3)
+    done = engine.run_until_drained(max_steps=200)
+    by_uid = {r.uid: r.tokens for r in done}
+    assert len(by_uid[0]) == 13, (
+        f"pool capacity (32 ctx) should truncate at 13 tokens, got "
+        f"{len(by_uid[0])}")
+    np.testing.assert_array_equal(
+        np.asarray(by_uid[0]),
+        _solo_tokens(cfg, params, big, 13, max_len=64))
+    np.testing.assert_array_equal(
+        np.asarray(by_uid[1]),
+        _solo_tokens(cfg, params, small, 3, max_len=64))
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_preempted_at_max_len_retires_cleanly():
+    """A request preempted with its context already at max_len must retire
+    truncated on re-admission, not crash _grow_pages indexing past the
+    block table (and the surviving request must be unaffected)."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(12)
+    p_old = list(map(int, rng.integers(0, cfg.vocab_size, 15)))
+    p_young = list(map(int, rng.integers(0, cfg.vocab_size, 30)))
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                         page_size=16, num_pages=4)
+    engine.submit(p_old, max_new_tokens=30)
+    engine.submit(p_young, max_new_tokens=30)
+    done = engine.run_until_drained(max_steps=200)
+    by_uid = {r.uid: r.tokens for r in done}
+    assert sorted(by_uid) == [0, 1]
+    for uid, prompt in ((0, p_old), (1, p_young)):
+        n = len(by_uid[uid])
+        assert 0 < n <= 32 - len(prompt)
+        np.testing.assert_array_equal(
+            np.asarray(by_uid[uid]),
+            _solo_tokens(cfg, params, prompt, n, max_len=64),
+            err_msg=f"request {uid}")
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_generate_only_engine_accepts_any_max_len():
+    """The paged layout constraints (page_size | max_len) bind the
+    submit/step pools, not the dense one-shot generate() path."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, max_batch=1, max_len=100)  # not % 64
+    res = engine.generate([[1, 2, 3, 4]], max_new_tokens=3)
+    assert res.tokens.shape == (1, 3)
+    with pytest.raises(ValueError, match="multiple"):
+        engine.submit([1, 2, 3], max_new_tokens=2)  # paged path validates
+
+
+def test_run_until_drained_raises_on_max_steps():
+    """Satellite: exhausting max_steps with live requests must raise, not
+    silently return partial results."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, max_batch=1, max_len=64)
+    engine.submit([1, 2, 3], max_new_tokens=40)
+    with pytest.raises(RuntimeError, match="still pending"):
+        engine.run_until_drained(max_steps=3)
+    # the request is intact and a follow-up drain completes it
+    assert len(engine.active_requests) == 1
+    done = engine.run_until_drained()
+    assert len(done) == 1 and len(done[0].tokens) == 40

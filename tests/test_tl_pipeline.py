@@ -7,7 +7,7 @@ from hypothesis_compat import given, settings, st
 from repro.core import autotune
 from repro.core.llm import DeterministicBackend, OneStageBackend
 from repro.core.reason import BlockConfig, reason_parameters, _vmem_bytes
-from repro.core.sketch import generate_sketch, generate_sketch_text
+from repro.core.sketch import generate_sketch
 from repro.core.spec import AttnSpec
 from repro.core.target import get_target
 from repro.core.tl.parser import parse
