@@ -122,7 +122,13 @@ def reason_parameters(
     # as a scalar operand at call time.  One compiled kernel then serves
     # every cache length within the bucket — the FlashDecoding-style
     # serving contract — instead of one kernel per decode step.
-    runtime_kv = spec.mode == "decode"
+    #
+    # Chunked-prefill programs are runtime-length too, but the scalar is
+    # the *history length*: M chunk tokens sit at runtime positions
+    # hist..hist+M-1, so the causal diagonal is shifted by the scalar and
+    # one compiled kernel serves every chunk position within the bucket.
+    chunked = spec.mode == "chunk_prefill"
+    runtime_kv = spec.mode == "decode" or chunked
 
     # Paged decode layout: the KV cache is a pool of PAGE_SIZE-token pages
     # and a second runtime operand — the per-request block table — selects
@@ -152,13 +158,17 @@ def reason_parameters(
         "BN": blocks.bn,
         "Tkv": -(-kv_len // blocks.bn),
         "LANE": LANE,
-        "QOFF": kv_len - q_len,  # bottom-right causal alignment (FA-2)
+        # bottom-right causal alignment (FA-2); chunked prefill aligns at
+        # run time instead — the history-length scalar IS the offset
+        "QOFF": 0 if chunked else kv_len - q_len,
         "sm_scale": spec.scale(),
     }
     if runtime_kv:
         # marker visible to both translation backends (and to the TL text
         # round-trip, which re-derives params through this function)
         params["KV_RUNTIME"] = 1
+    if chunked:
+        params["KV_CHUNK"] = 1
     if paged:
         params["KV_PAGED"] = 1
         params["PAGE_SIZE"] = spec.page_size
@@ -255,6 +265,6 @@ def reason_parameters(
         outputs=("O",),
         meta={**sketch.meta, "stage": "code", "blocks": blocks,
               "target": target.name, "runtime_kv_len": runtime_kv,
-              "paged": paged},
+              "paged": paged, "chunk_prefill": chunked},
     )
     return prog

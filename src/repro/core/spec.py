@@ -15,7 +15,7 @@ import math
 from typing import Optional
 
 VARIANTS = ("mha", "gqa", "mqa", "mla")
-MODES = ("full", "decode")
+MODES = ("full", "decode", "chunk_prefill")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,17 +26,23 @@ class AttnSpec:
     head_dim: int = 128
     causal: bool = True
     window: Optional[int] = None       # sliding-window size (None = global)
-    mode: str = "full"                 # "full" (train/prefill) | "decode"
+    mode: str = "full"     # "full" (train/prefill) | "decode" | "chunk_prefill"
     # MLA-only geometry (DeepSeek-V2/V3): latent KV rank + decoupled RoPE dim
     kv_lora_rank: int = 512
     rope_head_dim: int = 64
     dtype: str = "bf16"
     sm_scale: Optional[float] = None
-    # Paged KV layout (decode only).  None = dense runtime-length cache;
-    # an int = the cache is a pool of fixed-size pages of this many tokens,
-    # gathered through a per-request block table at run time.  The page
-    # size is a *reasoned* block parameter: the reasoning stage aligns the
-    # KV block size BN to it so every KV tile lives inside one page.
+    # Paged KV layout (decode / chunk_prefill).  None = dense runtime-length
+    # cache; an int = the cache is a pool of fixed-size pages of this many
+    # tokens, gathered through a per-request block table at run time.  The
+    # page size is a *reasoned* block parameter: the reasoning stage aligns
+    # the KV block size BN to it so every KV tile lives inside one page.
+    #
+    # ``chunk_prefill`` is the paged prefill mode: M tokens of one prompt
+    # chunk attend causally to the block-table pages already written (the
+    # prefix history) plus the chunk itself.  The history length is a
+    # *runtime* per-row scalar — it shifts the causal diagonal — so one
+    # compiled kernel serves every chunk position within a bucket.
     page_size: Optional[int] = None
 
     def __post_init__(self):
@@ -44,11 +50,23 @@ class AttnSpec:
             raise ValueError(f"variant {self.variant!r} not in {VARIANTS}")
         if self.mode not in MODES:
             raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.mode == "chunk_prefill":
+            if self.page_size is None:
+                raise ValueError("chunk_prefill is the paged prefill mode "
+                                 "— it needs page_size (dense prefill uses "
+                                 "mode='full')")
+            if not self.causal:
+                raise ValueError("chunk_prefill is causal by construction "
+                                 "(the chunk extends the sequence)")
+            if self.window is not None:
+                raise ValueError("chunk_prefill does not support sliding "
+                                 "windows (the runtime history offset and "
+                                 "the static window mask would conflict)")
         if self.page_size is not None:
-            if self.mode != "decode":
-                raise ValueError("paged KV layout (page_size) is a decode-"
-                                 "cache contract; prefill/train specs are "
-                                 "dense")
+            if self.mode not in ("decode", "chunk_prefill"):
+                raise ValueError("paged KV layout (page_size) is a decode/"
+                                 "chunk-prefill cache contract; train "
+                                 "specs are dense")
             if self.page_size <= 0 or self.page_size % 8:
                 raise ValueError(f"page_size {self.page_size} must be a "
                                  "positive multiple of the f32 sublane (8)")

@@ -58,6 +58,12 @@ def translate_jnp(prog: TLProgram):
     page indices (a *concrete* sequence: the oracle runs the loop in
     Python).  Logical KV tile ``i`` is read from physical rows
     ``table[i*BN // PAGE_SIZE] * PAGE_SIZE + (i*BN) % PAGE_SIZE`` onward.
+
+    Chunked-prefill programs (``meta['chunk_prefill']``) reuse the paged
+    signature with the leading scalar reinterpreted as the *history*
+    length: the M q rows sit at positions ``hist .. hist+M-1`` and the
+    causal mask offset is the runtime scalar (mirroring the Pallas
+    backend's runtime-shifted diagonal; no separate bounds mask).
     """
 
     p = dict(prog.params)
@@ -66,6 +72,7 @@ def translate_jnp(prog: TLProgram):
     tkv = int(p["Tkv"])
     runtime_kv = bool(prog.meta.get("runtime_kv_len") or p.get("KV_RUNTIME"))
     paged = bool(prog.meta.get("paged") or p.get("KV_PAGED"))
+    chunked = bool(prog.meta.get("chunk_prefill") or p.get("KV_CHUNK"))
     page = int(p["PAGE_SIZE"]) if paged else None
     mpp = page // bn if paged else None    # KV tiles per page
     n_pad = tkv * bn
@@ -169,9 +176,11 @@ def translate_jnp(prog: TLProgram):
                     src, float(p[s.args[1]]))
             elif op == "mask_causal":
                 nm = base_name(s.args[0])
+                # chunked prefill: runtime history length shifts the
+                # diagonal (mirrors the Pallas backend exactly)
+                off = kv_limit if chunked else int(p.get("QOFF", 0))
                 state[nm] = semantics.mask_causal(
-                    state[nm], q_positions(), k_positions(i),
-                    int(p.get("QOFF", 0)))
+                    state[nm], q_positions(), k_positions(i), off)
             elif op == "mask_window":
                 nm = base_name(s.args[0])
                 state[nm] = semantics.mask_window(
@@ -180,10 +189,12 @@ def translate_jnp(prog: TLProgram):
             elif op == "online_softmax":
                 s_nm, m_nm, l_nm, acc_nm = [base_name(a) for a in s.args]
                 scores = state[s_nm]
-                if kv_limit is not None:   # runtime cache length
+                if kv_limit is not None and not chunked:
+                    # runtime cache length (chunked prefill's scalar is the
+                    # history length — the shifted causal mask bounds it)
                     scores = semantics.mask_bounds(
                         scores, k_positions(i), kv_limit)
-                elif n_pad != n_real:  # padded KV columns
+                elif kv_limit is None and n_pad != n_real:  # padded KV cols
                     scores = semantics.mask_bounds(
                         scores, k_positions(i), n_real)
                 pmat, state[m_nm], state[l_nm], state[acc_nm] = \
@@ -252,4 +263,5 @@ def translate_jnp(prog: TLProgram):
     fn.runtime_kv_len = runtime_kv
     fn.paged = paged
     fn.page_size = page
+    fn.chunk_prefill = chunked
     return fn

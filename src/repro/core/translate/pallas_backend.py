@@ -139,6 +139,17 @@ def translate_pallas(
     table is shorter than ``N // PAGE_SIZE`` pages must pad with any valid
     page index (the engine uses a reserved dump page): the gather still
     issues the DMA, the runtime length mask discards the values.
+
+    Chunked-prefill programs (``meta['chunk_prefill']`` — paged) reuse the
+    paged signature, but the leading scalar is the per-row *history*
+    length: the M q rows are one prompt chunk sitting at runtime positions
+    ``hist .. hist+M-1`` of the paged cache (whose pages, including the
+    chunk's own tokens, must be written before the call).  The causal mask
+    becomes ``k_pos <= hist + q_pos`` — the runtime scalar shifts the
+    diagonal, so it doubles as the bounds mask for real rows — and the
+    dead-block skip keeps KV tiles past ``hist + (qi+1)*BM - 1`` off the
+    MXU.  Rows past the chunk's true length are garbage (finite, never
+    NaN) and the caller discards them.
     """
 
     p = dict(prog.params)
@@ -148,6 +159,9 @@ def translate_pallas(
     runtime_kv = bool(prog.meta.get("runtime_kv_len")
                       or p.get("KV_RUNTIME"))
     paged = bool(prog.meta.get("paged") or p.get("KV_PAGED"))
+    # chunked prefill: the runtime scalar is the *history* length and the
+    # causal diagonal is shifted by it at run time (see the docstring)
+    chunked = bool(prog.meta.get("chunk_prefill") or p.get("KV_CHUNK"))
     page = int(p["PAGE_SIZE"]) if paged else None
     mpp = page // bn if paged else None     # KV tiles per page (BN | PAGE_SIZE)
     allocs = prog.allocations()
@@ -251,20 +265,27 @@ def translate_pallas(
                         env[base_name(s.args[0])], float(p[s.args[1]]))
                 elif op == "mask_causal":
                     nm = base_name(s.args[0])
+                    # chunked prefill: the causal offset is the runtime
+                    # history length (chunk row i sits at position hist+i),
+                    # not the static QOFF
                     env[nm] = semantics.mask_causal(
-                        env[nm], q_pos(), k_pos(), q_off)
+                        env[nm], q_pos(), k_pos(),
+                        kv_len if chunked else q_off)
                 elif op == "mask_window":
                     nm = base_name(s.args[0])
                     env[nm] = semantics.mask_window(
                         env[nm], q_pos(), k_pos(), int(p["W"]), q_off)
                 elif op == "online_softmax":
                     scores = env[base_name(s.args[0])]
-                    if runtime_kv:
+                    if runtime_kv and not chunked:
                         # runtime bounds mask: the true cache length (≤ the
-                        # compiled capacity, which the padding honours)
+                        # compiled capacity, which the padding honours).
+                        # Chunked prefill needs none: its scalar is the
+                        # history length and the shifted causal mask
+                        # already bounds every real row at hist + row.
                         scores = semantics.mask_bounds(scores, k_pos(),
                                                        kv_len)
-                    elif tkv * bn != n_real:
+                    elif not runtime_kv and tkv * bn != n_real:
                         scores = semantics.mask_bounds(scores, k_pos(),
                                                        n_real)
                     pmat, m_new, l_new, acc_new = semantics.online_softmax(
@@ -295,7 +316,9 @@ def translate_pallas(
             # (compute skip; the DMA still ran, see EXPERIMENTS.md §Perf).
             window = p.get("W")
             live = None
-            if causal and causal_block_skip:
+            if causal and causal_block_skip and not chunked:
+                # static diagonal skip; chunked prefill's diagonal is
+                # runtime-shifted, handled below
                 live = ki * bn <= qi * bm + (bm - 1) + q_off
             if window is not None and causal_block_skip:
                 lo = (ki + 1) * bn - 1 > qi * bm + q_off - int(window)
@@ -303,8 +326,13 @@ def translate_pallas(
             if runtime_kv:
                 # KV blocks entirely past the runtime length contribute
                 # nothing: skip them so a short cache in a large bucket pays
-                # for the blocks it uses, not the bucket capacity
-                rt = ki * bn < kv_len
+                # for the blocks it uses, not the bucket capacity.  For
+                # chunked prefill the frontier is the runtime-shifted
+                # causal diagonal of the q tile's last row.
+                if chunked:
+                    rt = ki * bn <= kv_len + qi * bm + (bm - 1)
+                else:
+                    rt = ki * bn < kv_len
                 live = rt if live is None else (live & rt)
             if live is not None:
                 @pl.when(live)
@@ -481,4 +509,5 @@ def translate_pallas(
     build.runtime_kv_len = runtime_kv
     build.paged = paged
     build.page_size = page
+    build.chunk_prefill = chunked
     return build

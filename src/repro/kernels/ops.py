@@ -178,6 +178,67 @@ def paged_flash_decode(
     return out[:, :, :g, :].reshape(b, hq, 1, d)
 
 
+def paged_flash_prefill(
+    q, k_pool, v_pool, block_tables, *,
+    hist_len,
+    interpret: bool = True,
+    target: str = "v5e",
+):
+    """One prompt *chunk* of causal attention against a paged KV cache.
+
+    q: (B, Hq, C, D) — C chunk tokens sitting at runtime cache positions
+    ``hist_len .. hist_len + C - 1``; ``k_pool``/``v_pool``/``block_tables``
+    follow :func:`paged_flash_decode`.  The chunk's own K/V must already be
+    written into the pages (the model layer scatters before attending), so
+    row i attends causally to cache positions ``0 .. hist_len + i``.
+
+    ``hist_len`` is the number of cache entries *preceding* the chunk — a
+    python int, a traced scalar, or a per-request (B,) vector — and is
+    runtime data: the kernel is compiled once per (chunk capacity C, bucket
+    capacity ``Tp * page_size``, page size), never per chunk position, so a
+    long prompt prefilled chunk-by-chunk retraces nothing after the first
+    chunk.  Rows past the chunk's true length (a padded tail chunk) return
+    garbage the caller discards.
+    """
+    b, hq, c, d = q.shape
+    hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    bucket = tbl.shape[-1] * ps
+    spec = AttnSpec(variant=_variant(hq, hkv), num_q_heads=hq,
+                    num_kv_heads=hkv, head_dim=d, causal=True,
+                    mode="chunk_prefill", dtype=_DT[q.dtype], page_size=ps)
+    kern = cached_kernel(spec, c, bucket, target, interpret, True)
+    qp = _pad_rows(q, 2, kern.blocks.bm)
+    lens = _norm_cache_len(hist_len, b, 0)
+    out = kern.pallas_fn(lens, tbl, qp, k_pool, v_pool)
+    return out[:, :, :c, :]
+
+
+def paged_mla_prefill(
+    q_latent, c_pool, block_tables, *,
+    hist_len,
+    interpret: bool = True,
+    target: str = "v5e",
+    kv_lora_rank: int = 512,
+    rope_head_dim: int = 64,
+):
+    """One prompt chunk of causal MLA attention against a paged latent
+    cache.  q_latent: (B, H, C, R+Rr); ``c_pool``/``block_tables``/
+    ``hist_len`` follow :func:`paged_flash_prefill`."""
+    b, h, c, dq = q_latent.shape
+    ps = c_pool.shape[1]
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    bucket = tbl.shape[-1] * ps
+    spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=True,
+                        mode="chunk_prefill", dtype=_DT[q_latent.dtype],
+                        page_size=ps)
+    kern = cached_kernel(spec, c, bucket, target, interpret, True)
+    qp = _pad_rows(q_latent, 2, kern.blocks.bm)
+    lens = _norm_cache_len(hist_len, b, 0)
+    out = kern.pallas_fn(lens, tbl, qp, c_pool)
+    return out[:, :, :c, :]
+
+
 def paged_mla_decode(
     q_latent, c_pool, block_tables, *,
     cache_len=None,

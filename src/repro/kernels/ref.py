@@ -13,22 +13,29 @@ NEG_INF = -1e30
 
 
 def _mask(scores, q_len, kv_len, causal, window, kv_valid=None):
-    mq = jnp.arange(q_len)[:, None] + (kv_len - q_len)  # bottom-right align
     mk = jnp.arange(kv_len)[None, :]
-    keep = jnp.ones((q_len, kv_len), bool)
-    if causal:
-        keep &= mk <= mq
-    if window is not None:
-        keep &= mk > mq - window
-    if kv_valid is not None:
-        # scalar, or a per-batch-row (B,) vector of valid lengths (the
-        # serving engine's length-heterogeneous batches)
+    if kv_valid is None:
+        # bottom-right alignment against the buffer (the last q row sees
+        # the last key)
+        mq = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+        keep = jnp.ones((q_len, kv_len), bool)
+    else:
+        # bottom-right alignment against the *valid* length — q row i sits
+        # at absolute position kv_valid - q_len + i, matching
+        # ``xla_flash``'s ``q_off = kv_valid - M`` (the chunked-prefill /
+        # cached-prefill convention).  ``kv_valid`` may be a scalar or a
+        # per-batch-row (B,) vector (length-heterogeneous serving batches).
         kv_valid = jnp.asarray(kv_valid)
         if kv_valid.ndim == 1:
-            keep = keep[None, None] & (
-                mk[None, None] < kv_valid[:, None, None, None])
-        else:
-            keep &= mk < kv_valid
+            kv_valid = kv_valid[:, None, None, None]
+        mq = jnp.arange(q_len)[:, None] + (kv_valid - q_len)
+        keep = mk < kv_valid
+        keep = jnp.broadcast_to(keep, jnp.broadcast_shapes(
+            keep.shape, scores.shape))
+    if causal:
+        keep = keep & (mk <= mq)
+    if window is not None:
+        keep = keep & (mk > mq - window)
     return jnp.where(keep, scores, NEG_INF)
 
 

@@ -151,6 +151,54 @@ def paged_scatter(pool, tables, pos, new):
     return pool.at[pages, pos % ps].set(new)
 
 
+def paged_scatter_chunk(pool, tables, start, new):
+    """Write a whole chunk of tokens per batch row into its pool pages.
+
+    ``pool``: (P, Hkv, ps, D) or (P, ps, D); ``tables``: (B, Tmax) int32;
+    ``start``: (B,) logical positions of the chunk's first token; ``new``:
+    (B, Hkv, C, D) / (B, C, D) chunk values.  Token ``j`` of row ``b``
+    lands in page ``tables[b, (start[b]+j) // ps]`` at slot
+    ``(start[b]+j) % ps`` — every touched table entry must be a valid pool
+    index (the engine pads tables with its reserved dump page, so a padded
+    tail chunk spills harmlessly into the dump page)."""
+    ps = pool.shape[-2]
+    c = new.shape[-2]
+    start = jnp.asarray(start, jnp.int32).reshape(-1)
+    pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # (B, C)
+    pages = jnp.take_along_axis(jnp.asarray(tables, jnp.int32),
+                                pos // ps, axis=1)                  # (B, C)
+    slots = pos % ps
+    if pool.ndim == 4:
+        # advanced indices (B,C) around the Hkv slice -> (B, C, Hkv, D)
+        return pool.at[pages, :, slots].set(jnp.moveaxis(new, 1, 2))
+    return pool.at[pages, slots].set(new)
+
+
+def run_paged_prefill(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
+                      hist_len, scale: float):
+    """Chunked prefill attention through a block table: the chunk's q rows
+    attend causally to the pages already written (history + the chunk
+    itself — scatter first, then attend).  ``hist_len`` is the per-row
+    cache length *before* this chunk.  Pallas shifts the causal diagonal
+    by the runtime history inside the kernel; the XLA/naive paths feed the
+    page gather into the flash scan, whose bottom-right alignment
+    (``q_off = kv_valid - M``) lands on the same diagonal."""
+    c = q.shape[2]
+    if cfg.attn_impl == "tl_pallas":
+        from ..kernels import ops
+        return ops.paged_flash_prefill(
+            q, k_pool, v_pool, tables, hist_len=hist_len).astype(q.dtype)
+    kv_valid = jnp.asarray(hist_len).reshape(-1) + c
+    if cfg.attn_impl == "naive":
+        return naive_attention(q, gather_pages(k_pool, tables),
+                               gather_pages(v_pool, tables),
+                               causal=True, scale=scale, kv_valid=kv_valid)
+    kc = jnp.moveaxis(k_pool[tables], 1, 0)     # (tp, B, Hkv, ps, D)
+    vc = jnp.moveaxis(v_pool[tables], 1, 0)
+    return xla_flash(q, kc, vc, causal=True, scale=scale, kv_valid=kv_valid,
+                     prechunked=True)
+
+
 def run_paged_decode(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
                      cache_len, scale: float):
     """Decode attention through a block table (see :func:`gather_pages`).
@@ -253,11 +301,14 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
     ``kv_bucket`` cache entries (the update still writes the full buffer),
     so the serving engine compiles one decode step per bucket instead of
     one per cache length.
-    ``block_tables``/``page_size``: paged decode — ``cache['k']/['v']`` are
+    ``block_tables``/``page_size``: paged cache — ``cache['k']/['v']`` are
     then (P, Hkv, page_size, D) page *pools* shared across the batch, and
     ``block_tables`` (B, Tmax) maps logical to physical pages; the new
-    token is scattered into its row's current page and attention gathers
-    through the first ``kv_bucket // page_size`` table columns.
+    token(s) are scattered into the rows' pages and attention gathers
+    through the first ``kv_bucket // page_size`` table columns.  T == 1 is
+    paged decode; T > 1 is one chunk of chunked prefill (causal against
+    history + the chunk, the cache growing page-by-page instead of through
+    a dense prefill buffer).
     ``cross_kv``: (B, P, vision_d) patch embeddings for cross-attention.
     ``head_sharding``: PartitionSpec for (B, H, T, D) tensors — pins the
     q/o head dim to the 'model' axis so GSPMD never resolves the attention
@@ -280,22 +331,29 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
     kv_valid = None
     paged = cache is not None and block_tables is not None
     if paged:
-        # paged decode: scatter the one new token into its row's current
-        # pool page, then attend through the block table
+        # paged cache: scatter the new token(s) into the rows' pool pages,
+        # then attend through the block table.  T == 1 is decode; T > 1 is
+        # one chunk of chunked prefill (the chunk's K/V land in the pages
+        # first, then the chunk attends causally to history + itself).
         if page_size is None:
             raise ValueError("block_tables given without page_size — the "
                              "paged cache layout needs both")
-        if t != 1:
-            raise ValueError("paged KV cache is a decode contract (T == 1);"
-                             " prefill writes pages engine-side")
-        kp = paged_scatter(cache["k"], block_tables, cache["len"], k[:, :, 0])
-        vp = paged_scatter(cache["v"], block_tables, cache["len"], v[:, :, 0])
-        cache = {"k": kp, "v": vp, "len": cache["len"] + t}
-        kv_valid = cache["len"]
+        hist = cache["len"]
         tp = ((kv_bucket if kv_bucket is not None
                else block_tables.shape[1] * page_size) // page_size)
-        o = run_paged_decode(q, kp, vp, block_tables[:, :tp], cfg=cfg,
-                             cache_len=kv_valid, scale=hd ** -0.5)
+        if t == 1:
+            kp = paged_scatter(cache["k"], block_tables, hist, k[:, :, 0])
+            vp = paged_scatter(cache["v"], block_tables, hist, v[:, :, 0])
+            cache = {"k": kp, "v": vp, "len": hist + t}
+            kv_valid = cache["len"]
+            o = run_paged_decode(q, kp, vp, block_tables[:, :tp], cfg=cfg,
+                                 cache_len=kv_valid, scale=hd ** -0.5)
+        else:
+            kp = paged_scatter_chunk(cache["k"], block_tables, hist, k)
+            vp = paged_scatter_chunk(cache["v"], block_tables, hist, v)
+            cache = {"k": kp, "v": vp, "len": hist + t}
+            o = run_paged_prefill(q, kp, vp, block_tables[:, :tp], cfg=cfg,
+                                  hist_len=hist, scale=hd ** -0.5)
     elif cache is not None:
         # decode: append new kv at cache['len'] (per-request positions for
         # heterogeneous batches), attend to the prefix
@@ -423,12 +481,14 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
         if page_size is None:
             raise ValueError("block_tables given without page_size — the "
                              "paged cache layout needs both")
-        if t != 1:
-            raise ValueError("paged KV cache is a decode contract (T == 1);"
-                             " prefill writes pages engine-side")
-        pool = paged_scatter(cache["c"], block_tables, cache["len"],
-                             latent[:, 0])
-        cache = {"c": pool, "len": cache["len"] + t}
+        hist = cache["len"]
+        if t == 1:
+            pool = paged_scatter(cache["c"], block_tables, hist,
+                                 latent[:, 0])
+        else:   # one chunk of chunked prefill
+            pool = paged_scatter_chunk(cache["c"], block_tables, hist,
+                                       latent)
+        cache = {"c": pool, "len": hist + t}
         kv_valid = cache["len"]
     elif cache is not None:
         latent = _cache_append(cache["c"], latent, cache["len"], 1)
@@ -444,13 +504,20 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
         tbl = block_tables[:, :tp]
         if cfg.attn_impl == "tl_pallas":
             from ..kernels import ops
-            o_lat = ops.paged_mla_decode(q_full, pool, tbl,
-                                         cache_len=kv_valid,
-                                         kv_lora_rank=r, rope_head_dim=rr)
+            if t == 1:
+                o_lat = ops.paged_mla_decode(q_full, pool, tbl,
+                                             cache_len=kv_valid,
+                                             kv_lora_rank=r,
+                                             rope_head_dim=rr)
+            else:
+                o_lat = ops.paged_mla_prefill(q_full, pool, tbl,
+                                              hist_len=hist,
+                                              kv_lora_rank=r,
+                                              rope_head_dim=rr)
         else:
             # page gather straight into the flash scan: one chunk per page
             lat = jnp.moveaxis(pool[tbl], 1, 0)[:, :, None]  # (tp,B,1,ps,R+Rr)
-            o_lat = xla_flash(q_full, lat, lat[..., :r], causal=False,
+            o_lat = xla_flash(q_full, lat, lat[..., :r], causal=t > 1,
                               scale=scale, kv_valid=kv_valid,
                               prechunked=True)
     elif cfg.attn_impl == "tl_pallas":

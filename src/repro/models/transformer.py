@@ -206,10 +206,12 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     power-of-two bucket ≥ cache_len+T so decode compiles once per bucket,
     not once per step.  Returns (logits, aux, new_caches).
 
-    ``block_tables`` + ``page_size``: paged decode — the attention caches
+    ``block_tables`` + ``page_size``: paged cache — the attention caches
     in ``caches`` are then page pools (see ``init_caches(paged=True)``)
     and ``block_tables`` (B, Tmax) int32 maps each row's logical pages to
-    physical pool pages, shared by every layer.  Decode-only (T == 1).
+    physical pool pages, shared by every layer.  T == 1 decodes; T > 1
+    runs one chunk of chunked prefill (K/V scattered straight into the
+    pages, causal attention against the history through the table).
 
     ``act_sharding``: optional PartitionSpec for the (B, T, d) residual
     stream.  Constraining it *inside* the period scan is what shards the

@@ -20,6 +20,23 @@ TL paged-decode layout).  When the pool runs dry mid-decode the youngest
 request is preempted — its pages are freed and it re-queues for
 re-prefill — so neighbours' pages are never corrupted.
 
+Pages are *shared and ref-counted*: the allocator keeps a
+content-addressed prefix index (page-aligned token chunk chains -> page),
+``submit()``-admission matches each prompt against it and maps cached
+pages into the request's block table instead of recomputing them, and any
+write into a page another holder still references copies the page first
+(copy-on-write) — pages return to circulation only at refcount zero.
+Retired requests' indexed pages linger in an LRU evictable set, so a
+prefix can hit after its originator is long gone; the pool reclaims them
+under pressure.
+
+Admission prefill runs *chunked directly into the pages*: the prompt (or
+its un-matched suffix) is processed in page-aligned chunks through the TL
+chunked-prefill kernel path — each chunk's K/V is scattered into the
+block-table pages, then the chunk attends causally to everything written
+so far — so long prompts have bounded peak memory and there is no dense
+prefill buffer to scatter from.
+
 Prompt batches may be length-heterogeneous (attention-cache architectures):
 prompts are right-padded to a shared bucket, next-token logits are gathered
 at each request's true last position, and every downstream step masks the
@@ -57,13 +74,46 @@ def _bucket(n: int, lo: int = 64) -> int:
 
 
 class PageAllocator:
-    """Free-list allocator over a fixed pool of KV-cache pages.
+    """Ref-counted free-list allocator over a fixed pool of KV-cache pages,
+    with a content-addressed *prefix index* for shared-prefix reuse.
 
     Pages are the unit of HBM reservation: a request holds
     ``ceil(len / page_size)`` pages, so its reservation is O(true length)
     rather than O(max_len).  :meth:`alloc` is all-or-nothing — it returns
     ``None`` when the pool cannot satisfy the request, and the caller
     queues or preempts; a request is never given a partial allocation.
+
+    **Refcounts** make pages shareable: :meth:`alloc` hands out pages at
+    refcount 1, :meth:`ref` adds holders (a prefix-cache hit maps the same
+    physical page into several block tables), and :meth:`free` only
+    *decrements* — a page leaves circulation when its count hits zero.
+    Freeing a page nobody holds raises (the double-free guard).
+
+    **The prefix index** maps page-aligned token chunks to the pages that
+    hold their KV.  Keys are content-addressed chains — the key of chunk
+    ``i`` is the full token tuple ``tokens[: (i+1) * page_size]`` — so a
+    match guarantees both the chunk's tokens *and* its entire history are
+    identical, which (positions being equal) makes the cached KV entries
+    bit-identical to what a recompute would produce.  Only *full* pages
+    are indexed: a partial page's content still changes as its owner
+    decodes.  An indexed page whose refcount drops to zero is not freed
+    but parked in an LRU *evictable* set — its content stays valid (and
+    matchable: the prefix-cache-hit-after-retire path) until :meth:`alloc`
+    reclaims it under pressure, at which point it leaves the index.
+
+    Matching (:meth:`match_prefix`) walks full-chunk chain keys, then
+    extends at most one page further by *partial* match — a prompt that
+    ends (or diverges) mid-way through a cached page maps that page too,
+    masked at the matched length.  Writing into such a shared page is what
+    triggers the engine's copy-on-write.
+
+    Keys are stored as the literal token tuples, so index memory and
+    match hashing are O(L^2 / page_size) per cached L-token chain —
+    exactness with zero collision risk, bought with bytes.  At the
+    max_len scales served here that is tens of KB per chain; an interned
+    radix/chain-node index (vLLM-style hashing without its collision
+    exposure) is the planned upgrade when sequences grow past that — see
+    ROADMAP.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -72,25 +122,183 @@ class PageAllocator:
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self._free = list(range(self.num_pages - 1, -1, -1))  # LIFO
+        self._ref: dict[int, int] = {}           # page -> refcount (> 0)
+        self._evictable: dict[int, None] = {}    # refcount-0 cached, LRU order
+        self._index: dict[tuple, int] = {}       # chain key -> page
+        self._page_key: dict[int, tuple] = {}    # inverse of _index
+        self._page_tokens: dict[int, tuple] = {} # indexed page -> its chunk
+        self._children: dict[tuple, set] = {}    # parent key -> indexed pages
+        self.alloc_count = 0                     # pages ever handed out
+        self.evictions = 0                       # cache entries reclaimed
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Allocatable pages: truly free plus cached-but-evictable."""
+        return len(self._free) + len(self._evictable)
+
+    @property
+    def live_pages(self) -> int:
+        """Pages some holder currently references (refcount > 0)."""
+        return len(self._ref)
+
+    @property
+    def cached_pages(self) -> int:
+        """Refcount-0 pages kept only for their prefix-cache content."""
+        return len(self._evictable)
 
     def pages_for(self, tokens: int) -> int:
         """Pages needed to hold ``tokens`` cache entries."""
         return -(-int(tokens) // self.page_size)
 
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def is_indexed(self, page: int) -> bool:
+        return page in self._page_key
+
     def alloc(self, n: int) -> Optional[list[int]]:
-        if n > len(self._free):
+        if n > self.free_pages:
             return None
-        return [self._free.pop() for _ in range(n)]
+        out = []
+        for _ in range(n):
+            if self._free:
+                p = self._free.pop()
+            else:
+                # reclaim the least-recently-parked cache page; its prefix
+                # entry dies with it (the content is about to be reused)
+                p = next(iter(self._evictable))
+                del self._evictable[p]
+                self._unindex(p)
+                self.evictions += 1
+            self._ref[p] = 1
+            out.append(p)
+        self.alloc_count += n
+        return out
+
+    def ref(self, pages: list[int]) -> None:
+        """Add a holder to already-live or cached pages (prefix-cache hit)."""
+        for p in pages:
+            if p in self._evictable:          # revive from the cache: 0 -> 1
+                del self._evictable[p]
+                self._ref[p] = 1
+            elif self._ref.get(p, 0) > 0:
+                self._ref[p] += 1
+            else:
+                raise ValueError(f"ref of free/invalid page {p}")
 
     def free(self, pages: list[int]) -> None:
+        """Drop one holder per page; a page leaves circulation at zero —
+        to the evictable cache if its content is prefix-indexed, else to
+        the free list."""
         for p in pages:
-            if not 0 <= p < self.num_pages or p in self._free:
+            if self._ref.get(p, 0) <= 0:
                 raise ValueError(f"double/invalid free of page {p}")
-        self._free.extend(pages)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                if p in self._page_key:
+                    self._evictable[p] = None     # most-recently parked
+                else:
+                    self._free.append(p)
+
+    # ---- prefix index -------------------------------------------------
+
+    def match_prefix(self, tokens: list[int]) -> tuple[list[int], int]:
+        """Longest cached prefix of ``tokens``: full-page chain hits plus
+        at most one partial hit into the next cached page.  Returns
+        ``(pages, matched_tokens)``; the caller must :meth:`ref` the pages
+        it keeps (a match alone takes no ownership)."""
+        ps = self.page_size
+        pages: list[int] = []
+        matched = 0
+        while matched + ps <= len(tokens):
+            p = self._index.get(tuple(tokens[: matched + ps]))
+            if p is None:
+                break
+            pages.append(p)
+            matched += ps
+        tail = tuple(tokens[matched:])
+        if tail:
+            best, best_len = None, 0
+            for p in self._children.get(tuple(tokens[:matched]), ()):
+                cached = self._page_tokens[p]
+                r = 0
+                for a, b in zip(tail, cached):
+                    if a != b:
+                        break
+                    r += 1
+                if r > best_len:
+                    best, best_len = p, r
+            if best is not None:
+                pages.append(best)
+                matched += best_len
+        return pages, matched
+
+    def register(self, tokens: list[int], pages: list[int],
+                 start: int = 0) -> None:
+        """Index the *full* pages of ``tokens`` from chunk index ``start``
+        on (``pages[i]`` holds chunk ``i``).  First writer wins —
+        identical content arriving in a different page is not re-indexed —
+        and re-registration is a no-op; a growing request passes the index
+        of the page that just filled so each boundary costs O(len) key
+        hashing, not a re-walk of its whole chain."""
+        ps = self.page_size
+        for i in range(start, min(len(tokens) // ps, len(pages))):
+            p = pages[i]
+            key = tuple(tokens[: (i + 1) * ps])
+            if key in self._index or p in self._page_key:
+                continue
+            if self._ref.get(p, 0) <= 0:
+                raise ValueError(f"register of free/invalid page {p}")
+            self._index[key] = p
+            self._page_key[p] = key
+            self._page_tokens[p] = key[-ps:]
+            self._children.setdefault(key[:-ps], set()).add(p)
+
+    def _unindex(self, p: int) -> None:
+        key = self._page_key.pop(p, None)
+        if key is None:
+            return
+        del self._index[key]
+        del self._page_tokens[p]
+        parent = key[:-self.page_size]
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.discard(p)
+            if not kids:
+                del self._children[parent]
+
+    def unindex(self, p: int) -> None:
+        """Forget a page's prefix-cache entry (callers must do this before
+        mutating a sole-owner indexed page — the content diverges from the
+        key).  An evictable page loses its only reason to stay cached and
+        returns to the free list."""
+        self._unindex(p)
+        if p in self._evictable:
+            del self._evictable[p]
+            self._free.append(p)
+
+    def check_invariants(self) -> None:
+        """Conservation + consistency (the property-test oracle): every
+        page is exactly one of free / evictable / live; refcounts are
+        positive; the index maps are mutually consistent."""
+        free, evict, live = set(self._free), set(self._evictable), \
+            set(self._ref)
+        assert len(self._free) == len(free), "free list duplicates"
+        assert not (free & evict) and not (free & live) \
+            and not (evict & live), "page in two states"
+        assert len(free) + len(evict) + len(live) == self.num_pages, \
+            f"page leak: {len(free)}+{len(evict)}+{len(live)} " \
+            f"!= {self.num_pages}"
+        assert all(v > 0 for v in self._ref.values()), "refcount <= 0 held"
+        assert set(self._index.values()) == set(self._page_key), \
+            "index/page_key mismatch"
+        assert all(self._index[k] == p and len(k) % self.page_size == 0
+                   for p, k in self._page_key.items())
+        assert set(self._page_tokens) == set(self._page_key)
+        kids = {p for s in self._children.values() for p in s}
+        assert kids == set(self._page_key), "children set drift"
+        assert evict <= set(self._page_key), "evictable page not indexed"
 
 
 @dataclasses.dataclass
@@ -141,13 +349,26 @@ class ServeEngine:
     reservation, at the cost of queueing/preemption under pressure.
     Architectures with no attention cache (pure RWKV/Mamba state) have
     nothing to page; ``paged`` silently turns off there.
+
+    Prefix cache: ``prefix_cache=True`` (the default) lets paged
+    admission reuse cached pages for page-aligned prompt prefixes (plus
+    one partial page at the divergence point, copy-on-write protected).
+    It silently turns off where reuse would change numerics: recurrent
+    architectures (state must integrate every token; pages only cache
+    attention KV) and capacity-truncated MoE (routing couples every token
+    in a dispatch).  ``prefill_chunk`` (a page multiple; default
+    ``4 * page_size``) sets the chunked-prefill granularity — MoE
+    architectures prefill the whole prompt as a single exact-length chunk
+    for the same routing reason, still directly into pages.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_len: int = 2048, vision_embeds=None,
                  decode_bucket_lo: int = 64, prompt_bucket_lo: int = 16,
                  paged: bool = True, page_size: int = 64,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -170,12 +391,31 @@ class ServeEngine:
             bool(cfg.first_k_dense) and not getattr(cfg, "rwkv", False))
         self.paged = bool(paged and has_attn_cache)
         self.page_size = int(page_size)
+        # Prefix reuse is sound only for per-token architectures: a
+        # recurrent layer's state must integrate every prompt token (pages
+        # cache attention KV, not Mamba/RWKV state), and capacity-truncated
+        # MoE routing couples every token in a dispatch, so skipping the
+        # prefix would change the suffix's numerics.
+        self.prefix_cache = bool(prefix_cache and self.paged
+                                 and self._pad_safe_prefill)
+        # Chunked-prefill granularity (page multiple).  MoE architectures
+        # prefill the whole prompt as one exact-length chunk — splitting a
+        # routing batch perturbs capacity truncation — but still write
+        # straight into pages (no dense-then-scatter copy).
+        self.prefill_chunk = None if prefill_chunk is None \
+            else int(prefill_chunk)
         # layout constraints are checked at first *paged* use (submit/step
         # materialise the pools) so generate()-only engines — which keep
         # the dense per-row cache — accept any max_len, as before
         self.num_pages = None if num_pages is None else int(num_pages)
         self.prefill_compiles = 0
         self.decode_compiles = 0
+        # serving-observability counters (prefix cache + COW)
+        self.prefix_lookups = 0       # submit/step admissions that probed
+        self.prefix_hits = 0          # admissions that reused >= 1 token
+        self.prefix_hit_tokens = 0    # prompt tokens served from the cache
+        self.prefill_tokens = 0       # prompt tokens actually computed
+        self.cow_count = 0            # copy-on-write page copies
 
         def prefill(params, tokens, caches):
             self.prefill_compiles += 1          # runs once per jit trace
@@ -197,8 +437,48 @@ class ServeEngine:
                 vision_embeds=self.vision)
             return logits[:, -1], caches
 
+        # one chunk of chunked prefill, written straight into the pages:
+        # compiled per (chunk capacity, kv bucket) — never per chunk
+        # position or prompt length (cache_len is a runtime vector)
+        def chunk_prefill(params, tokens, caches, cache_len, tables,
+                          kv_bucket):
+            self.prefill_compiles += 1      # runs once per jit trace
+            logits, _, caches = transformer.apply(
+                params, tokens, cfg, caches=caches, cache_len=cache_len,
+                kv_bucket=kv_bucket, block_tables=tables,
+                page_size=self.page_size)
+            return logits, caches
+
+        # copy one pool page (COW): page ``src`` -> ``dst`` in every
+        # attention pool leaf; src/dst are runtime scalars so every COW
+        # event reuses one trace
+        def cow_copy(caches, src, dst):
+            kinds_, _ = transformer.period_spec(cfg)
+            new_blocks = {}
+            for s, kind in enumerate(kinds_):
+                key = f"sub{s}"
+                if key not in caches["blocks"]:
+                    continue
+                big = caches["blocks"][key]
+                if kind in ("attn", "self"):    # stacked pools: page axis 1
+                    new_blocks[key] = jax.tree.map(
+                        lambda leaf: leaf.at[:, dst].set(leaf[:, src]), big)
+                else:
+                    new_blocks[key] = big
+            new = {"blocks": new_blocks}
+            if "first" in caches:
+                fk_attn = not getattr(cfg, "rwkv", False)
+                new["first"] = [
+                    jax.tree.map(lambda leaf: leaf.at[dst].set(leaf[src]),
+                                 big) if fk_attn else big
+                    for big in caches["first"]]
+            return new
+
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode, static_argnames=("kv_bucket",))
+        self._chunk_step = jax.jit(chunk_prefill,
+                                   static_argnames=("kv_bucket",))
+        self._cow_copy = jax.jit(cow_copy)
 
         # continuous-batching state (submit/step API)
         self._queue: list[Request] = []
@@ -359,6 +639,15 @@ class ServeEngine:
                     # dense-capacity parity + the reserved dump page
                     self.num_pages = self.max_batch * \
                         (self.max_len // self.page_size) + 1
+                if self.prefill_chunk is None:
+                    self.prefill_chunk = min(4 * self.page_size,
+                                             self.max_len)
+                if self.prefill_chunk <= 0 \
+                        or self.prefill_chunk % self.page_size:
+                    raise ValueError(
+                        f"prefill_chunk {self.prefill_chunk} must be a "
+                        f"positive multiple of page_size {self.page_size} "
+                        "(chunks are written page-aligned)")
             self._active = [None] * self.max_batch
             self._slot_caches = transformer.init_caches(
                 self.cfg, self.max_batch, self.max_len, paged=self.paged,
@@ -380,85 +669,161 @@ class ServeEngine:
                     self._dump_page, np.int32)
                 self._slot_pages = [[] for _ in range(self.max_batch)]
 
-    # ---- paged slot storage ------------------------------------------
+    # ---- dense slot storage ------------------------------------------
 
-    def _scatter_prefill(self, pool, dense, pages: list[int], plen: int,
-                         *, stacked: bool, latent: bool):
-        """Write the first ``plen`` tokens of a batch-1 dense prefill cache
-        into this request's pool ``pages`` — one scatter dispatch per leaf
-        (not per page: pool-sized copies per page would make admission
-        O(request_pages x pool_bytes)).
-
-        ``stacked``: scanned-block leaves carry a leading ``nper`` axis.
-        ``latent``: MLA pools are (P, ps, R+Rr); KV pools (P, Hkv, ps, D).
+    def _write_slot(self, slot: int, slot_caches, logits_row):
+        """Scatter a batch-1 dense prefill result into a batch slot:
+        scanned-block leaves are (nper, B, ...), leading dense-layer
+        leaves are (B, ...) — the batch axis (1 and 0 respectively) is
+        updated at ``slot``.  (Paged engines never prefill densely: the
+        chunked path writes pages directly — see :meth:`_prefill_into_pages`.)
         """
-        ps = self.page_size
-        dn = dense[:, 0] if stacked else dense[0]   # drop the batch-1 axis
-        # token axis of dn / (page, within-page) axes of the pool
-        tok_ax = (1 if latent else 2) if stacked else (0 if latent else 1)
-        page_ax = 1 if stacked else 0
-        slot_ax = page_ax + (1 if latent else 2)
-        # page-shape the true prefix: (npages, ps, rest...); the zero tail
-        # of the last page lands in freshly-allocated rows nobody reads
-        dn = jnp.moveaxis(dn, tok_ax, 0)[:plen]
-        npg = len(pages)
-        pad = npg * ps - plen
-        if pad:
-            dn = jnp.pad(dn, [(0, pad)] + [(0, 0)] * (dn.ndim - 1))
-        dn = dn.reshape(npg, ps, *dn.shape[1:])
-        pool_v = jnp.moveaxis(pool, (page_ax, slot_ax), (0, 1))
-        pool_v = pool_v.at[jnp.asarray(pages, jnp.int32)].set(
-            dn.astype(pool.dtype))
-        return jnp.moveaxis(pool_v, (0, 1), (page_ax, slot_ax))
-
-    def _write_slot(self, slot: int, slot_caches, logits_row, *,
-                    pages: Optional[list[int]] = None, plen: int = 0):
-        """Scatter a batch-1 prefill result into a batch slot.
-
-        Dense layout: scanned-block leaves are (nper, B, ...), leading
-        dense-layer leaves are (B, ...) — the batch axis (1 and 0
-        respectively) is updated at ``slot``.  Paged layout: attention
-        leaves are page pools, so the prefix is written into this request's
-        ``pages`` instead; recurrent/cross state stays per-row.
-        """
-        kinds, _ = transformer.period_spec(self.cfg)
 
         def upd(axis):
             return lambda big, small: jax.lax.dynamic_update_index_in_dim(
                 big, jnp.squeeze(small, axis), slot, axis)
 
-        new_blocks = {}
+        new = {"blocks": {
+            key: jax.tree.map(upd(1), big, slot_caches["blocks"][key])
+            for key, big in self._slot_caches["blocks"].items()}}
+        if "first" in self._slot_caches:
+            new["first"] = [
+                jax.tree.map(upd(0), big, slot_caches["first"][i])
+                for i, big in enumerate(self._slot_caches["first"])]
+        self._slot_caches = new
+        self._slot_logits = self._slot_logits.at[slot].set(logits_row)
+
+    # ---- paged slot storage: chunked prefill + copy-on-write ---------
+
+    def _slice_row_caches(self, slot: int):
+        """Batch-1 view of the slot caches for a chunk-prefill dispatch:
+        attention page pools are batch-free and passed whole (the chunk
+        writes only this request's pages + the dump page); per-row leaves
+        (recurrent / cross state) are sliced to this row."""
+        kinds, _ = transformer.period_spec(self.cfg)
+
+        def take(axis):
+            return lambda leaf: jax.lax.dynamic_slice_in_dim(
+                leaf, slot, 1, axis)
+
+        out = {"blocks": {}}
         for s, kind in enumerate(kinds):
             key = f"sub{s}"
             if key not in self._slot_caches["blocks"]:
                 continue
             big = self._slot_caches["blocks"][key]
-            small = slot_caches["blocks"][key]
-            if self.paged and kind in ("attn", "self"):
-                new_blocks[key] = {
-                    kk: self._scatter_prefill(big[kk], small[kk], pages,
-                                              plen, stacked=True,
-                                              latent=(kk == "c"))
-                    for kk in big}
-            else:
-                new_blocks[key] = jax.tree.map(upd(1), big, small)
-        new = {"blocks": new_blocks}
+            out["blocks"][key] = big if kind in ("attn", "self") \
+                else jax.tree.map(take(1), big)
         if "first" in self._slot_caches:
-            fk = "attn" if not getattr(self.cfg, "rwkv", False) else "rwkv"
-            firsts = []
-            for i, big in enumerate(self._slot_caches["first"]):
-                small = slot_caches["first"][i]
-                if self.paged and fk == "attn":
-                    firsts.append({
-                        kk: self._scatter_prefill(big[kk], small[kk], pages,
-                                                  plen, stacked=False,
-                                                  latent=(kk == "c"))
-                        for kk in big})
-                else:
-                    firsts.append(jax.tree.map(upd(0), big, small))
-            new["first"] = firsts
-        self._slot_caches = new
-        self._slot_logits = self._slot_logits.at[slot].set(logits_row)
+            fk_attn = not getattr(self.cfg, "rwkv", False)
+            out["first"] = [big if fk_attn else jax.tree.map(take(0), big)
+                            for big in self._slot_caches["first"]]
+        return out
+
+    def _merge_row_caches(self, slot: int, new):
+        """Inverse of :meth:`_slice_row_caches`: adopt the (shared) pool
+        leaves wholesale, scatter per-row leaves back into row ``slot``."""
+        kinds, _ = transformer.period_spec(self.cfg)
+
+        def upd(axis):
+            return lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small, slot, axis)
+
+        merged = {"blocks": {}}
+        for s, kind in enumerate(kinds):
+            key = f"sub{s}"
+            if key not in self._slot_caches["blocks"]:
+                continue
+            big = self._slot_caches["blocks"][key]
+            small = new["blocks"][key]
+            merged["blocks"][key] = small if kind in ("attn", "self") \
+                else jax.tree.map(upd(1), big, small)
+        if "first" in self._slot_caches:
+            fk_attn = not getattr(self.cfg, "rwkv", False)
+            merged["first"] = [
+                small if fk_attn else jax.tree.map(upd(0), big, small)
+                for big, small in zip(self._slot_caches["first"],
+                                      new["first"])]
+        self._slot_caches = merged
+
+    def _cow(self, slot: int, pidx: int, new_page: int):
+        """Copy-on-write: duplicate the shared page at table index
+        ``pidx`` into freshly-allocated ``new_page`` (every attention pool
+        leaf), drop this request's reference on the original, and remap
+        the block table.  The other holders keep the original untouched."""
+        old = int(self._slot_tables[slot, pidx])
+        self._slot_caches = self._cow_copy(
+            self._slot_caches, jnp.int32(old), jnp.int32(new_page))
+        self._allocator.free([old])
+        self._slot_tables[slot, pidx] = new_page
+        self._slot_pages[slot][pidx] = new_page
+        self.cow_count += 1
+
+    def _make_writable(self, slot: int, pidx: int) -> bool:
+        """Ensure the page at ``pidx`` of this slot's table can be
+        mutated: shared pages (refcount > 1) are COW-copied; a sole-owner
+        page that is prefix-indexed just drops its (about-to-be-stale)
+        cache entry.  Returns False when COW needs a page and the pool has
+        none (the caller rolls back or preempts and retries)."""
+        page = int(self._slot_tables[slot, pidx])
+        if self._allocator.refcount(page) > 1:
+            got = self._allocator.alloc(1)
+            if got is None:
+                return False
+            self._cow(slot, pidx, got[0])
+        elif self._allocator.is_indexed(page):
+            self._allocator.unindex(page)
+        return True
+
+    def _prefill_into_pages(self, slot: int, ctx: list[int],
+                            start: int) -> jnp.ndarray:
+        """Chunked prefill of ``ctx[start:]`` straight into this slot's
+        pages (the first ``start`` tokens came from the prefix cache).
+        Chunks are ``prefill_chunk`` tokens; pad-safe architectures round
+        the tail up to a page multiple (the padded K/V lands in this
+        request's own allocated page tail, masked by ``cache_len`` and
+        overwritten token-by-token as decode proceeds) so compile count is
+        bounded by chunk shapes, not prompt lengths.  Recurrent
+        architectures keep exact-length tails (padding would contaminate
+        state) and MoE architectures prefill one exact whole-prompt chunk
+        (splitting a routing batch perturbs capacity truncation).
+        Returns the next-token logits row (the last real position)."""
+        plen = len(ctx)
+        ps = self.page_size
+        moe = bool(getattr(self.cfg, "moe", False))
+        pos, logits, n = start, None, 0
+        while pos < plen:
+            if pos % ps:
+                # misaligned start (partial-page prefix hit; pad-safe only
+                # — non-pad-safe archs never prefix-match): snap back to
+                # the page grid with a one-page boundary chunk.  cap is
+                # clamped so pos + cap never crosses max_len (the block
+                # table's extent); padded positions past the allocated
+                # span land in the dump page.
+                n = min(plen - pos, ps - pos % ps)
+                cap = min(ps, self.max_len - pos)
+            else:
+                n = plen - pos if moe \
+                    else min(self.prefill_chunk, plen - pos)
+                cap = -(-n // ps) * ps if self._pad_safe_prefill else n
+            toks = np.zeros((1, cap), np.int32)
+            toks[0, :n] = ctx[pos:pos + n]
+            bucket = self._decode_bucket(pos + cap)
+            # .copy(): jax CPU zero-copies aligned contiguous numpy
+            # buffers, and the dispatch is async — handing it the live
+            # table would race with the next admission/COW/growth mutation
+            # (whether a given allocation aliases is a malloc-alignment
+            # accident, so the race is intermittent by process)
+            tables = jnp.asarray(
+                self._slot_tables[slot:slot + 1, :bucket // ps].copy())
+            logits, new_caches = self._chunk_step(
+                self.params, jnp.asarray(toks),
+                self._slice_row_caches(slot),
+                jnp.asarray([pos], np.int32), tables, kv_bucket=bucket)
+            self._merge_row_caches(slot, new_caches)
+            self.prefill_tokens += n
+            pos += n
+        return logits[0, n - 1]
 
     def _preempt(self, req: Request):
         """Evict an active request: free its pages, requeue it at the front
@@ -474,28 +839,49 @@ class ServeEngine:
 
     def _grow_pages(self):
         """Allocate-on-write: every active row whose next token starts a
-        fresh page gets one before the decode writes it.  On pool
-        exhaustion the youngest-admitted request is preempted (possibly the
-        one asking) until the write can proceed."""
+        fresh page gets one before the decode writes it, and a row about
+        to write mid-page is made exclusive first (COW if the page is
+        shared through the prefix cache, un-indexing if it is the sole
+        owner of a cached page).  On pool exhaustion the youngest-admitted
+        request is preempted (possibly the one asking) until the write can
+        proceed — preempting a request whose pages are all shared frees no
+        allocatable page, so the loop keeps preempting rather than
+        declaring deadlock."""
+        ps = self.page_size
         for r in list(self.active_requests):
             if self._active[r.slot] is not r:
                 continue                     # preempted by an earlier row
             pos = int(self._slot_lens[r.slot])
-            if pos % self.page_size:
-                continue                     # current page still has room
-            pidx = pos // self.page_size
+            pidx = pos // ps
+            if pos % ps:
+                # mid-page write: the only shared pages a table can hold
+                # mid-page are prefix-cache hits — make ours exclusive
+                while self._active[r.slot] is r:
+                    if self._make_writable(r.slot, pidx):
+                        break
+                    self._preempt(max(self.active_requests,
+                                      key=lambda a: a.seq))
+                if self._active[r.slot] is r:
+                    assert self._allocator.refcount(
+                        int(self._slot_tables[r.slot, pidx])) == 1, \
+                        "about to write a shared page"
+                continue
+            # page boundary: the previous page just filled — publish it to
+            # the prefix cache, then allocate the write target
+            if pidx and self.prefix_cache:
+                # only chunk pidx-1 just filled; earlier pages were
+                # registered at admission / previous boundaries
+                self._allocator.register((r.prompt + r.tokens)[:pos],
+                                         self._slot_pages[r.slot],
+                                         start=pidx - 1)
             while self._active[r.slot] is r:
                 got = self._allocator.alloc(1)
                 if got is not None:
                     self._slot_pages[r.slot].append(got[0])
                     self._slot_tables[r.slot, pidx] = got[0]
                     break
-                before = self._allocator.free_pages
                 self._preempt(max(self.active_requests,
                                   key=lambda a: a.seq))
-                if self._allocator.free_pages == before:  # pragma: no cover
-                    raise RuntimeError("page pool deadlock: preemption "
-                                       "freed no pages")
 
     # ---- admission ----------------------------------------------------
 
@@ -514,7 +900,6 @@ class ServeEngine:
                 self._queue.pop(0)
                 self._finished_early.append(req)
                 continue
-            pages = None
             if self.paged:
                 need = self._allocator.pages_for(plen)
                 if need > self._allocator.num_pages - 1:
@@ -526,34 +911,66 @@ class ServeEngine:
                     self._queue.pop(0)
                     self._finished_early.append(req)
                     continue
-                pages = self._allocator.alloc(need)
-                if pages is None:
+                # prefix-cache probe: map cached pages of the longest
+                # matching prefix into this request's table instead of
+                # recomputing them.  At least one token is always
+                # recomputed — sampling needs next-token logits.
+                matched, mlen = [], 0
+                if self.prefix_cache:
+                    self.prefix_lookups += 1
+                    matched, mlen = self._allocator.match_prefix(ctx)
+                    mlen = min(mlen, plen - 1)
+                    matched = matched[:self._allocator.pages_for(mlen)]
+                self._allocator.ref(matched)
+                fresh = self._allocator.alloc(need - len(matched))
+                if fresh is None:
+                    self._allocator.free(matched)
                     break   # head-of-line waits for pages (FIFO preserved)
-            self._queue.pop(0)
-            slot = free.pop(0)
-            # batch-1 prefill scattered into the slot row.  Prompts are
-            # right-padded to a prompt bucket so the prefill jit cache is
-            # bounded by O(log2 max_len) buckets, not one trace per
-            # distinct prompt length — except where padding perturbs the
-            # numerics (recurrent state / capacity-truncated MoE), which
-            # prefill at the exact length.
-            pad_to = min(_bucket(plen, self.prompt_bucket_lo),
-                         self.max_len) if self._pad_safe_prefill else plen
-            toks = np.zeros((1, pad_to), np.int32)
-            toks[0, :plen] = ctx
-            # paged slots copy only the true prefix out of the prefill
-            # cache, so the transient buffer can be bucket-sized; dense
-            # slots are written by a whole-buffer row update
-            cap = pad_to if self.paged else self.max_len
-            caches = transformer.init_caches(self.cfg, 1, cap)
-            logits, caches = self._prefill(self.params, jnp.asarray(toks),
-                                           caches)
-            if self.paged:
+                pages = matched + fresh
+                self._queue.pop(0)
+                slot = free.pop(0)
                 self._slot_tables[slot, :] = self._dump_page
                 self._slot_tables[slot, :len(pages)] = pages
                 self._slot_pages[slot] = pages
-            self._write_slot(slot, caches, logits[0, plen - 1],
-                             pages=pages, plen=plen)
+                # divergence mid-way through a shared page: make it ours
+                # before the suffix prefill writes it (copy-on-write)
+                if mlen % self.page_size \
+                        and not self._make_writable(slot,
+                                                    mlen // self.page_size):
+                    # COW needs one more page and the pool is dry: roll
+                    # back and wait (FIFO preserved, nothing leaked)
+                    self._allocator.free(self._slot_pages[slot])
+                    self._slot_pages[slot] = []
+                    self._slot_tables[slot, :] = self._dump_page
+                    self._queue.insert(0, req)
+                    break
+                if mlen:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += mlen
+                logits_row = self._prefill_into_pages(slot, ctx, mlen)
+                if self.prefix_cache:
+                    self._allocator.register(ctx, self._slot_pages[slot])
+                self._slot_logits = self._slot_logits.at[slot].set(
+                    logits_row)
+            else:
+                self._queue.pop(0)
+                slot = free.pop(0)
+                # batch-1 dense prefill scattered into the slot row.
+                # Prompts are right-padded to a prompt bucket so the
+                # prefill jit cache is bounded by O(log2 max_len) buckets,
+                # not one trace per distinct prompt length — except where
+                # padding perturbs the numerics (recurrent state /
+                # capacity-truncated MoE), which prefill at the exact
+                # length.
+                pad_to = min(_bucket(plen, self.prompt_bucket_lo),
+                             self.max_len) if self._pad_safe_prefill \
+                    else plen
+                toks = np.zeros((1, pad_to), np.int32)
+                toks[0, :plen] = ctx
+                caches = transformer.init_caches(self.cfg, 1, self.max_len)
+                logits, caches = self._prefill(self.params,
+                                               jnp.asarray(toks), caches)
+                self._write_slot(slot, caches, logits[0, plen - 1])
             self._slot_lens[slot] = plen
             req.slot = slot
             req.seq = self._admit_seq
@@ -634,8 +1051,13 @@ class ServeEngine:
         bucket = self._decode_bucket(needed)
         tables = None
         if self.paged:
+            # .copy(): the decode is dispatched async and the next step's
+            # _admit mutates slot tables before anything forces it; jax
+            # CPU may zero-copy an aligned contiguous numpy buffer (when
+            # bucket == max_len this slice is the whole table), which
+            # would let the pending gather read the mutated rows
             tables = jnp.asarray(
-                self._slot_tables[:, :bucket // self.page_size])
+                self._slot_tables[:, :bucket // self.page_size].copy())
         step_logits, self._slot_caches = self._decode(
             self.params, jnp.asarray(toks)[:, None], self._slot_caches,
             jnp.asarray(lens, np.int32), tables, kv_bucket=bucket)

@@ -1,0 +1,205 @@
+"""Chunked-prefill kernels: one prompt chunk attending causally, through a
+block table, to the pages already written (history + the chunk itself).
+
+The contract under test (this PR's tentpole): a ``chunk_prefill`` TL
+program takes the per-row *history length* as its runtime scalar — the
+causal diagonal is shifted by it at run time — so one compiled kernel
+serves every chunk position within a (chunk capacity, bucket) pair, and
+the result equals dense causal attention over the logical cache the table
+encodes, for every head geometry, dtype, page placement, and chunk size
+(including chunks that do not divide the prompt or the page size).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core.pipeline import cached_kernel
+from repro.core.spec import AttnSpec
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+_DT = {"bfloat16": "bf16", "float32": "f32"}
+
+
+def _paged_case(rng, *, b, hkv, d, ps, tp, pool_pages, dtype):
+    """Random pool + per-row permuted block tables + the dense view."""
+    kp = jnp.asarray(rng.standard_normal((pool_pages, hkv, ps, d)) * 0.5,
+                     dtype)
+    vp = jnp.asarray(rng.standard_normal((pool_pages, hkv, ps, d)) * 0.5,
+                     dtype)
+    perm = rng.permutation(pool_pages)[: b * tp]
+    tables = np.asarray(perm, np.int32).reshape(b, tp)
+    kd = jnp.stack([jnp.concatenate([kp[t] for t in row], axis=1)
+                    for row in tables])
+    vd = jnp.stack([jnp.concatenate([vp[t] for t in row], axis=1)
+                    for row in tables])
+    return kp, vp, tables, kd, vd
+
+
+def _check_rows(out, q, kd, vd, hist, c, tol):
+    """Row b of the chunk == dense causal attention over cache[:hist_b+c]
+    (bottom-right aligned: chunk row i sits at position hist_b + i)."""
+    for bi in range(len(hist)):
+        n = int(hist[bi]) + c
+        gold = ref.attention(q[bi:bi + 1].astype(jnp.float32),
+                             kd[bi:bi + 1, :, :n].astype(jnp.float32),
+                             vd[bi:bi + 1, :, :n].astype(jnp.float32),
+                             causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out[bi:bi + 1], np.float32), np.asarray(gold),
+            atol=tol, rtol=tol, err_msg=f"row {bi} hist={hist[bi]}")
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_chunk_prefill_matches_dense_causal(seed):
+    """Paged chunk prefill == dense causal reference for random geometry,
+    page size, chunk length (ragged), per-row history, and dtype."""
+    rng = np.random.default_rng(seed)
+    hq, hkv = [(4, 4), (8, 2), (4, 1), (6, 3)][seed % 4]   # MHA/GQA/MQA
+    d = int(rng.choice([32, 64]))
+    ps = int(rng.choice([16, 32]))
+    tp = int(rng.choice([2, 4]))
+    dtype = [jnp.float32, jnp.float32, jnp.bfloat16][seed % 3]
+    b = 2
+    bucket = ps * tp
+    c = int(rng.integers(1, ps + ps // 2))     # often not a page multiple
+    hist = np.asarray([int(rng.integers(0, bucket - c + 1))
+                       for _ in range(b)], np.int32)
+    kp, vp, tables, kd, vd = _paged_case(
+        rng, b=b, hkv=hkv, d=d, ps=ps, tp=tp, pool_pages=b * tp + 3,
+        dtype=dtype)
+    q = jnp.asarray(rng.standard_normal((b, hq, c, d)) * 0.5, dtype)
+
+    out = ops.paged_flash_prefill(q, kp, vp, tables, hist_len=hist)
+    _check_rows(out, q, kd, vd, hist, c, TOL[dtype])
+
+
+def test_chunk_prefill_pallas_vs_jnp_oracle():
+    """Backend agreement on the same chunk-prefill TL program: the Pallas
+    kernel's runtime-shifted causal gather and the jnp oracle's must be
+    the same function."""
+    rng = np.random.default_rng(77)
+    hq, hkv, d, ps, tp, c = 4, 2, 32, 16, 4, 24
+    bucket = ps * tp
+    b = 2
+    kp, vp, tables, _, _ = _paged_case(
+        rng, b=b, hkv=hkv, d=d, ps=ps, tp=tp, pool_pages=b * tp + 2,
+        dtype=jnp.float32)
+    hist = np.asarray([5, 33], np.int32)
+    spec = AttnSpec(variant="gqa", num_q_heads=hq, num_kv_heads=hkv,
+                    head_dim=d, causal=True, mode="chunk_prefill",
+                    dtype="f32", page_size=ps)
+    kern = cached_kernel(spec, c, bucket, "v5e", True, True)
+    assert kern.pallas_fn.chunk_prefill and kern.oracle_fn.chunk_prefill
+    assert kern.pallas_fn.paged and kern.oracle_fn.paged
+    q = jnp.asarray(rng.standard_normal((b, hq, c, d)) * 0.5, jnp.float32)
+    qp = ops._pad_rows(q, 2, kern.blocks.bm)
+    out = kern.pallas_fn(jnp.asarray(hist), jnp.asarray(tables), qp, kp, vp)
+    g = hq // hkv
+    for bi in range(b):
+        for h in range(hq):
+            o = kern.oracle_fn(int(hist[bi]), tables[bi], qp[bi, h],
+                               kp[:, h // g].reshape(-1, d),
+                               vp[:, h // g].reshape(-1, d))[:c]
+            np.testing.assert_allclose(
+                np.asarray(out[bi, h, :c], np.float32), np.asarray(o),
+                atol=1e-5, rtol=1e-5, err_msg=f"row {bi} head {h}")
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_mla_chunk_prefill_matches_dense(seed):
+    rng = np.random.default_rng(300 + seed)
+    h = int(rng.choice([4, 8]))
+    r, rr = int(rng.choice([32, 64])), 16
+    ps, tp = 16, 4
+    bucket = ps * tp
+    dtype = jnp.float32 if seed % 2 else jnp.bfloat16
+    b = 2
+    c = int(rng.integers(1, ps + ps // 2))
+    hist = np.asarray([int(rng.integers(0, bucket - c + 1))
+                       for _ in range(b)], np.int32)
+    pool_pages = b * tp + 2
+    cp = jnp.asarray(rng.standard_normal((pool_pages, ps, r + rr)) * 0.3,
+                     dtype)
+    tables = np.asarray(rng.permutation(pool_pages)[: b * tp],
+                        np.int32).reshape(b, tp)
+    ql = jnp.asarray(rng.standard_normal((b, h, c, r + rr)) * 0.3, dtype)
+
+    out = ops.paged_mla_prefill(ql, cp, tables, hist_len=hist,
+                                kv_lora_rank=r, rope_head_dim=rr)
+    cd = jnp.stack([jnp.concatenate([cp[t] for t in row], axis=0)
+                    for row in tables])
+    for bi in range(b):
+        n = int(hist[bi]) + c
+        gold = ref.mla_attention(ql[bi:bi + 1].astype(jnp.float32),
+                                 cd[bi:bi + 1, :n].astype(jnp.float32),
+                                 rope_dim=rr, scale=(128 + rr) ** -0.5,
+                                 causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out[bi:bi + 1], np.float32), np.asarray(gold),
+            atol=TOL[dtype], rtol=TOL[dtype],
+            err_msg=f"row {bi} hist={hist[bi]}")
+
+
+def test_one_kernel_per_chunk_shape():
+    """Every (history, table placement) within one (chunk capacity,
+    bucket) pair reuses one generated kernel — the history length and the
+    block table are runtime data."""
+    rng = np.random.default_rng(9)
+    hq, hkv, d, ps, tp, c = 4, 2, 32, 16, 2, 16
+    kp = jnp.asarray(rng.standard_normal((6, hkv, ps, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((6, hkv, ps, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, hq, c, d)), jnp.float32)
+    ops.paged_flash_prefill(q, kp, vp, np.asarray([[0, 1]], np.int32),
+                            hist_len=0)           # warm the shape
+    before = cached_kernel.cache_info()
+    for hist in range(0, ps + 1, 3):
+        tbl = np.asarray([rng.permutation(6)[:tp]], np.int32)
+        ops.paged_flash_prefill(q, kp, vp, tbl, hist_len=hist)
+    after = cached_kernel.cache_info()
+    assert after.misses == before.misses, (
+        "chunk prefill retraced the TL pipeline for runtime data "
+        "(history length / block table) inside one compiled shape")
+    assert after.hits > before.hits
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="page_size"):
+        AttnSpec.mha(4, 32, mode="chunk_prefill")       # paged-only mode
+    with pytest.raises(ValueError, match="causal"):
+        AttnSpec.mha(4, 32, mode="chunk_prefill", causal=False,
+                     page_size=16)
+    with pytest.raises(ValueError, match="window"):
+        AttnSpec.mha(4, 32, mode="chunk_prefill", page_size=16, window=8)
+
+
+@given(
+    ps=st.sampled_from([16, 32]),
+    tp=st.sampled_from([2, 4]),
+    cfrac=st.floats(0.05, 1.5),
+    hfrac=st.floats(0.0, 1.0),
+    geom=st.sampled_from([(4, 4), (8, 2), (4, 1), (6, 3)]),
+    use_bf16=st.booleans(),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=15, deadline=None)
+def test_chunk_prefill_property(ps, tp, cfrac, hfrac, geom, use_bf16, seed):
+    """For any page geometry, chunk fraction (including ragged chunks),
+    history fraction, head geometry and dtype: chunked == dense causal on
+    the logical cache the table encodes."""
+    rng = np.random.default_rng(seed)
+    hq, hkv = geom
+    d = 32
+    dtype = jnp.bfloat16 if use_bf16 else jnp.float32
+    bucket = ps * tp
+    c = max(1, min(bucket, int(round(cfrac * ps))))
+    hist = np.asarray([int(round(hfrac * (bucket - c)))], np.int32)
+    kp, vp, tables, kd, vd = _paged_case(
+        rng, b=1, hkv=hkv, d=d, ps=ps, tp=tp, pool_pages=tp + 2,
+        dtype=dtype)
+    q = jnp.asarray(rng.standard_normal((1, hq, c, d)) * 0.5, dtype)
+    out = ops.paged_flash_prefill(q, kp, vp, tables, hist_len=hist)
+    _check_rows(out, q, kd, vd, hist, c, TOL[dtype])

@@ -1,0 +1,203 @@
+"""Property tests for the ref-counted, prefix-indexed ``PageAllocator``.
+
+The allocator is the serving engine's safety kernel: whatever interleaving
+of submit (match + ref + alloc), decode growth (alloc), copy-on-write
+(alloc + free), retire / preempt (free) and prefix registration occurs,
+
+* pages are conserved — free + evictable + live == total (nothing leaks),
+* a page is never double-freed (freeing an unheld page raises),
+* the prefix index stays consistent with the refcount state, and
+* eviction only ever reclaims refcount-0 pages.
+
+The interleavings are hypothesis-generated op sequences interpreted
+against the real allocator, with ``check_invariants()`` (the conservation
+oracle) asserted after every single operation.  A short prompt alphabet
+forces heavy prefix collisions so match/ref/COW paths are actually hit.
+"""
+
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.serve import PageAllocator
+
+PS = 8  # page size for the property runs
+
+
+def _tokens(seed: int, length: int) -> list[int]:
+    # alphabet of 3 + short lengths => dense prefix-collision space
+    return [(seed + i * i) % 3 for i in range(length)]
+
+
+def _run_interleaving(npages: int, ops: list[tuple[int, int]]) -> None:
+    """Interpret an op sequence against a real allocator, asserting the
+    conservation oracle after every operation."""
+    a = PageAllocator(npages, PS)
+    holders: list[list] = []     # [pages, tokens] per live "request"
+
+    for code, arg in ops:
+        if code == 0:
+            # submit: probe the prefix cache, take ownership of the match,
+            # allocate the rest all-or-nothing (engine admission contract)
+            tlen = 1 + arg % (3 * PS)
+            tokens = _tokens(arg, tlen)
+            pages, mlen = a.match_prefix(tokens)
+            mlen = min(mlen, tlen - 1)
+            pages = pages[: a.pages_for(mlen) if mlen else 0]
+            assert len(pages) * PS >= mlen
+            a.ref(pages)
+            fresh = a.alloc(a.pages_for(tlen) - len(pages))
+            if fresh is None:
+                a.free(pages)          # rollback: the request queues
+            else:
+                holders.append([pages + fresh, tokens])
+        elif code == 1 and holders:
+            # decode growth: one more page for a growing cache
+            h = holders[arg % len(holders)]
+            got = a.alloc(1)
+            if got is not None:
+                h[0].extend(got)
+                h[1].extend(_tokens(arg, PS))
+        elif code == 2 and holders:
+            # retire / preempt: all pages returned (single decref each)
+            pages, _ = holders.pop(arg % len(holders))
+            a.free(pages)
+        elif code == 3 and holders:
+            # publish full pages to the prefix index
+            h = holders[arg % len(holders)]
+            a.register(h[1], h[0])
+        elif code == 4 and holders:
+            # copy-on-write: replace the first shared page we hold
+            h = holders[arg % len(holders)]
+            for i, p in enumerate(h[0]):
+                if a.refcount(p) > 1:
+                    got = a.alloc(1)
+                    if got is not None:
+                        a.free([p])
+                        h[0][i] = got[0]
+                    break
+        a.check_invariants()
+        assert a.free_pages + a.live_pages == a.num_pages
+        held = {p for h in holders for p in h[0]}
+        for p in held:
+            assert a.refcount(p) >= 1, "held page lost its refcount"
+
+    # drain everything: the whole pool must come back
+    for pages, _ in holders:
+        a.free(pages)
+    a.check_invariants()
+    assert a.free_pages == a.num_pages
+    assert a.live_pages == 0
+
+
+@given(
+    npages=st.integers(2, 12),
+    ops=st.lists(st.tuples(st.integers(0, 4), st.integers(0, 2 ** 20)),
+                 max_size=80),
+)
+@settings(max_examples=60, deadline=None)
+def test_arbitrary_interleavings_conserve_pages(npages, ops):
+    """Random submit/grow/COW/retire/register interleavings never leak or
+    double-free, and the index never drifts from the refcount state."""
+    _run_interleaving(npages, ops)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_seeded_interleavings_conserve_pages(seed):
+    """Seeded variant of the interleaving property — runs (and keeps the
+    invariants load-bearing) even where hypothesis is not installed."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    npages = int(rng.integers(2, 13))
+    ops = [(int(rng.integers(0, 5)), int(rng.integers(0, 2 ** 20)))
+           for _ in range(int(rng.integers(10, 80)))]
+    _run_interleaving(npages, ops)
+
+
+def test_double_free_and_bad_ref_raise():
+    a = PageAllocator(4, PS)
+    got = a.alloc(2)
+    a.free([got[0]])
+    with pytest.raises(ValueError, match="free"):
+        a.free([got[0]])               # refcount already zero
+    with pytest.raises(ValueError, match="free"):
+        a.free([99])                   # never allocated
+    with pytest.raises(ValueError, match="ref"):
+        a.ref([got[0]])                # can't add holders to a free page
+    a.free([got[1]])
+    assert a.free_pages == 4
+
+
+def test_shared_page_freed_once_per_holder():
+    """A page with R holders leaves circulation after exactly R frees —
+    the R+1-th raises."""
+    a = PageAllocator(4, PS)
+    (p,) = a.alloc(1)
+    a.ref([p])
+    a.ref([p])
+    assert a.refcount(p) == 3
+    a.free([p])
+    a.free([p])
+    assert a.refcount(p) == 1
+    a.free([p])
+    assert a.refcount(p) == 0 and a.free_pages == 4
+    with pytest.raises(ValueError, match="free"):
+        a.free([p])
+
+
+def test_indexed_pages_park_then_revive_or_evict():
+    """Refcount-0 indexed pages are evictable cache, still matchable;
+    under pressure they are reclaimed LRU-first and leave the index."""
+    a = PageAllocator(3, PS)
+    toks = list(range(2 * PS))
+    pages = a.alloc(2)
+    a.register(toks, pages)
+    a.free(pages)
+    assert a.cached_pages == 2 and a.free_pages == 3
+    # still matchable after the holder retired
+    hit, mlen = a.match_prefix(toks)
+    assert hit == pages and mlen == 2 * PS
+    # revival: ref brings a cached page back to refcount 1
+    a.ref(hit)
+    assert a.refcount(pages[0]) == 1 and a.cached_pages == 0
+    a.free(hit)
+    # pressure: allocating the whole pool evicts the cache entries
+    got = a.alloc(3)
+    assert got is not None and a.evictions == 2
+    assert a.match_prefix(toks) == ([], 0), "evicted pages must unindex"
+    a.check_invariants()
+
+
+def test_match_prefix_partial_page():
+    """A prompt diverging mid-way through a cached page matches that page
+    partially — the COW trigger case."""
+    a = PageAllocator(4, PS)
+    toks = list(range(2 * PS))
+    pages = a.alloc(2)
+    a.register(toks, pages)
+    # identical first page; second page diverges after 3 tokens
+    probe = toks[:PS + 3] + [777] * 4
+    hit, mlen = a.match_prefix(probe)
+    assert hit == pages and mlen == PS + 3
+    # unindex of the sole-owner page removes it from future matches
+    a.unindex(pages[1])
+    hit, mlen = a.match_prefix(probe)
+    assert hit == pages[:1] and mlen == PS
+    a.free(pages)
+    a.check_invariants()
+
+
+def test_register_first_writer_wins():
+    """Identical content arriving in a different page is not re-indexed —
+    matches keep pointing at the original copy."""
+    a = PageAllocator(4, PS)
+    toks = list(range(PS))
+    p1 = a.alloc(1)
+    a.register(toks, p1)
+    p2 = a.alloc(1)
+    a.register(toks, p2)               # duplicate content, different page
+    hit, mlen = a.match_prefix(toks + [1])
+    assert hit == p1 and mlen == PS
+    assert not a.is_indexed(p2[0])
+    a.free(p1 + p2)
+    a.check_invariants()

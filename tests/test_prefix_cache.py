@@ -1,0 +1,323 @@
+"""Prefix-sharing serving: cached pages mapped into new requests' block
+tables, copy-on-write at the divergence point, chunked prefill directly
+into pages — all invisible to the tokens.
+
+Every test's ground truth is a cold engine (or a solo dense run): prefix
+reuse, COW, preemption of shared holders, and cache hits after the
+original request retired must change *which pages hold the KV*, never
+what any request generates.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.models import transformer as T
+from repro.serve import ServeEngine
+
+
+def _mk(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 128)
+    kw.setdefault("page_size", 16)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _drain(engine, reqs, n=6):
+    uids = [engine.submit(p, max_new_tokens=n) for p in reqs]
+    done = engine.run_until_drained()
+    by_uid = {r.uid: list(r.tokens) for r in done}
+    return [by_uid[u] for u in uids]
+
+
+@pytest.fixture(scope="module")
+def gqa():
+    cfg = registry.get_reduced("deepseek-7b")
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts_with_shared_prefix(cfg, rng, *, prefix_len, tails):
+    pre = list(map(int, rng.integers(0, cfg.vocab_size, prefix_len)))
+    return [pre + list(map(int, rng.integers(0, cfg.vocab_size, t)))
+            for t in tails]
+
+
+# --------------------------------------------------------------------------
+# parity: shared-prefix serving == cold-start serving
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "deepseek-v2-lite-16b",
+                                  "qwen3-moe-235b-a22b",
+                                  "jamba-1.5-large-398b"])
+def test_paged_chunked_engine_matches_cold_solo(arch):
+    """Chunked-into-pages prefill (+ prefix cache where it is sound) must
+    reproduce dense solo tokens on GQA, MLA + first_k_dense, MoE (single
+    exact chunk, prefix cache off) and hybrid recurrent architectures,
+    with ragged prompt lengths that do not divide the chunk size."""
+    cfg = registry.get_reduced(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(13)
+    prompts = _prompts_with_shared_prefix(cfg, rng, prefix_len=18,
+                                          tails=[1, 9, 23])
+    engine = _mk(cfg, params, max_batch=3, prefill_chunk=32)
+    assert engine.paged
+    got = _drain(engine, prompts, n=5)
+    for i, p in enumerate(prompts):
+        solo = ServeEngine(cfg, params, max_batch=1, max_len=128,
+                           paged=False)
+        ref = solo.generate([p], max_new_tokens=5).tokens[0]
+        np.testing.assert_array_equal(np.asarray(got[i]), ref,
+                                      err_msg=f"{arch} request {i}")
+    # drained: every page is reclaimable (live = dump page only)
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_shared_prefix_decode_equals_cold_start(gqa):
+    """Satellite: logits downstream of a prefix-cache hit are the cold
+    path's logits — greedy tokens must be identical with the cache on and
+    off, and the hit must actually happen."""
+    cfg, params = gqa
+    rng = np.random.default_rng(21)
+    prompts = _prompts_with_shared_prefix(cfg, rng, prefix_len=40,
+                                          tails=[3, 7])
+    warm = _mk(cfg, params)
+    cold = _mk(cfg, params, prefix_cache=False)
+    warm_toks = _drain(warm, prompts)
+    cold_toks = _drain(cold, prompts)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(np.asarray(warm_toks[i]),
+                                      np.asarray(cold_toks[i]),
+                                      err_msg=f"request {i}")
+    assert warm.prefix_hit_tokens > 0, "the shared prefix never hit"
+    assert cold.prefix_hit_tokens == 0
+    # reuse really skipped compute: fewer prompt tokens were prefilled
+    assert warm.prefill_tokens < cold.prefill_tokens
+
+
+# --------------------------------------------------------------------------
+# copy-on-write at the divergence point
+# --------------------------------------------------------------------------
+
+def test_cow_fires_exactly_once_on_divergence(gqa):
+    """Two live requests sharing a prefix that diverges mid-page: the
+    second request COWs the partial page exactly once, both keep their
+    solo tokens, and compile counters stay bounded by shapes."""
+    cfg, params = gqa
+    rng = np.random.default_rng(22)
+    # the 35-token shared prefix ends mid-page-2; A's 13-token tail fills
+    # that page (48 = 3 full pages, so page 2 is registered and matchable)
+    # while B diverges 3 tokens into it — the COW trigger geometry
+    pa, pb = _prompts_with_shared_prefix(cfg, rng, prefix_len=35,
+                                         tails=[13, 5])
+    engine = _mk(cfg, params)
+    ua = engine.submit(pa, max_new_tokens=6)
+    engine.step()                       # A admitted, pages registered
+    assert engine.cow_count == 0
+    ub = engine.submit(pb, max_new_tokens=6)
+    done = engine.run_until_drained()
+    by_uid = {r.uid: list(r.tokens) for r in done}
+    assert engine.cow_count == 1, (
+        f"divergence through one shared partial page must COW exactly "
+        f"once, saw {engine.cow_count}")
+    assert engine.prefix_hit_tokens >= 32, "B should reuse A's full pages"
+    for uid, p in ((ua, pa), (ub, pb)):
+        solo = ServeEngine(cfg, params, max_batch=1, max_len=128,
+                           paged=False)
+        np.testing.assert_array_equal(
+            np.asarray(by_uid[uid]),
+            solo.generate([p], max_new_tokens=6).tokens[0],
+            err_msg=f"request {uid}")
+    # decode compiled per bucket, chunk prefill per (cap, bucket) shape
+    assert engine.decode_compiles <= 2
+    assert engine.prefill_compiles <= 3
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_page_aligned_shared_prefix_needs_no_cow(gqa):
+    """Divergence exactly at a page boundary shares whole pages without
+    ever writing them — no COW, no extra pages for the shared span."""
+    cfg, params = gqa
+    rng = np.random.default_rng(23)
+    pa, pb = _prompts_with_shared_prefix(cfg, rng, prefix_len=32,
+                                         tails=[6, 9])
+    engine = _mk(cfg, params)
+    engine.submit(pa, max_new_tokens=4)
+    engine.step()
+    before = engine.allocator.alloc_count
+    engine.submit(pb, max_new_tokens=4)
+    engine.run_until_drained()
+    assert engine.cow_count == 0
+    assert engine.prefix_hit_tokens >= 32
+    # B allocated pages only for its tail + decode growth, not the prefix
+    assert engine.allocator.alloc_count - before <= 3
+
+
+# --------------------------------------------------------------------------
+# lifetime edge cases
+# --------------------------------------------------------------------------
+
+def test_preempting_shared_holder_leaves_survivor_intact(gqa):
+    """Preemption of a request holding shared pages only drops *its*
+    references — the survivor's cache (including the shared pages) stays
+    valid and its tokens match solo generation."""
+    cfg, params = gqa
+    rng = np.random.default_rng(24)
+    # one 16-token page shared; tiny pool forces mid-decode preemption
+    pa, pb = _prompts_with_shared_prefix(cfg, rng, prefix_len=16,
+                                         tails=[2, 3])
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                         page_size=16, num_pages=5)
+    ua = engine.submit(pa, max_new_tokens=20)
+    ub = engine.submit(pb, max_new_tokens=20)
+    done = engine.run_until_drained(max_steps=400)
+    by_uid = {r.uid: list(r.tokens) for r in done}
+    for uid, p in ((ua, pa), (ub, pb)):
+        solo = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                           paged=False)
+        np.testing.assert_array_equal(
+            np.asarray(by_uid[uid]),
+            solo.generate([p], max_new_tokens=20).tokens[0],
+            err_msg=f"request {uid}")
+    assert engine.allocator.free_pages == engine.num_pages - 1
+    engine.allocator.check_invariants()
+
+
+def test_prefix_hit_after_original_retires(gqa):
+    """Retired requests' full pages stay matchable (evictable cache):  a
+    later identical-prefix request hits them with zero live sharers, and
+    still generates exactly the cold tokens."""
+    cfg, params = gqa
+    rng = np.random.default_rng(25)
+    p1, p2 = _prompts_with_shared_prefix(cfg, rng, prefix_len=33,
+                                         tails=[2, 4])
+    engine = _mk(cfg, params)
+    t1 = _drain(engine, [p1])[0]
+    assert not engine.active_requests
+    hits_before = engine.prefix_hit_tokens
+    t2 = _drain(engine, [p2])[0]
+    assert engine.prefix_hit_tokens - hits_before >= 32, (
+        "wave-2 prompt must hit the retired request's cached pages")
+    solo = ServeEngine(cfg, params, max_batch=1, max_len=128, paged=False)
+    np.testing.assert_array_equal(
+        np.asarray(t2), solo.generate([p2], max_new_tokens=6).tokens[0])
+    del t1
+    engine.allocator.check_invariants()
+
+
+def test_cache_eviction_under_pressure_keeps_serving(gqa):
+    """A pool sized so cached pages must be evicted to admit new work:
+    eviction reclaims LRU cache pages transparently and every request
+    still matches its solo tokens."""
+    cfg, params = gqa
+    rng = np.random.default_rng(26)
+    waves = [_prompts_with_shared_prefix(cfg, rng, prefix_len=16,
+                                         tails=[3])[0]
+             for _ in range(4)]                        # 4 distinct prefixes
+    engine = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                         page_size=16, num_pages=4)    # 3 allocatable
+    outs = [_drain(engine, [p], n=4)[0] for p in waves]
+    assert engine.allocator.evictions > 0, "pool never felt the cache"
+    for p, got in zip(waves, outs):
+        solo = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                           paged=False)
+        np.testing.assert_array_equal(
+            np.asarray(got), solo.generate([p], max_new_tokens=4).tokens[0])
+    engine.allocator.check_invariants()
+
+
+def test_run_until_drained_exception_carries_finished_and_reclaims(gqa):
+    """Satellite regression: exhausting max_steps raises with the already-
+    finished requests riding on ``err.finished``, the un-finished request
+    resumes on the next call, and afterwards the allocator is fully
+    reclaimed (shared pages included)."""
+    cfg, params = gqa
+    rng = np.random.default_rng(27)
+    short, long = _prompts_with_shared_prefix(cfg, rng, prefix_len=20,
+                                              tails=[1, 2])
+    engine = _mk(cfg, params)
+    u_short = engine.submit(short, max_new_tokens=2)
+    u_long = engine.submit(long, max_new_tokens=40)
+    with pytest.raises(RuntimeError, match="still pending") as ei:
+        engine.run_until_drained(max_steps=5)
+    finished = ei.value.finished
+    assert [r.uid for r in finished] == [u_short], (
+        "finished results must ride on the exception")
+    assert len(finished[0].tokens) == 2
+    # the long request is still live with its pages intact — resume
+    assert [r.uid for r in engine.active_requests] == [u_long]
+    assert engine.allocator.live_pages > 1      # dump + the live request
+    done = engine.run_until_drained()
+    assert [r.uid for r in done] == [u_long]
+    assert len(done[0].tokens) == 40
+    # full reclamation: only the dump page stays live
+    assert engine.allocator.live_pages == 1
+    assert engine.allocator.free_pages == engine.num_pages - 1
+    engine.allocator.check_invariants()
+
+
+def test_long_prompt_after_partial_page_hit(gqa):
+    """Regression: a partial-page prefix hit leaves the suffix prefill
+    starting mid-page; the boundary-snapping chunk must re-align to the
+    page grid without the tail chunk's padding ever crossing max_len
+    (this used to raise 'cache length ... exceeds max_len' mid-serve when
+    the follower's prompt approached max_len)."""
+    cfg, params = gqa
+    rng = np.random.default_rng(28)
+    pre = list(map(int, rng.integers(0, cfg.vocab_size, 33)))
+    pa = pre + list(map(int, rng.integers(0, cfg.vocab_size, 15)))  # 48
+    pb = pre + list(map(int, rng.integers(0, cfg.vocab_size, 94)))  # 127
+    engine = _mk(cfg, params, max_batch=1)     # max_len=128, page 16
+    ta = _drain(engine, [pa], n=2)[0]
+    tb = _drain(engine, [pb], n=1)[0]          # used to raise here
+    assert engine.prefix_hit_tokens >= 33, "partial-page hit expected"
+    for p, got, n in ((pa, ta, 2), (pb, tb, 1)):
+        solo = ServeEngine(cfg, params, max_batch=1, max_len=128,
+                           paged=False)
+        np.testing.assert_array_equal(
+            np.asarray(got), solo.generate([p], max_new_tokens=n).tokens[0])
+    engine.allocator.check_invariants()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_random_shared_prefix_workload_stays_exact(gqa, seed):
+    """Engine-level interleaving property: random waves of prefix-sharing
+    prompts through a deliberately tight pool (forcing queueing,
+    preemption, COW and eviction together) still produce every request's
+    solo tokens, and the allocator conserves pages throughout."""
+    cfg, params = gqa
+    rng = np.random.default_rng(100 + seed)
+    pre = list(map(int, rng.integers(0, cfg.vocab_size, 24)))
+    prompts = []
+    for _ in range(5):
+        tail = list(map(int, rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(1, 12)))))
+        cut = int(rng.integers(8, 25))     # varying shared-prefix depth
+        prompts.append(pre[:cut] + tail)
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                         page_size=16, num_pages=7)
+    uids = [engine.submit(p, max_new_tokens=int(rng.integers(2, 8)))
+            for p in prompts]
+    budgets = {u: engine._queue[i].max_new_tokens
+               for i, u in enumerate(uids)}
+    done = engine.run_until_drained(max_steps=500)
+    engine.allocator.check_invariants()
+    assert engine.allocator.free_pages == engine.num_pages - 1
+    by_uid = {r.uid: list(r.tokens) for r in done}
+    for u, p in zip(uids, prompts):
+        solo = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                           paged=False)
+        ref = solo.generate([p], max_new_tokens=budgets[u]).tokens[0]
+        np.testing.assert_array_equal(np.asarray(by_uid[u]), ref,
+                                      err_msg=f"request {u} (seed {seed})")
+
+
+def test_prefix_cache_off_for_unsound_archs():
+    """Recurrent state and capacity-truncated MoE make prefix reuse
+    numerics-changing — the engine must refuse to enable it there."""
+    for arch in ("jamba-1.5-large-398b", "qwen3-moe-235b-a22b"):
+        cfg = registry.get_reduced(arch)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        engine = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                             page_size=16, prefix_cache=True)
+        assert engine.paged and not engine.prefix_cache

@@ -285,15 +285,39 @@ def test_mid_decode_growth_preempts_youngest():
     assert engine.allocator.free_pages == engine.num_pages - 1
 
 
-def test_prefill_compiles_bounded_by_prompt_buckets():
-    """Satellite: _admit pads prompts to prompt_bucket_lo buckets, so N
-    distinct prompt lengths cost at most #buckets prefill traces — not N."""
+def test_prefill_compiles_bounded_by_chunk_shapes():
+    """Satellite: the paged path prefills in page-aligned chunks whose
+    capacities are page multiples, so N distinct prompt lengths cost at
+    most #(chunk cap, kv bucket) pairs — not N traces."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(10)
+    lens = [3, 5, 6, 7, 9, 11, 13, 15, 20, 31]   # all inside one 32-cap
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=128,
+                         page_size=32)
+    for n in lens:
+        engine.submit(list(map(int, rng.integers(0, cfg.vocab_size, n))),
+                      max_new_tokens=2)
+    engine.run_until_drained()
+    assert engine.prefill_compiles == 1, (
+        f"{len(lens)} distinct prompt lengths must share one 32-token "
+        f"chunk trace, saw {engine.prefill_compiles}")
+    # a longer prompt needs the 64-cap tail chunk: exactly one more trace
+    engine.submit(list(map(int, rng.integers(0, cfg.vocab_size, 40))),
+                  max_new_tokens=2)
+    engine.run_until_drained()
+    assert engine.prefill_compiles == 2
+
+
+def test_prefill_compiles_bounded_by_prompt_buckets_dense():
+    """The dense submit/step path keeps the prompt-bucket padding bound:
+    N distinct prompt lengths cost at most #buckets prefill traces."""
     cfg = registry.get_reduced("deepseek-7b")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(10)
     lens = [3, 5, 6, 7, 9, 11, 13, 15]          # all inside the 16-bucket
     engine = ServeEngine(cfg, params, max_batch=2, max_len=128,
-                         prompt_bucket_lo=16)
+                         prompt_bucket_lo=16, paged=False)
     for n in lens:
         engine.submit(list(map(int, rng.integers(0, cfg.vocab_size, n))),
                       max_new_tokens=2)
