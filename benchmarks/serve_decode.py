@@ -1,5 +1,5 @@
 """Decode-path serving benchmark: per-step recompilation vs bucketed
-runtime-length decode.
+runtime-length decode, plus the split-KV context-length sweep.
 
 The seed engine specialised the decode jit on ``cache_len`` (a static TL
 parameter), so every generated token retraced and recompiled — T tokens,
@@ -11,6 +11,16 @@ steady-state tokens/sec.
 
     PYTHONPATH=src python benchmarks/serve_decode.py --arch deepseek-7b \
         --new-tokens 32
+
+``--sweep`` instead drives the paged submit/step engine across KV context
+lengths at batch {1, 4} and reports *pure decode* steady-state tok/s
+(admission/prefill excluded) with reason-chosen split-KV decode vs forced
+``num_splits=1`` — the Flash-Decoding win: small batches over long
+contexts under-fill the machine, splitting the KV axis fills it.  These
+rows seed the repo's BENCH trajectory.
+
+    PYTHONPATH=src python benchmarks/serve_decode.py --sweep
+    PYTHONPATH=src python benchmarks/serve_decode.py --sweep --tiny  # CI
 """
 
 from __future__ import annotations
@@ -69,6 +79,59 @@ def bucketed_generate(engine, prompts, max_new_tokens):
     return res.tokens, engine.decode_compiles, dt
 
 
+def steady_decode_tps(engine, prompts, new_tokens):
+    """Pure decode steady-state tok/s: submit everything, run the first
+    step (admission + prefill + first decode) outside the clock, then
+    time the remaining decode steps only."""
+    for p in prompts:
+        engine.submit(p, max_new_tokens=new_tokens)
+    engine.step()   # admission + prefill + first decode, off the clock
+    t0 = time.perf_counter()
+    tokens = 0
+    while engine.active_requests or engine._queue:
+        before = sum(len(r.tokens) for r in engine.active_requests)
+        fin = engine.step()
+        tokens += sum(len(r.tokens) for r in engine.active_requests) \
+            + sum(len(r.tokens) for r in fin) - before
+    return tokens / (time.perf_counter() - t0)
+
+
+def sweep(args):
+    """tok/s vs KV context length at batch {1, 4}, reason-chosen splits
+    vs forced num_splits=1, on the paged submit/step engine."""
+    cfg = dataclasses.replace(registry.get_reduced(args.arch),
+                              attn_impl=args.attn_impl)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    lens = [128, 256] if args.tiny else [256, 512, 1024, 2048]
+    batches = [1, 2] if args.tiny else [1, 4]
+    max_len = max(lens) * 2
+    print(f"[serve-decode --sweep] arch={args.arch} attn={args.attn_impl} "
+          f"new={args.new_tokens} page=64 (pure decode steady state)")
+    print(f"  {'batch':>5} {'kv_len':>7} {'splits=1':>10} "
+          f"{'reason':>10} {'chosen':>7} {'speedup':>8}")
+    for b in batches:
+        for kv_len in lens:
+            prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
+                                                  kv_len)))
+                       for _ in range(b)]
+            row = {}
+            for forced in (1, None):
+                eng = ServeEngine(cfg, params, max_batch=b,
+                                  max_len=max_len, num_splits=forced)
+                steady_decode_tps(eng, prompts, args.new_tokens)  # compile
+                best = max(steady_decode_tps(eng, prompts,
+                                             args.new_tokens)
+                           for _ in range(args.passes))
+                row[forced] = (best, eng)
+            eng = row[None][1]
+            chosen = eng._decode_splits(eng._decode_bucket(kv_len + 1), b,
+                                        paged_dispatch=True)
+            print(f"  {b:>5} {kv_len:>7} {row[1][0]:>9.1f}t "
+                  f"{row[None][0]:>9.1f}t {chosen:>7} "
+                  f"{row[None][0] / row[1][0]:>7.2f}x")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -77,11 +140,23 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--attn-impl", default="xla_flash",
                     choices=["tl_pallas", "xla_flash", "naive"])
+    ap.add_argument("--sweep", action="store_true",
+                    help="split-KV decode context-length sweep "
+                         "(tok/s vs KV length, splits on/off)")
+    ap.add_argument("--passes", type=int, default=3,
+                    help="warm passes per sweep cell (best-of filters "
+                         "scheduler noise)")
     ap.add_argument("--tiny", action="store_true",
                     help="seconds-scale smoke run for CI")
     args = ap.parse_args()
     if args.tiny:
         args.batch, args.prompt_len, args.new_tokens = 2, 12, 4
+        args.passes = 1
+    if args.sweep:
+        if args.tiny:
+            args.new_tokens = 8
+        sweep(args)
+        return
 
     cfg = dataclasses.replace(registry.get_reduced(args.arch),
                               attn_impl=args.attn_impl)

@@ -32,7 +32,8 @@ class GeneratorBackend(Protocol):
 
     def reason_parameters(self, sketch_text: str, spec: AttnSpec,
                           q_len: int, kv_len: int, target: TPUTarget,
-                          blocks: BlockConfig | None) -> str:
+                          blocks: BlockConfig | None,
+                          num_splits: int | None = None) -> str:
         """Stage 1b: TL Sketch -> complete TL Code text."""
         ...
 
@@ -45,13 +46,15 @@ class DeterministicBackend:
 
     def reason_parameters(self, sketch_text: str, spec: AttnSpec,
                           q_len: int, kv_len: int, target: TPUTarget,
-                          blocks: BlockConfig | None = None) -> str:
+                          blocks: BlockConfig | None = None,
+                          num_splits: int | None = None) -> str:
         from .tl.printer import to_text
 
         sketch = parse(sketch_text, name=f"{spec.variant}_fwd_sketch")
         sketch.meta["stage"] = "sketch"
         prog = reason_parameters(sketch, spec, q_len=q_len, kv_len=kv_len,
-                                 target=target, blocks=blocks)
+                                 target=target, blocks=blocks,
+                                 num_splits=num_splits)
         return to_text(prog)
 
 

@@ -46,6 +46,7 @@ class GeneratedKernel:
     pallas_fn: Callable                 # batched (B, H, M, D) kernel
     oracle_fn: Callable                 # single-head 2-D oracle
     tune: Optional[autotune.TuneResult]
+    num_splits: int = 1                 # reasoned (clamped) KV split count
 
     def __call__(self, *args):
         return self.pallas_fn(*args)
@@ -59,11 +60,18 @@ def generate_attention_kernel(
     target: TPUTarget | str = "v5e",
     backend: Optional[GeneratorBackend] = None,
     blocks: Optional[BlockConfig] = None,
+    num_splits: Optional[int] = None,
     interpret: bool = True,
     causal_block_skip: bool = True,
     strict: bool = True,
 ) -> GeneratedKernel:
-    """Generate a fused attention kernel for ``spec`` via the TL workflow."""
+    """Generate a fused attention kernel for ``spec`` via the TL workflow.
+
+    ``num_splits`` is the split-KV work-partitioning request (decode mode;
+    Flash-Decoding) — ``None``/1 keeps the sequential KV loop; larger
+    values are clamped by the reasoning stage (see
+    :func:`repro.core.reason.split_layout`) and lowered by both backends
+    as parallel KV partitions plus an LSE-merge combine."""
 
     if isinstance(target, str):
         target = get_target(target)
@@ -84,14 +92,16 @@ def generate_attention_kernel(
 
     # Stage 1b: parameter reasoning -> complete TL code (text)
     tl_text = backend.reason_parameters(
-        sketch_text, sketch_spec, q_len, kv_len, target, blocks)
+        sketch_text, sketch_spec, q_len, kv_len, target, blocks,
+        num_splits=num_splits)
 
     # Parse + validate (per-statement checking is what makes the paper's
     # workflow reliable; E-diagnostics abort translation)
     prog = parse(tl_text, name=f"{spec.variant}_{spec.mode}")
     # re-attach the parameter environment (text comments carry it for humans;
     # the authoritative binding comes from the reasoning stage)
-    reasoned = _reparse_params(sketch_spec, q_len, kv_len, target, blocks, backend)
+    reasoned = _reparse_params(sketch_spec, q_len, kv_len, target, blocks,
+                               backend, num_splits)
     prog.params = reasoned.params
     prog.inputs = reasoned.inputs
     prog.outputs = ("O",)
@@ -110,10 +120,12 @@ def generate_attention_kernel(
     return GeneratedKernel(
         spec=spec, q_len=q_len, kv_len=kv_len, target=target, blocks=blocks,
         sketch_text=sketch_text, tl_text=tl_text, program=prog,
-        diagnostics=diags, pallas_fn=pallas_fn, oracle_fn=oracle_fn, tune=tr)
+        diagnostics=diags, pallas_fn=pallas_fn, oracle_fn=oracle_fn, tune=tr,
+        num_splits=int(prog.meta.get("num_splits", 1)))
 
 
-def _reparse_params(spec, q_len, kv_len, target, blocks, backend):
+def _reparse_params(spec, q_len, kv_len, target, blocks, backend,
+                    num_splits=None):
     """Recover the authoritative parameter binding for the parsed text.
 
     The deterministic backend can hand us the AST directly; an LLM backend
@@ -124,14 +136,19 @@ def _reparse_params(spec, q_len, kv_len, target, blocks, backend):
     from .sketch import generate_sketch
 
     return reason_parameters(generate_sketch(spec), spec, q_len=q_len,
-                             kv_len=kv_len, target=target, blocks=blocks)
+                             kv_len=kv_len, target=target, blocks=blocks,
+                             num_splits=num_splits)
 
 
 @functools.lru_cache(maxsize=256)
 def cached_kernel(spec: AttnSpec, q_len: int, kv_len: int,
                   target_name: str = "v5e", interpret: bool = True,
-                  causal_block_skip: bool = True) -> GeneratedKernel:
-    """lru-cached kernel factory used by the model layer."""
+                  causal_block_skip: bool = True,
+                  num_splits: int = 1) -> GeneratedKernel:
+    """lru-cached kernel factory used by the model layer.
+
+    Keyed on the *requested* ``num_splits`` — one compiled kernel per
+    (spec, shape bucket, splits), the serving compile contract."""
     return generate_attention_kernel(
         spec, q_len, kv_len, target=target_name, interpret=interpret,
-        causal_block_skip=causal_block_skip)
+        causal_block_skip=causal_block_skip, num_splits=num_splits)

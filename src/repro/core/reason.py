@@ -42,6 +42,11 @@ from .tl.ast import (
 
 LANE = 128
 
+# Split-KV decode (Flash-Decoding) cap: each extra split adds a partial
+# (acc, m, l) tile to merge in the combine stage, so past this the combine
+# overhead eats the parallelism win on every target we describe.
+MAX_KV_SPLITS = 8
+
 
 class ReasonError(ValueError):
     pass
@@ -82,6 +87,69 @@ def default_blocks(spec: AttnSpec, q_len: int, kv_len: int,
     return BlockConfig(bm=bm, bn=bn)
 
 
+def split_layout(num_splits: int, tkv: int, unit: int = 1) -> tuple[int, int]:
+    """Clamp a requested KV split count to the tile grid.
+
+    Returns ``(ns, tps)``: ``ns`` splits of ``tps`` KV tiles each (the last
+    split may cover fewer live tiles).  Splits are whole-tile, at most
+    :data:`MAX_KV_SPLITS` (the combine-overhead bound applies to forced
+    requests too), and ``unit`` (KV tiles per page in a paged layout)
+    keeps every split boundary on a page boundary so a split's gather
+    never touches a partial page.  The result is a fixed point:
+    ``split_layout(ns, tkv, unit) == (ns, tps)`` again, which is what
+    lets reason record the final ``NUM_SPLITS`` and both translation
+    backends re-derive the identical layout.
+    """
+    unit = max(1, int(unit))
+    tkv = max(1, int(tkv))
+    ns = max(1, min(int(num_splits), tkv, MAX_KV_SPLITS))
+    tps = -(-tkv // ns)                 # tiles per split, then page-align up
+    tps = -(-tps // unit) * unit
+    ns = -(-tkv // tps)
+    return ns, tps
+
+
+def choose_num_splits(*, rows: int, kv_len: int, mode: str = "decode",
+                      page_size: Optional[int] = None,
+                      target: TPUTarget | str = "v5e") -> int:
+    """The reasoning stage's split-KV decision (Flash-Decoding; FA-2's
+    "parallelism and work partitioning" axis).
+
+    Decode grids expose only ``rows = bsz * heads`` parallel programs while
+    the KV axis rides the sequential grid dimension — a small continuous-
+    batching batch over a long context leaves the device idle.  Split the
+    KV axis until ``rows * splits`` reaches the target's
+    ``decode_parallelism``, but never below one page (paged) / one lane
+    tile (dense) per split and never past :data:`MAX_KV_SPLITS` (the
+    combine stage's overhead bound).  Deterministic: a pure function of
+    (mode, rows, bucketed KV length, page geometry, target).
+    """
+    if mode != "decode":
+        return 1
+    if isinstance(target, str):
+        target = get_target(target)
+    want = -(-int(target.decode_parallelism) // max(1, int(rows)))
+    unit = int(page_size) if page_size else LANE
+    cap = max(1, int(kv_len) // max(1, unit))
+    return int(max(1, min(want, cap, MAX_KV_SPLITS)))
+
+
+def resolve_num_splits(num_splits: Optional[int], *, rows: int, kv_len: int,
+                       mode: str = "decode",
+                       page_size: Optional[int] = None,
+                       target: TPUTarget | str = "v5e") -> int:
+    """A caller's explicit split request, or the heuristic default.
+
+    The single resolution point for every lowering (TL/Pallas, jnp
+    oracle, XLA scan): one decision, N lowerings.  Explicit requests are
+    honoured up to :data:`MAX_KV_SPLITS` — the combine-overhead cap is a
+    property of the lowering, not of who asked."""
+    if num_splits is not None:
+        return max(1, min(int(num_splits), MAX_KV_SPLITS))
+    return choose_num_splits(rows=rows, kv_len=kv_len, mode=mode,
+                             page_size=page_size, target=target)
+
+
 def _vmem_bytes(spec: AttnSpec, bm: int, bn: int) -> int:
     in_b = 2 if spec.dtype in ("bf16", "f16", "fp8") else 4
     q = bm * spec.qk_dim * in_b
@@ -103,10 +171,20 @@ def reason_parameters(
     kv_len: int,
     target: TPUTarget | str = "v5e",
     blocks: Optional[BlockConfig] = None,
+    num_splits: Optional[int] = None,
     omit_reshape: bool = False,
     gemm_layout_bug: bool = False,
 ) -> TLProgram:
-    """Expand a TL Sketch into complete TL Code (see module docstring)."""
+    """Expand a TL Sketch into complete TL Code (see module docstring).
+
+    ``num_splits`` (decode mode only) is the split-KV work-partitioning
+    decision: the KV loop is divided into that many *parallel* partitions,
+    each producing partial ``(acc, m, l)`` online-softmax state that an
+    LSE-merge combine stage reduces (Flash-Decoding).  The request is
+    clamped through :func:`split_layout` (whole tiles, page-aligned in
+    paged layouts) and the final count is recorded as the ``NUM_SPLITS``
+    parameter (with the ``KV_SPLIT`` marker) for both translation
+    backends.  ``None``/1 keeps the single sequential KV loop."""
 
     if isinstance(target, str):
         target = get_target(target)
@@ -151,6 +229,33 @@ def reason_parameters(
         if bn != blocks.bn:
             blocks = BlockConfig(bm=blocks.bm, bn=bn)
 
+    # Split-KV (Flash-Decoding): partition the KV loop into NUM_SPLITS
+    # parallel pieces.  A reasoned decision like BN/PAGE_SIZE: the request
+    # is clamped to whole KV tiles and (paged) whole pages per split, so
+    # the translated gather/mask machinery is untouched inside a split.
+    splits = 1
+    if num_splits is not None and int(num_splits) != 1:
+        if spec.mode != "decode":
+            raise ReasonError(
+                f"KV split is a decode work-partitioning decision; mode "
+                f"{spec.mode!r} parallelises over q tiles instead")
+        want = min(int(num_splits), MAX_KV_SPLITS)
+        if not paged:
+            # partitioning feeds back into tiling (the FA-2 observation):
+            # a KV tile as wide as the whole bucket leaves nothing to
+            # split, so shrink BN — never below a lane tile — until the
+            # KV axis has enough tiles to honour the request.  (Paged
+            # layouts can't gain tiles this way: splits are clamped to
+            # whole pages, and shrinking BN never adds pages.)
+            bn = blocks.bn
+            while -(-kv_len // bn) < want and bn > LANE and bn % 2 == 0:
+                bn //= 2
+            if bn != blocks.bn:
+                blocks = BlockConfig(bm=blocks.bm, bn=bn)
+        unit = spec.page_size // blocks.bn if paged else 1
+        splits, _ = split_layout(int(num_splits),
+                                 -(-kv_len // blocks.bn), unit)
+
     params: dict = {
         "M": q_len,
         "N": kv_len,
@@ -172,6 +277,11 @@ def reason_parameters(
     if paged:
         params["KV_PAGED"] = 1
         params["PAGE_SIZE"] = spec.page_size
+    if splits > 1:
+        # marker + final (clamped) split count; the backends re-derive the
+        # identical per-split tile layout through split_layout
+        params["KV_SPLIT"] = 1
+        params["NUM_SPLITS"] = splits
     if mla:
         params["R"] = spec.kv_lora_rank
         params["Rr"] = spec.rope_head_dim
@@ -265,6 +375,7 @@ def reason_parameters(
         outputs=("O",),
         meta={**sketch.meta, "stage": "code", "blocks": blocks,
               "target": target.name, "runtime_kv_len": runtime_kv,
-              "paged": paged, "chunk_prefill": chunked},
+              "paged": paged, "chunk_prefill": chunked,
+              "num_splits": splits},
     )
     return prog

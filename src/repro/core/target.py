@@ -46,6 +46,12 @@ class TPUTarget:
     hbm_gbps: float = 819.0               # HBM bandwidth GB/s
     ici_gbps: float = 50.0                # per-link ICI bandwidth GB/s
     supported_dtypes: tuple[str, ...] = ("f32", "bf16", "int8")
+    # How many *parallel* grid programs the scheduler wants in flight to
+    # fill the core (megacore halves + enough live DMA streams to hide
+    # HBM latency).  The reasoning stage splits a decode kernel's KV axis
+    # (Flash-Decoding) until `bsz * heads * splits` reaches this — the
+    # TPU analogue of GPU FlashDecoding sizing splits to the SM count.
+    decode_parallelism: int = 16
     # fraction of VMEM the autotuner may plan into (leave room for Mosaic's
     # own double-buffering of pipelined operands)
     vmem_budget_frac: float = 0.5
@@ -80,6 +86,7 @@ TARGETS: dict[str, TPUTarget] = {
         peak_bf16_tflops=459.0,
         hbm_gbps=2765.0,
         ici_gbps=100.0,
+        decode_parallelism=32,            # megacore: two TensorCores/chip
     ),
     "v6e": TPUTarget(
         name="v6e",

@@ -27,6 +27,7 @@ from ..tl.ast import (
     Reshape,
     TLProgram,
 )
+from ..reason import split_layout
 from ..tl.validator import base_name
 from . import semantics
 
@@ -64,6 +65,13 @@ def translate_jnp(prog: TLProgram):
     length: the M q rows sit at positions ``hist .. hist+M-1`` and the
     causal mask offset is the runtime scalar (mirroring the Pallas
     backend's runtime-shifted diagonal; no separate bounds mask).
+
+    Split-KV programs (``params['NUM_SPLITS'] > 1``) run the KV loop once
+    per split over that split's tile slice with *fresh* online-softmax
+    state, then LSE-merge the partials (:func:`semantics.lse_merge`)
+    before the epilogue — the identical split/merge the Pallas backend
+    launches as a parallel grid dimension plus combine kernel, so parity
+    tests exercise the same partition arithmetic on both backends.
     """
 
     p = dict(prog.params)
@@ -75,6 +83,8 @@ def translate_jnp(prog: TLProgram):
     chunked = bool(prog.meta.get("chunk_prefill") or p.get("KV_CHUNK"))
     page = int(p["PAGE_SIZE"]) if paged else None
     mpp = page // bn if paged else None    # KV tiles per page
+    # split-KV: the same fixed-point layout the Pallas backend derives
+    ns, tps = split_layout(int(p.get("NUM_SPLITS", 1)), tkv, mpp or 1)
     n_pad = tkv * bn
     tq = -(-m_real // bm)
     m_pad = tq * bm
@@ -94,14 +104,20 @@ def translate_jnp(prog: TLProgram):
         """
 
         state: dict = {}
-        # register allocations -> initial values
-        for a in allocs.values():
-            if a.space is MemSpace.REGISTER and a.name != "S":
-                shape = tuple(prog.resolve(d) for d in a.shape)
-                if a.name == "m":
-                    state[a.name] = jnp.full(shape, semantics.NEG_INF, jnp.float32)
-                else:
-                    state[a.name] = jnp.zeros(shape, jnp.float32)
+
+        def reset_registers():
+            # register allocations -> initial values (fresh online-softmax
+            # state; split-KV resets these once per split partition)
+            for a in allocs.values():
+                if a.space is MemSpace.REGISTER and a.name != "S":
+                    shape = tuple(prog.resolve(d) for d in a.shape)
+                    if a.name == "m":
+                        state[a.name] = jnp.full(shape, semantics.NEG_INF,
+                                                 jnp.float32)
+                    else:
+                        state[a.name] = jnp.zeros(shape, jnp.float32)
+
+        reset_registers()
 
         loop_env = {"q": q_idx}
 
@@ -127,6 +143,25 @@ def translate_jnp(prog: TLProgram):
                 if isinstance(s, ForLoop):
                     start = prog.resolve(s.start) if not isinstance(s.start, int) else s.start
                     end = prog.resolve(s.end) if not isinstance(s.end, int) else s.end
+                    if ns > 1:
+                        # split-KV: run the loop per split slice with fresh
+                        # state, then LSE-merge the partials — mirroring
+                        # the Pallas parallel split grid + combine kernel
+                        parts = []
+                        for si in range(ns):
+                            reset_registers()
+                            for it in range(start + si * tps,
+                                            min(start + (si + 1) * tps, end)):
+                                loop_env[s.var] = it
+                                exec_stmts(s.body)
+                            parts.append((state["acc"], state["m"],
+                                          state["l"]))
+                        state["acc"], state["m"], state["l"] = \
+                            semantics.lse_merge(
+                                jnp.stack([a for a, _, _ in parts]),
+                                jnp.stack([m for _, m, _ in parts]),
+                                jnp.stack([l for _, _, l in parts]))
+                        continue
                     for it in range(start, end):
                         loop_env[s.var] = it
                         exec_stmts(s.body)
@@ -264,4 +299,5 @@ def translate_jnp(prog: TLProgram):
     fn.paged = paged
     fn.page_size = page
     fn.chunk_prefill = chunked
+    fn.num_splits = ns
     return fn

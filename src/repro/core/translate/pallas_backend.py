@@ -34,6 +34,13 @@ block table (paged)      SMEM int vector per batch row, read by the KV
                          ``BlockSpec`` *index maps* — the HBM->VMEM DMA
                          itself is redirected to the physical page, so the
                          gather costs nothing over the dense copy
+``NUM_SPLITS`` > 1       the KV loop is partitioned into a *parallel* grid
+                         dimension (Flash-Decoding): each split program
+                         runs the online softmax over its KV slice and
+                         writes partial ``(acc, m, l)`` tiles; a small
+                         combine kernel LSE-merges the partials and runs
+                         the TL epilogue (divide/cast/store).  With one
+                         split the epilogue stays fused in the main grid.
 =====================  ====================================================
 
 The translator is a *staging interpreter*: it walks the TL AST once at trace
@@ -62,6 +69,7 @@ from ..tl.ast import (
     Reshape,
     TLProgram,
 )
+from ..reason import split_layout
 from ..tl.validator import base_name
 from . import semantics
 from .jnp_backend import TranslateError
@@ -140,6 +148,16 @@ def translate_pallas(
     page index (the engine uses a reserved dump page): the gather still
     issues the DMA, the runtime length mask discards the values.
 
+    Split-KV programs (``params['NUM_SPLITS'] > 1`` — decode mode) keep
+    the same call signature but change the launch: the KV tiles are
+    partitioned into ``NUM_SPLITS`` page-aligned slices riding a
+    *parallel* grid dimension, each program producing partial
+    ``(acc, m, l)`` online-softmax state, and a second small kernel
+    LSE-merges the partials (:func:`semantics.lse_merge`) before running
+    the TL epilogue.  Per-row runtime lengths compose: a row whose cache
+    ends before a split's slice leaves that split's state empty
+    (``m = -inf, l = 0``) and the merge ignores it.
+
     Chunked-prefill programs (``meta['chunk_prefill']`` — paged) reuse the
     paged signature, but the leading scalar is the per-row *history*
     length: the M q rows are one prompt chunk sitting at runtime positions
@@ -164,6 +182,11 @@ def translate_pallas(
     chunked = bool(prog.meta.get("chunk_prefill") or p.get("KV_CHUNK"))
     page = int(p["PAGE_SIZE"]) if paged else None
     mpp = page // bn if paged else None     # KV tiles per page (BN | PAGE_SIZE)
+    # split-KV decode (Flash-Decoding): NUM_SPLITS parallel KV partitions,
+    # re-derived through the same fixed-point layout the reasoning stage
+    # used (whole tiles; page-aligned in paged layouts)
+    ns, tps = split_layout(int(p.get("NUM_SPLITS", 1)), tkv, mpp or 1)
+    split = ns > 1
     allocs = prog.allocations()
     structure = _split(prog)
     out_name = prog.outputs[0]
@@ -192,13 +215,25 @@ def translate_pallas(
                 # the (1, 1) SMEM tile the BlockSpec indexed to this row
                 kv_ref, *refs = refs
                 kv_len = kv_ref[0, 0]
-            in_refs = refs[: len(prog.inputs)]
-            o_ref = refs[len(prog.inputs)]
-            acc_ref, m_ref, l_ref = refs[len(prog.inputs) + 1:]
+            ni = len(prog.inputs)
+            in_refs = refs[:ni]
+            if split:
+                # partial-state outputs; the LSE combine normalises later
+                o_ref = None
+                oa_ref, om_ref, ol_ref = refs[ni:ni + 3]
+                acc_ref, m_ref, l_ref = refs[ni + 3:]
+            else:
+                o_ref = refs[ni]
+                acc_ref, m_ref, l_ref = refs[ni + 1:]
             qi = pl.program_id(1)
-            ki = pl.program_id(2)
+            if split:
+                si, kj = pl.program_id(2), pl.program_id(3)
+                ki = si * tps + kj       # global KV tile of this step
+            else:
+                ki = pl.program_id(2)
+                kj = ki                  # step within the (single) split
 
-            @pl.when(ki == 0)
+            @pl.when(kj == 0)
             def _init():
                 acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
                 m_ref[...] = jnp.full(m_ref.shape, semantics.NEG_INF,
@@ -334,6 +369,11 @@ def translate_pallas(
                 else:
                     rt = ki * bn < kv_len
                 live = rt if live is None else (live & rt)
+            if split and ns * tps != tkv:
+                # uneven last split: its tail programs address a clamped
+                # (valid) tile via the index maps but must not compute
+                tail = ki < tkv
+                live = tail if live is None else (live & tail)
             if live is not None:
                 @pl.when(live)
                 def _body():
@@ -343,10 +383,51 @@ def translate_pallas(
                 for s in structure.loop.body:
                     run_stmt(s, "loop")
 
-            @pl.when(ki == tkv - 1)
-            def _epilogue():
-                for s in structure.epilogue:
-                    run_stmt(s, "epilogue")
+            if split:
+                # this split's partial online-softmax state, written once
+                # on its last step; divide/cast move to the combine kernel
+                @pl.when(kj == tps - 1)
+                def _write_partials():
+                    oa_ref[...] = acc_ref[...].reshape(oa_ref.shape)
+                    om_ref[...] = m_ref[...].reshape(om_ref.shape)
+                    ol_ref[...] = l_ref[...].reshape(ol_ref.shape)
+            else:
+                @pl.when(kj == tkv - 1)
+                def _epilogue():
+                    for s in structure.epilogue:
+                        run_stmt(s, "epilogue")
+
+        return kernel
+
+    # ---- the LSE-combine stage (split-KV decode only) ----------------------
+    def make_combine_kernel():
+        """Merge the ``NUM_SPLITS`` partial (acc, m, l) tiles of one
+        (batch-head, q-tile) coordinate and run the TL epilogue
+        (``Divide``/``Cast``/``Copy O``) on the merged state — the same
+        statements the fused epilogue executes in the one-split launch."""
+
+        def kernel(a_ref, mm_ref, ll_ref, o_ref):
+            acc, m_c, l_c = semantics.lse_merge(
+                a_ref[...].reshape(-1, *a_ref.shape[-2:]),
+                mm_ref[...].reshape(-1, *mm_ref.shape[-2:]),
+                ll_ref[...].reshape(-1, *ll_ref.shape[-2:]))
+            env = {"acc": acc, "m": m_c, "l": l_c}
+            for s in structure.epilogue:
+                if isinstance(s, (Allocate, Reshape)):
+                    continue
+                if isinstance(s, ComputeOp) and s.op == "divide":
+                    env[base_name(s.out)] = semantics.divide(
+                        env[base_name(s.args[0])],
+                        env[base_name(s.args[1])])
+                elif isinstance(s, ComputeOp) and s.op == "cast":
+                    env[base_name(s.out)] = \
+                        env[base_name(s.args[0])].astype(out_dtype)
+                elif isinstance(s, Copy) and s.dst is MemSpace.GLOBAL:
+                    val = env[base_name(s.name)].astype(out_dtype)
+                    o_ref[...] = val.reshape(o_ref.shape)
+                else:
+                    raise TranslateError(
+                        f"split decode cannot lower epilogue {s!r}")
 
         return kernel
 
@@ -362,6 +443,25 @@ def translate_pallas(
         if m % bm:
             raise ValueError(f"q rows {m} not a multiple of BM={bm}")
         tq = m // bm
+
+        # Split-KV launches replace the KV grid id ``ki`` with a
+        # (parallel split, step) pair; ``mk`` re-hosts the 3-d index maps
+        # below onto the 4-d grid so the tile arithmetic is written once.
+        def _kt(si, kj):
+            t = si * tps + kj
+            if ns * tps != tkv:
+                # dead tail programs of an uneven last split: clamp to a
+                # valid tile (their compute is predicated off in-kernel)
+                t = jnp.minimum(t, tkv - 1)
+            return t
+
+        if split:
+            def mk(f):
+                return lambda bh, qi, si, kj, *pf: \
+                    f(bh, qi, _kt(si, kj), *pf)
+        else:
+            def mk(f):
+                return f
 
         if paged:
             table = jnp.asarray(table_arg, jnp.int32)
@@ -388,11 +488,12 @@ def translate_pallas(
                                      f"!= PAGE_SIZE={page}")
                 in_specs = [
                     pl.BlockSpec((1, 1, bm, dqk),
-                                 lambda bh, qi, ki, lens, tbl:
-                                 (bh // hq, bh % hq, qi, 0)),
+                                 mk(lambda bh, qi, ki, lens, tbl:
+                                    (bh // hq, bh % hq, qi, 0))),
                     pl.BlockSpec((1, bn, dqk),
-                                 lambda bh, qi, ki, lens, tbl:
-                                 (kv_page(tbl, bh // hq, ki), ki % mpp, 0)),
+                                 mk(lambda bh, qi, ki, lens, tbl:
+                                    (kv_page(tbl, bh // hq, ki),
+                                     ki % mpp, 0))),
                 ]
             else:
                 if c.shape[1] % bn:
@@ -400,9 +501,10 @@ def translate_pallas(
                         f"kv rows {c.shape[1]} not a multiple of BN={bn}")
                 in_specs = [
                     pl.BlockSpec((1, 1, bm, dqk),
-                                 lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
+                                 mk(lambda bh, qi, ki:
+                                    (bh // hq, bh % hq, qi, 0))),
                     pl.BlockSpec((1, bn, dqk),
-                                 lambda bh, qi, ki: (bh // hq, ki, 0)),
+                                 mk(lambda bh, qi, ki: (bh // hq, ki, 0))),
                 ]
             args = (q, c)
         else:
@@ -415,16 +517,16 @@ def translate_pallas(
                                      f"PAGE_SIZE={page}")
                 in_specs = [
                     pl.BlockSpec((1, 1, bm, dqk),
-                                 lambda bh, qi, ki, lens, tbl:
-                                 (bh // hq, bh % hq, qi, 0)),
+                                 mk(lambda bh, qi, ki, lens, tbl:
+                                    (bh // hq, bh % hq, qi, 0))),
                     pl.BlockSpec((1, 1, bn, dqk),
-                                 lambda bh, qi, ki, lens, tbl:
-                                 (kv_page(tbl, bh // hq, ki),
-                                  (bh % hq) // qpk, ki % mpp, 0)),
+                                 mk(lambda bh, qi, ki, lens, tbl:
+                                    (kv_page(tbl, bh // hq, ki),
+                                     (bh % hq) // qpk, ki % mpp, 0))),
                     pl.BlockSpec((1, 1, bn, v.shape[-1]),
-                                 lambda bh, qi, ki, lens, tbl:
-                                 (kv_page(tbl, bh // hq, ki),
-                                  (bh % hq) // qpk, ki % mpp, 0)),
+                                 mk(lambda bh, qi, ki, lens, tbl:
+                                    (kv_page(tbl, bh // hq, ki),
+                                     (bh % hq) // qpk, ki % mpp, 0))),
                 ]
             else:
                 if k.shape[2] % bn:
@@ -434,27 +536,79 @@ def translate_pallas(
                 qpk = hq // hkv
                 in_specs = [
                     pl.BlockSpec((1, 1, bm, dqk),
-                                 lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0)),
+                                 mk(lambda bh, qi, ki:
+                                    (bh // hq, bh % hq, qi, 0))),
                     pl.BlockSpec((1, 1, bn, dqk),
-                                 lambda bh, qi, ki:
-                                 (bh // hq, (bh % hq) // qpk, ki, 0)),
+                                 mk(lambda bh, qi, ki:
+                                    (bh // hq, (bh % hq) // qpk, ki, 0))),
                     pl.BlockSpec((1, 1, bn, v.shape[-1]),
-                                 lambda bh, qi, ki:
-                                 (bh // hq, (bh % hq) // qpk, ki, 0)),
+                                 mk(lambda bh, qi, ki:
+                                    (bh // hq, (bh % hq) // qpk, ki, 0))),
                 ]
             args = (q, k, v)
 
-        grid = (bsz * hq, tq, tkv)
+        grid = (bsz * hq, tq, ns, tps) if split else (bsz * hq, tq, tkv)
         scratch = [
             pltpu.VMEM((bm, dv), jnp.float32),
             pltpu.VMEM((bm, lane), jnp.float32),
             pltpu.VMEM((bm, lane), jnp.float32),
         ]
         kwargs = {}
-        cp = _compiler_params(("parallel", "parallel", "arbitrary"))
+        sem = ("parallel", "parallel", "parallel", "arbitrary") if split \
+            else ("parallel", "parallel", "arbitrary")
+        cp = _compiler_params(sem)
         if cp is not None and not interpret:
             kwargs["compiler_params"] = cp
-        out_shape = jax.ShapeDtypeStruct((bsz, hq, m, dv), out_dtype)
+
+        if split:
+            # each split program writes its partial online-softmax state;
+            # the LSE combine below reduces over the split axis
+            out_shape = [
+                jax.ShapeDtypeStruct((bsz, hq, ns, m, dv), jnp.float32),
+                jax.ShapeDtypeStruct((bsz, hq, ns, m, lane), jnp.float32),
+                jax.ShapeDtypeStruct((bsz, hq, ns, m, lane), jnp.float32),
+            ]
+
+            def psplit(bh, qi, si, kj, *pf):
+                return (bh // hq, bh % hq, si, qi, 0)
+
+            out_specs = [
+                pl.BlockSpec((1, 1, 1, bm, dv), psplit),
+                pl.BlockSpec((1, 1, 1, bm, lane), psplit),
+                pl.BlockSpec((1, 1, 1, bm, lane), psplit),
+            ]
+        else:
+            out_shape = jax.ShapeDtypeStruct((bsz, hq, m, dv), out_dtype)
+            out_specs = pl.BlockSpec(
+                (1, 1, bm, dv),
+                mk(lambda bh, qi, ki, *pf: (bh // hq, bh % hq, qi, 0)))
+
+        def combine(partials):
+            """LSE-merge the per-split partials — the 'separate small
+            kernel' realisation of the TL epilogue (one grid program per
+            (batch-head, q-tile); the split axis is reduced in VMEM)."""
+            ckw = {}
+            ccp = _compiler_params(("parallel", "parallel"))
+            if ccp is not None and not interpret:
+                ckw["compiler_params"] = ccp
+            cmap = lambda bh, qi: (bh // hq, bh % hq, 0, qi, 0)
+            call = pl.pallas_call(
+                make_combine_kernel(),
+                grid=(bsz * hq, tq),
+                in_specs=[
+                    pl.BlockSpec((1, 1, ns, bm, dv), cmap),
+                    pl.BlockSpec((1, 1, ns, bm, lane), cmap),
+                    pl.BlockSpec((1, 1, ns, bm, lane), cmap),
+                ],
+                out_specs=pl.BlockSpec(
+                    (1, 1, bm, dv),
+                    lambda bh, qi: (bh // hq, bh % hq, qi, 0)),
+                out_shape=jax.ShapeDtypeStruct((bsz, hq, m, dv), out_dtype),
+                interpret=interpret,
+                debug=debug,
+                **ckw,
+            )
+            return call(*partials)
 
         if paged:
             lens = jnp.asarray(kv_len_arg, jnp.int32).reshape(-1)
@@ -463,10 +617,7 @@ def translate_pallas(
                 num_scalar_prefetch=2,
                 grid=grid,
                 in_specs=in_specs,
-                out_specs=pl.BlockSpec(
-                    (1, 1, bm, dv),
-                    lambda bh, qi, ki, lens, tbl:
-                    (bh // hq, bh % hq, qi, 0)),
+                out_specs=out_specs,
                 scratch_shapes=scratch,
             )
             call = pl.pallas_call(
@@ -477,7 +628,8 @@ def translate_pallas(
                 debug=debug,
                 **kwargs,
             )
-            return call(lens, table, *args)
+            out = call(lens, table, *args)
+            return combine(out) if split else out
 
         if runtime_kv:
             # scalar operand: (B, 1) int32 in SMEM, one row per batch —
@@ -485,24 +637,23 @@ def translate_pallas(
             lens = jnp.asarray(kv_len_arg, jnp.int32).reshape(-1)
             lens = jnp.broadcast_to(lens, (bsz,)).reshape(bsz, 1)
             in_specs.insert(0, pl.BlockSpec(
-                (1, 1), lambda bh, qi, ki: (bh // hq, 0),
+                (1, 1), mk(lambda bh, qi, ki: (bh // hq, 0)),
                 memory_space=pltpu.SMEM))
             args = (lens,) + args
 
-        out_spec = pl.BlockSpec(
-            (1, 1, bm, dv), lambda bh, qi, ki: (bh // hq, bh % hq, qi, 0))
         call = pl.pallas_call(
             make_kernel(hq),
             grid=grid,
             in_specs=in_specs,
-            out_specs=out_spec,
+            out_specs=out_specs,
             out_shape=out_shape,
             scratch_shapes=scratch,
             interpret=interpret,
             debug=debug,
             **kwargs,
         )
-        return call(*args)
+        out = call(*args)
+        return combine(out) if split else out
 
     build.program = prog
     build.block_config = (bm, bn)
@@ -510,4 +661,5 @@ def translate_pallas(
     build.paged = paged
     build.page_size = page
     build.chunk_prefill = chunked
+    build.num_splits = ns
     return build

@@ -70,6 +70,34 @@ def online_softmax(s, m, l, acc):
     return p, bcast(m_new), bcast(l_new), acc_new
 
 
+def lse_merge(acc, m, l):
+    """Merge per-split online-softmax partials (Flash-Decoding's combine).
+
+    ``acc``: (S, ..., Dv) un-normalised accumulators; ``m``/``l``:
+    (S, ..., W) running max / denominator with the row statistic in column
+    0 (W is LANE for the kernels' lane-broadcast state, 1 for the XLA scan
+    state).  Each split ran an independent online softmax over its KV
+    partition; rescaling every partial to the global max and summing gives
+    *exactly* the state one sequential pass over the whole KV would have
+    produced, so the normal ``divide`` epilogue applies unchanged.
+
+    Returns ``(acc, m, l)`` merged over the leading split axis, with
+    ``m``/``l`` re-broadcast to width W.
+    """
+    m1 = m[..., :1]                                     # (S, ..., 1)
+    m_max = jnp.max(m1, axis=0)                         # (..., 1)
+    w = jnp.exp(m1 - m_max)
+    # a split that saw no key (skipped blocks / fully masked) still holds
+    # m == NEG_INF; zero its weight so the all-splits-dead case (row length
+    # 0, where exp(NEG_INF - NEG_INF) == 1) contributes nothing
+    w = jnp.where(m1 <= NEG_INF / 2, 0.0, w)
+    acc_c = jnp.sum(w * acc, axis=0)
+    l_c = jnp.sum(w * l[..., :1], axis=0)
+    width = m.shape[-1]
+    bcast = lambda x: jnp.broadcast_to(x, x.shape[:-1] + (width,))
+    return acc_c, bcast(m_max), bcast(l_c)
+
+
 def divide(acc, l):
     """Normalise the accumulator by the online-softmax denominator."""
     denom = l[:, :1]

@@ -3,11 +3,16 @@
 GPU FlashDecoding splits the KV cache across SMs and merges partial
 softmaxes.  The TPU adaptation (DESIGN.md §2): the MXU wants >=8-row tiles,
 so the G = Hq/Hkv query heads that share a KV head become the *rows* of one
-q tile — a single MXU pass per KV head per KV block — and the KV dimension
-rides the sequential grid with the online-softmax state in VMEM scratch.
-The same TL program as prefill serves decode with different parameters
-(M = G, causal off), which is the paper's "same sketch, different
-reasoning" parameterisation story.
+q tile — a single MXU pass per KV head per KV block.  The KV dimension
+rides the sequential grid with the online-softmax state in VMEM scratch —
+until the reasoning stage decides the launch under-fills the device
+(``reason.choose_num_splits``), at which point it emits
+``KV_SPLIT``/``NUM_SPLITS`` and the KV axis is partitioned across a
+*parallel* grid dimension whose programs write partial ``(acc, m, l)``
+state, LSE-merged by a small combine kernel — FlashDecoding's SM split,
+expressed as TL reasoning.  The same TL program as prefill serves decode
+with different parameters (M = G, causal off), which is the paper's "same
+sketch, different reasoning" parameterisation story.
 
 Decode programs are *runtime-length*: the reasoning stage binds ``N`` to a
 bucket capacity and the true cache length is a scalar kernel operand
@@ -37,7 +42,9 @@ def make_decode_kernel(num_kv_heads: int, q_rows: int, bucket_len: int,
     """Decode kernel for a KV *bucket capacity* of ``bucket_len`` entries.
 
     The returned kernel's ``pallas_fn``/``oracle_fn`` take a leading
-    runtime ``kv_len`` operand (see module docstring)."""
+    runtime ``kv_len`` operand (see module docstring).  Pass
+    ``num_splits=`` to force a split-KV launch (clamped; both backends
+    lower the identical split/merge)."""
     spec = AttnSpec(variant="mha", num_q_heads=num_kv_heads,
                     num_kv_heads=num_kv_heads, head_dim=head_dim,
                     causal=False, mode="decode")

@@ -13,6 +13,7 @@ from typing import Optional
 import jax.numpy as jnp
 
 from ..core.pipeline import cached_kernel
+from ..core.reason import resolve_num_splits
 from ..core.spec import AttnSpec
 
 _DT = {jnp.bfloat16.dtype: "bf16", jnp.float32.dtype: "f32",
@@ -105,6 +106,7 @@ def _norm_cache_len(cache_len, batch: int, capacity: int):
 def flash_decode(
     q, k_cache, v_cache, *,
     cache_len=None,
+    num_splits: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
 ):
@@ -117,10 +119,14 @@ def flash_decode(
     bucket) and masks/skips past ``cache_len`` at run time, so serving a
     growing cache inside one bucket never retraces.
 
-    TPU adaptation: GPU FlashDecoding parallelises KV splits across SMs.  On
-    TPU the MXU wants >=8 rows, so the G = Hq/Hkv query heads of one KV head
-    are laid out as *rows* of a single q tile (one MXU pass per KV head),
-    and KV-split parallelism comes from the sequential-grid accumulator.
+    TPU adaptation: GPU FlashDecoding parallelises KV splits across SMs.
+    On TPU the MXU wants >=8 rows, so the G = Hq/Hkv query heads of one KV
+    head are laid out as *rows* of a single q tile (one MXU pass per KV
+    head).  KV-split parallelism is the reasoned ``num_splits`` decision:
+    ``None`` lets the reasoning stage split the KV axis when
+    ``B * Hkv`` under-fills the device for this bucket (Flash-Decoding);
+    an explicit int forces that many splits (clamped to whole KV tiles).
+    One kernel is compiled per (bucket, splits).
     """
     b, hq, one, d = q.shape
     assert one == 1, "decode takes exactly one new token"
@@ -131,7 +137,9 @@ def flash_decode(
     spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
                     head_dim=d, causal=False, mode="decode",
                     dtype=_DT[q.dtype])
-    kern = cached_kernel(spec, g, n, target, interpret, False)
+    splits = resolve_num_splits(num_splits, rows=b * hkv, kv_len=n,
+                                page_size=None, target=target)
+    kern = cached_kernel(spec, g, n, target, interpret, False, splits)
     bm, bn = kern.blocks.bm, kern.blocks.bn
     qp = _pad_rows(q_rows, 2, bm)
     kp = _pad_rows(k_cache, 2, bn)
@@ -144,6 +152,7 @@ def flash_decode(
 def paged_flash_decode(
     q, k_pool, v_pool, block_tables, *,
     cache_len=None,
+    num_splits: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
 ):
@@ -159,7 +168,9 @@ def paged_flash_decode(
     The kernel is compiled once per *bucket capacity* ``Tp * page_size``
     and per page size — never per pool size P, cache length, or table
     contents: pools and tables are runtime data, so a growing paged cache
-    inside one bucket never retraces.
+    inside one bucket never retraces.  ``num_splits`` follows
+    :func:`flash_decode`; paged splits stay page-aligned, so each split's
+    gather reads whole pages.
     """
     b, hq, one, d = q.shape
     assert one == 1, "decode takes exactly one new token"
@@ -171,7 +182,10 @@ def paged_flash_decode(
     spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
                     head_dim=d, causal=False, mode="decode",
                     dtype=_DT[q.dtype], page_size=ps)
-    kern = cached_kernel(spec, g, bucket, target, interpret, False)
+    splits = resolve_num_splits(num_splits, rows=b * hkv,
+                                kv_len=bucket, page_size=ps,
+                                target=target)
+    kern = cached_kernel(spec, g, bucket, target, interpret, False, splits)
     qp = _pad_rows(q_rows, 2, kern.blocks.bm)
     lens = _norm_cache_len(cache_len, b, bucket)
     out = kern.pallas_fn(lens, tbl, qp, k_pool, v_pool)   # (B, Hkv, Gpad, D)
@@ -242,6 +256,7 @@ def paged_mla_prefill(
 def paged_mla_decode(
     q_latent, c_pool, block_tables, *,
     cache_len=None,
+    num_splits: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
     kv_lora_rank: int = 512,
@@ -250,8 +265,10 @@ def paged_mla_decode(
     """Single-token MLA decode against a paged latent cache.
 
     ``c_pool``: (P, page_size, R+Rr) latent page pool; ``block_tables`` and
-    ``cache_len`` follow :func:`paged_flash_decode`.  Compiled per bucket
-    capacity ``Tp * page_size`` and page size only.
+    ``cache_len`` follow :func:`paged_flash_decode`, ``num_splits``
+    follows :func:`flash_decode` (MLA exposes only B launch programs — one
+    latent head — so splitting kicks in earliest here).  Compiled per
+    (bucket capacity ``Tp * page_size``, page size, splits) only.
     """
     b, h, one, dq = q_latent.shape
     assert one == 1
@@ -261,7 +278,9 @@ def paged_mla_decode(
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=False,
                         mode="decode", dtype=_DT[q_latent.dtype],
                         page_size=ps)
-    kern = cached_kernel(spec, h, bucket, target, interpret, False)
+    splits = resolve_num_splits(num_splits, rows=b, kv_len=bucket,
+                                page_size=ps, target=target)
+    kern = cached_kernel(spec, h, bucket, target, interpret, False, splits)
     # heads -> rows: (B, H, 1, Dq) -> (B, 1, H, Dq)
     q_rows = q_latent.reshape(b, 1, h, dq)
     qp = _pad_rows(q_rows, 2, kern.blocks.bm)
@@ -273,6 +292,7 @@ def paged_mla_decode(
 def mla_decode(
     q_latent, c_cache, *,
     cache_len=None,
+    num_splits: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
     kv_lora_rank: int = 512,
@@ -281,14 +301,16 @@ def mla_decode(
     """Single-token MLA decode: all H latent queries share the single latent
     cache, so the H heads are the tile rows (same TPU adaptation as
     :func:`flash_decode`).  Like :func:`flash_decode`, compiled per cache
-    *capacity*; ``cache_len`` (int, traced scalar, or per-request (B,)
-    vector) is runtime data."""
+    *capacity* (and per ``num_splits``); ``cache_len`` (int, traced
+    scalar, or per-request (B,) vector) is runtime data."""
     b, h, one, dq = q_latent.shape
     assert one == 1
     n = c_cache.shape[1]
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=False,
                         mode="decode", dtype=_DT[q_latent.dtype])
-    kern = cached_kernel(spec, h, n, target, interpret, False)
+    splits = resolve_num_splits(num_splits, rows=b, kv_len=n,
+                                page_size=None, target=target)
+    kern = cached_kernel(spec, h, n, target, interpret, False, splits)
     bm, bn = kern.blocks.bm, kern.blocks.bn
     # heads -> rows: (B, H, 1, Dq) -> (B, 1, H, Dq)
     q_rows = q_latent.reshape(b, 1, h, dq)

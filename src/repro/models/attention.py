@@ -34,7 +34,8 @@ from .config import ModelConfig
 
 def xla_flash(q, k, v, *, causal: bool, scale: float,
               window: Optional[int] = None, kv_valid=None,
-              chunk: int = 1024, prechunked: bool = False):
+              chunk: int = 1024, prechunked: bool = False,
+              num_splits: int = 1):
     """Chunked online-softmax attention.  q: (B,Hq,M,D), k/v: (B,Hkv,N,Dv).
 
     ``kv_valid``: number of valid KV entries — None (all), a scalar, or a
@@ -43,7 +44,17 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
     ``prechunked``: k/v are already in the scan-operand layout
     ``(nc, B, Hkv, chunk, D)`` — the shape a paged-cache page gather
     produces naturally (one chunk per page), which skips materialising
-    the dense ``(B, Hkv, N, D)`` view just to re-chunk it here."""
+    the dense ``(B, Hkv, N, D)`` view just to re-chunk it here.
+
+    ``num_splits`` > 1 is the split-KV (Flash-Decoding) lowering for this
+    backend: the KV chunks are partitioned into that many contiguous
+    slices *folded into the batch axis*, so the scan shortens by the
+    split factor while each step's GEMMs grow by it — the XLA analogue of
+    the Pallas backend's parallel split grid — and the per-split online
+    softmax states are LSE-merged (:func:`semantics.lse_merge`) before
+    normalisation.  Requests are clamped to whole chunks (a divisor of
+    the chunk count), so the merged result is numerically the single-scan
+    answer."""
     b, hq, m, d = q.shape
     if prechunked:
         nc, _, hkv, chunk, dv = v.shape
@@ -52,6 +63,9 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
     else:
         hkv, n = k.shape[1], k.shape[2]
         dv = v.shape[-1]
+        if int(num_splits) > 1:
+            # give the split fold room: at most one chunk per split
+            chunk = max(1, min(chunk, -(-n // int(num_splits))))
         chunk = min(chunk, n)
         nc = -(-n // chunk)
         npad = nc * chunk
@@ -61,6 +75,11 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
         kc = k.reshape(b, hkv, nc, chunk, k.shape[-1]).transpose(2, 0, 1, 3, 4)
         vc = v.reshape(b, hkv, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
     g = hq // hkv
+    # split-KV: largest feasible split count — whole chunks, divisor of nc
+    ns = max(1, min(int(num_splits), nc))
+    while nc % ns:
+        ns -= 1
+    ncs = nc // ns
     if kv_valid is None:
         kv_limit = n
     else:
@@ -68,6 +87,24 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
         if kv_limit.ndim == 1:   # per-row lengths: broadcast over (B,K,G,M,C)
             kv_limit = kv_limit.reshape(b, 1, 1, 1, 1)
     q5 = q.reshape(b, hkv, g, m, d)
+    if ns > 1:
+        # fold the split axis into batch: scan step j now covers global
+        # chunk s * ncs + j for every split s at once
+        kc = kc.reshape(ns, ncs, b, hkv, chunk, kc.shape[-1]) \
+            .transpose(1, 0, 2, 3, 4, 5) \
+            .reshape(ncs, ns * b, hkv, chunk, kc.shape[-1])
+        vc = vc.reshape(ns, ncs, b, hkv, chunk, dv) \
+            .transpose(1, 0, 2, 3, 4, 5).reshape(ncs, ns * b, hkv, chunk, dv)
+        q5 = jnp.broadcast_to(q5[None], (ns,) + q5.shape) \
+            .reshape(ns * b, hkv, g, m, d)
+        if kv_valid is not None and jnp.ndim(kv_limit) > 0:
+            kv_limit = jnp.broadcast_to(kv_limit[None],
+                                        (ns,) + kv_limit.shape) \
+                .reshape((ns * b,) + kv_limit.shape[1:])
+        # each folded row's chunk index offset within the full KV axis
+        split_off = jnp.repeat(jnp.arange(ns) * (ncs * chunk),
+                               b).reshape(ns * b, 1, 1, 1, 1)
+    bsz = ns * b if ns > 1 else b
     q_off = kv_limit - m  # bottom-right causal alignment (last q = last key)
 
     q_pos = jnp.arange(m).reshape(1, 1, 1, m, 1) + q_off
@@ -79,6 +116,8 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
                        k_i.astype(jnp.float32),
                        preferred_element_type=jnp.float32) * scale
         k_pos = (ci * chunk + jnp.arange(chunk)).reshape(1, 1, 1, 1, chunk)
+        if ns > 1:
+            k_pos = k_pos + split_off
         keep = k_pos < kv_limit
         if causal:
             keep = keep & (k_pos <= q_pos)
@@ -97,11 +136,17 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
             preferred_element_type=jnp.float32)
         return (m_new, l_new, acc), None
 
-    m0 = jnp.full((b, hkv, g, m, 1), semantics.NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, hkv, g, m, 1), jnp.float32)
-    a0 = jnp.zeros((b, hkv, g, m, dv), jnp.float32)
+    m0 = jnp.full((bsz, hkv, g, m, 1), semantics.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bsz, hkv, g, m, 1), jnp.float32)
+    a0 = jnp.zeros((bsz, hkv, g, m, dv), jnp.float32)
     (m_f, l_f, acc), _ = jax.lax.scan(
-        step, (m0, l0, a0), (jnp.arange(nc), kc, vc))
+        step, (m0, l0, a0), (jnp.arange(ncs if ns > 1 else nc), kc, vc))
+    if ns > 1:
+        # LSE-merge the per-split partial states (Flash-Decoding combine)
+        acc, m_f, l_f = semantics.lse_merge(
+            acc.reshape((ns, b) + acc.shape[1:]),
+            m_f.reshape((ns, b) + m_f.shape[1:]),
+            l_f.reshape((ns, b) + l_f.shape[1:]))
     out = acc / jnp.where(l_f == 0.0, 1.0, l_f)
     return out.reshape(b, hq, m, dv).astype(q.dtype)
 
@@ -110,6 +155,15 @@ def naive_attention(q, k, v, *, causal, scale, window=None, kv_valid=None):
     from ..kernels import ref
     return ref.attention(q, k, v, causal=causal, window=window, scale=scale,
                          kv_valid=kv_valid).astype(q.dtype)
+
+
+def _resolve_splits(num_splits, *, rows: int, kv_len: int,
+                    page_size=None, target: str = "v5e") -> int:
+    """Decode split-KV count for the XLA scan backend — the same
+    resolution point as the TL pipeline (one decision, two lowerings)."""
+    from ..core.reason import resolve_num_splits
+    return resolve_num_splits(num_splits, rows=rows, kv_len=kv_len,
+                              page_size=page_size, target=target)
 
 
 # --------------------------------------------------------------------------
@@ -200,38 +254,48 @@ def run_paged_prefill(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
 
 
 def run_paged_decode(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
-                     cache_len, scale: float):
+                     cache_len, scale: float, num_splits=None):
     """Decode attention through a block table (see :func:`gather_pages`).
 
     The Pallas kernel gathers pages inside its BlockSpec DMAs; the XLA
     path feeds the page gather straight into the flash scan as one chunk
     per page (``prechunked``), so neither materialises the dense
-    ``(B, Hkv, N, D)`` cache view."""
+    ``(B, Hkv, N, D)`` cache view.  ``num_splits``: split-KV decode —
+    None lets the reasoning heuristic decide per backend, 1 forces the
+    sequential KV pass, >1 forces that many (clamped) splits."""
     if cfg.attn_impl == "tl_pallas":
         from ..kernels import ops
         return ops.paged_flash_decode(
-            q, k_pool, v_pool, tables, cache_len=cache_len).astype(q.dtype)
+            q, k_pool, v_pool, tables, cache_len=cache_len,
+            num_splits=num_splits).astype(q.dtype)
     if cfg.attn_impl == "naive":
         return naive_attention(q, gather_pages(k_pool, tables),
                                gather_pages(v_pool, tables),
                                causal=False, scale=scale, kv_valid=cache_len)
     kc = jnp.moveaxis(k_pool[tables], 1, 0)     # (tp, B, Hkv, ps, D)
     vc = jnp.moveaxis(v_pool[tables], 1, 0)
+    ps = k_pool.shape[-2]
     return xla_flash(q, kc, vc, causal=False, scale=scale, kv_valid=cache_len,
-                     prechunked=True)
+                     prechunked=True,
+                     num_splits=_resolve_splits(
+                         num_splits, rows=q.shape[0] * k_pool.shape[1],
+                         kv_len=tables.shape[-1] * ps, page_size=ps))
 
 
 def run_attention(q, k, v, *, cfg: ModelConfig, causal: bool,
-                  scale: float, window=None, kv_valid=None):
+                  scale: float, window=None, kv_valid=None,
+                  num_splits=None):
     impl = cfg.attn_impl
+    decode = kv_valid is not None and q.shape[2] == 1
     if impl == "tl_pallas":
         from ..kernels import ops
-        if kv_valid is not None and q.shape[2] == 1:
+        if decode:
             # decode: runtime-length kernel — kv_valid may be an int, a
             # traced scalar, or a per-request (B,) vector; the compiled
             # kernel is keyed on the cache *capacity* (the caller's length
-            # bucket), never on the step count
-            return ops.flash_decode(q, k, v, cache_len=kv_valid).astype(q.dtype)
+            # bucket) and the split count, never on the step count
+            return ops.flash_decode(q, k, v, cache_len=kv_valid,
+                                    num_splits=num_splits).astype(q.dtype)
         if kv_valid is not None:
             # prefill into a cache buffer: only the first kv_valid entries
             # are real — slice them (kv_valid is static in the serve path;
@@ -246,8 +310,13 @@ def run_attention(q, k, v, *, cfg: ModelConfig, causal: bool,
         return ops.flash_attention(q, k, v, causal=causal,
                                    window=window).astype(q.dtype)
     if impl == "xla_flash":
+        splits = 1
+        if decode:
+            splits = _resolve_splits(num_splits, rows=q.shape[0] * k.shape[1],
+                                     kv_len=k.shape[2])
         return xla_flash(q, k, v, causal=causal, scale=scale, window=window,
-                         kv_valid=kv_valid, chunk=cfg.attn_chunk)
+                         kv_valid=kv_valid, chunk=cfg.attn_chunk,
+                         num_splits=splits)
     if impl == "naive":
         return naive_attention(q, k, v, causal=causal, scale=scale,
                                window=window, kv_valid=kv_valid)
@@ -294,13 +363,16 @@ def _cache_append(buf, new, start, axis: int):
 
 def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                cross_kv=None, causal=True, head_sharding=None,
-               kv_bucket=None, block_tables=None, page_size=None):
+               kv_bucket=None, block_tables=None, page_size=None,
+               num_splits=None):
     """x: (B, T, d).  ``cache``: optional dict(k, v, len) for decode;
     ``cache['len']`` may be a scalar or a per-request (B,) vector.
     ``kv_bucket``: static length bucket — attention reads only the first
     ``kv_bucket`` cache entries (the update still writes the full buffer),
     so the serving engine compiles one decode step per bucket instead of
     one per cache length.
+    ``num_splits``: split-KV decode partition count (None = the reasoning
+    heuristic per backend; 1 = sequential KV pass; >1 forced, clamped).
     ``block_tables``/``page_size``: paged cache — ``cache['k']/['v']`` are
     then (P, Hkv, page_size, D) page *pools* shared across the batch, and
     ``block_tables`` (B, Tmax) maps logical to physical pages; the new
@@ -347,7 +419,8 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             cache = {"k": kp, "v": vp, "len": hist + t}
             kv_valid = cache["len"]
             o = run_paged_decode(q, kp, vp, block_tables[:, :tp], cfg=cfg,
-                                 cache_len=kv_valid, scale=hd ** -0.5)
+                                 cache_len=kv_valid, scale=hd ** -0.5,
+                                 num_splits=num_splits)
         else:
             kp = paged_scatter_chunk(cache["k"], block_tables, hist, k)
             vp = paged_scatter_chunk(cache["v"], block_tables, hist, v)
@@ -369,7 +442,8 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
     if not paged:
         o = run_attention(q, k, v, cfg=cfg,
                           causal=causal and cross_kv is None,
-                          scale=hd ** -0.5, kv_valid=kv_valid)
+                          scale=hd ** -0.5, kv_valid=kv_valid,
+                          num_splits=num_splits)
     o = _constrain(o, head_sharding)
     o = o.astype(x.dtype)
     if cfg.pad_q_heads_to > cfg.num_q_heads:
@@ -439,11 +513,14 @@ def mla_init(key, cfg: ModelConfig):
 
 def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
               causal=True, head_sharding=None, latent_sharding=None,
-              kv_bucket=None, block_tables=None, page_size=None):
+              kv_bucket=None, block_tables=None, page_size=None,
+              num_splits=None):
     """Absorbed MLA.  The latent cache (R + Rr per token, head-independent)
     is both K and V — read once for both GEMMs (paper Table 2 workload).
-    ``cache['len']``/``kv_bucket``/``block_tables``/``page_size`` follow
-    :func:`attn_apply`; the paged pool is (P, page_size, R+Rr)."""
+    ``cache['len']``/``kv_bucket``/``block_tables``/``page_size``/
+    ``num_splits`` follow :func:`attn_apply`; the paged pool is
+    (P, page_size, R+Rr).  MLA decode launches only B programs (one
+    latent KV head), so the split heuristic engages earliest here."""
     b, t, d = x.shape
     h, r, rr = cfg.num_q_heads, cfg.kv_lora_rank, cfg.rope_head_dim
     nope = cfg.nope_head_dim
@@ -507,6 +584,7 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             if t == 1:
                 o_lat = ops.paged_mla_decode(q_full, pool, tbl,
                                              cache_len=kv_valid,
+                                             num_splits=num_splits,
                                              kv_lora_rank=r,
                                              rope_head_dim=rr)
             else:
@@ -517,15 +595,22 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
         else:
             # page gather straight into the flash scan: one chunk per page
             lat = jnp.moveaxis(pool[tbl], 1, 0)[:, :, None]  # (tp,B,1,ps,R+Rr)
+            ps = pool.shape[-2]
+            splits = 1
+            if t == 1:
+                splits = _resolve_splits(num_splits, rows=b,
+                                         kv_len=tbl.shape[-1] * ps,
+                                         page_size=ps)
             o_lat = xla_flash(q_full, lat, lat[..., :r], causal=t > 1,
                               scale=scale, kv_valid=kv_valid,
-                              prechunked=True)
+                              prechunked=True, num_splits=splits)
     elif cfg.attn_impl == "tl_pallas":
         from ..kernels import ops
         if cache is not None and t == 1:
             # runtime-length decode: one compiled kernel per latent-cache
             # capacity; kv_valid (int / traced / per-row vector) is data
             o_lat = ops.mla_decode(q_full, latent, cache_len=kv_valid,
+                                   num_splits=num_splits,
                                    kv_lora_rank=r, rope_head_dim=rr)
         else:
             lat = latent
@@ -537,8 +622,13 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
     else:
         kk = latent[:, None]                     # (B, 1, N, R+Rr)
         vv = latent[:, None, :, :r]              # (B, 1, N, R)
+        splits = 1
+        if cache is not None and t == 1:
+            splits = _resolve_splits(num_splits, rows=b,
+                                     kv_len=kk.shape[2])
         o_lat = xla_flash(q_full, kk, vv, causal=causal, scale=scale,
-                          kv_valid=kv_valid, chunk=cfg.attn_chunk)
+                          kv_valid=kv_valid, chunk=cfg.attn_chunk,
+                          num_splits=splits)
     o_lat = _constrain(o_lat, head_sharding)
 
     # --- un-absorb: latent out -> per-head values -> output proj -------------

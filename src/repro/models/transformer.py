@@ -106,14 +106,16 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                 latent_sharding=ctx.get("latent_sharding"),
                 kv_bucket=ctx.get("kv_bucket"),
                 block_tables=ctx.get("block_tables"),
-                page_size=ctx.get("page_size"))
+                page_size=ctx.get("page_size"),
+                num_splits=ctx.get("num_splits"))
         else:
             o, new_cache = attention.attn_apply(
                 p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
                 cache=cache, head_sharding=ctx.get("head_sharding"),
                 kv_bucket=ctx.get("kv_bucket"),
                 block_tables=ctx.get("block_tables"),
-                page_size=ctx.get("page_size"))
+                page_size=ctx.get("page_size"),
+                num_splits=ctx.get("num_splits"))
         if new_cache is not None:
             new_cache.pop("len", None)  # length tracked by the caller
     elif kind == "cross":
@@ -193,7 +195,7 @@ def abstract_params(cfg: ModelConfig):
 
 def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
           caches=None, cache_len=None, positions=None, kv_bucket=None,
-          block_tables=None, page_size=None,
+          block_tables=None, page_size=None, num_splits=None,
           act_sharding=None, ep_sharding=None, head_sharding=None,
           latent_sharding=None, moe_mesh=None):
     """tokens: (B, T) int32 -> logits (B, T, V) f32.
@@ -212,6 +214,12 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     physical pool pages, shared by every layer.  T == 1 decodes; T > 1
     runs one chunk of chunked prefill (K/V scattered straight into the
     pages, causal attention against the history through the table).
+
+    ``num_splits`` (static): split-KV decode partition count for every
+    attention layer — None lets the reasoning heuristic choose per layer
+    geometry, 1 forces the sequential KV pass, >1 forces that many
+    (clamped) splits.  Shape-relevant: callers jitting ``apply`` must key
+    their cache on it alongside ``kv_bucket``.
 
     ``act_sharding``: optional PartitionSpec for the (B, T, d) residual
     stream.  Constraining it *inside* the period scan is what shards the
@@ -255,7 +263,7 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     def make_ctx(cache):
         return {"positions": positions, "vision": vision_embeds,
                 "cache": cache, "cache_len": clen,
-                "kv_bucket": kv_bucket,
+                "kv_bucket": kv_bucket, "num_splits": num_splits,
                 "block_tables": block_tables, "page_size": page_size,
                 "ep_sharding": ep_sharding,
                 "head_sharding": head_sharding,

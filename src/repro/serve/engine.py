@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.reason import resolve_num_splits
 from ..models import transformer
 from ..models.config import ModelConfig
 
@@ -90,31 +91,34 @@ class PageAllocator:
     Freeing a page nobody holds raises (the double-free guard).
 
     **The prefix index** maps page-aligned token chunks to the pages that
-    hold their KV.  Keys are content-addressed chains — the key of chunk
-    ``i`` is the full token tuple ``tokens[: (i+1) * page_size]`` — so a
-    match guarantees both the chunk's tokens *and* its entire history are
-    identical, which (positions being equal) makes the cached KV entries
-    bit-identical to what a recompute would produce.  Only *full* pages
-    are indexed: a partial page's content still changes as its owner
-    decodes.  An indexed page whose refcount drops to zero is not freed
-    but parked in an LRU *evictable* set — its content stays valid (and
-    matchable: the prefix-cache-hit-after-retire path) until :meth:`alloc`
-    reclaims it under pressure, at which point it leaves the index.
+    hold their KV.  Keys are content-addressed chains of *interned
+    nodes*: chunk ``i`` of a prompt is identified by the node interned
+    for ``(parent node of chunks 0..i-1, that chunk's token tuple)``, so
+    reaching a node proves the chunk's tokens *and* its entire history
+    are identical — exactly the guarantee the earlier literal
+    ``tokens[: (i+1) * page_size]`` tuple keys gave, which (positions
+    being equal) makes the cached KV entries bit-identical to what a
+    recompute would produce.  Interning buys the asymptotics: each node
+    stores one page-size chunk plus a parent id, so a cached L-token
+    chain costs O(L) memory and O(L) hashing to walk, instead of the
+    literal keys' O(L^2 / page_size) — and unlike vLLM-style rolling
+    hashes there is still no collision exposure, because the intern table
+    compares real token tuples on lookup.  Only *full* pages are indexed:
+    a partial page's content still changes as its owner decodes.  An
+    indexed page whose refcount drops to zero is not freed but parked in
+    an LRU *evictable* set — its content stays valid (and matchable: the
+    prefix-cache-hit-after-retire path) until :meth:`alloc` reclaims it
+    under pressure, at which point it leaves the index (nodes whose
+    subtree no longer indexes any page are pruned with it).
 
-    Matching (:meth:`match_prefix`) walks full-chunk chain keys, then
+    Matching (:meth:`match_prefix`) walks full-chunk chain nodes, then
     extends at most one page further by *partial* match — a prompt that
     ends (or diverges) mid-way through a cached page maps that page too,
     masked at the matched length.  Writing into such a shared page is what
     triggers the engine's copy-on-write.
-
-    Keys are stored as the literal token tuples, so index memory and
-    match hashing are O(L^2 / page_size) per cached L-token chain —
-    exactness with zero collision risk, bought with bytes.  At the
-    max_len scales served here that is tens of KB per chain; an interned
-    radix/chain-node index (vLLM-style hashing without its collision
-    exposure) is the planned upgrade when sequences grow past that — see
-    ROADMAP.
     """
+
+    _ROOT = 0                                    # parent id of chunk 0 nodes
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages <= 0:
@@ -124,10 +128,16 @@ class PageAllocator:
         self._free = list(range(self.num_pages - 1, -1, -1))  # LIFO
         self._ref: dict[int, int] = {}           # page -> refcount (> 0)
         self._evictable: dict[int, None] = {}    # refcount-0 cached, LRU order
-        self._index: dict[tuple, int] = {}       # chain key -> page
-        self._page_key: dict[int, tuple] = {}    # inverse of _index
+        # interned chain nodes: (parent node, chunk tokens) <-> node id.
+        # A node exists while it indexes a page or any descendant does.
+        self._intern: dict[tuple, int] = {}      # (parent, chunk) -> node
+        self._node_key: dict[int, tuple] = {}    # node -> (parent, chunk)
+        self._node_kids: dict[int, int] = {}     # node -> child-node count
+        self._next_node = self._ROOT + 1
+        self._index: dict[int, int] = {}         # node -> page
+        self._page_key: dict[int, int] = {}      # page -> node
         self._page_tokens: dict[int, tuple] = {} # indexed page -> its chunk
-        self._children: dict[tuple, set] = {}    # parent key -> indexed pages
+        self._children: dict[int, set] = {}      # parent node -> indexed pages
         self.alloc_count = 0                     # pages ever handed out
         self.evictions = 0                       # cache entries reclaimed
 
@@ -203,6 +213,35 @@ class PageAllocator:
 
     # ---- prefix index -------------------------------------------------
 
+    def _intern_node(self, parent: int, chunk: tuple) -> int:
+        """Get-or-create the chain node for ``chunk`` under ``parent``.
+        Interning makes chain identity a dict hit on (parent id, one
+        page-size tuple) — O(page_size), not O(history)."""
+        key = (parent, chunk)
+        node = self._intern.get(key)
+        if node is None:
+            node = self._next_node
+            self._next_node += 1
+            self._intern[key] = node
+            self._node_key[node] = key
+            self._node_kids[node] = 0
+            if parent != self._ROOT:
+                self._node_kids[parent] += 1
+        return node
+
+    def _prune_node(self, node: int) -> None:
+        """Drop ``node`` and any now-useless ancestors: a chain node lives
+        only while it indexes a page or a descendant node exists."""
+        while node != self._ROOT and self._node_kids.get(node) == 0 \
+                and node not in self._index:
+            parent, chunk = self._node_key.pop(node)
+            del self._intern[(parent, chunk)]
+            del self._node_kids[node]
+            if parent == self._ROOT:
+                break
+            self._node_kids[parent] -= 1
+            node = parent
+
     def match_prefix(self, tokens: list[int]) -> tuple[list[int], int]:
         """Longest cached prefix of ``tokens``: full-page chain hits plus
         at most one partial hit into the next cached page.  Returns
@@ -211,16 +250,21 @@ class PageAllocator:
         ps = self.page_size
         pages: list[int] = []
         matched = 0
+        node = self._ROOT
         while matched + ps <= len(tokens):
-            p = self._index.get(tuple(tokens[: matched + ps]))
-            if p is None:
+            child = self._intern.get(
+                (node, tuple(tokens[matched:matched + ps])))
+            if child is None or child not in self._index:
+                # no such chain — or a hole: the chunk's node survives
+                # through indexed descendants but its own page is gone
                 break
-            pages.append(p)
+            pages.append(self._index[child])
             matched += ps
+            node = child
         tail = tuple(tokens[matched:])
         if tail:
             best, best_len = None, 0
-            for p in self._children.get(tuple(tokens[:matched]), ()):
+            for p in self._children.get(node, ()):
                 cached = self._page_tokens[p]
                 r = 0
                 for a, b in zip(tail, cached):
@@ -235,38 +279,64 @@ class PageAllocator:
         return pages, matched
 
     def register(self, tokens: list[int], pages: list[int],
-                 start: int = 0) -> None:
+                 start: int = 0, resume=None) -> tuple:
         """Index the *full* pages of ``tokens`` from chunk index ``start``
         on (``pages[i]`` holds chunk ``i``).  First writer wins —
         identical content arriving in a different page is not re-indexed —
-        and re-registration is a no-op; a growing request passes the index
-        of the page that just filled so each boundary costs O(len) key
-        hashing, not a re-walk of its whole chain."""
+        and re-registration is a no-op.  The chain is walked (and interned
+        where new) from the root, one O(page_size) dict key per chunk, so
+        registering an L-token chain costs O(L) hashing total, never
+        O(L^2 / page_size).
+
+        Returns a ``(chunks_covered, node)`` *resume handle*; a growing
+        request passes the previous call's handle back so each page
+        boundary re-hashes only the new chunk instead of re-walking the
+        chain (a stale handle — its node pruned since — silently falls
+        back to the full walk)."""
         ps = self.page_size
-        for i in range(start, min(len(tokens) // ps, len(pages))):
+        n = min(len(tokens) // ps, len(pages))
+        node, lo = self._ROOT, 0
+        if resume is not None:
+            k, rnode = resume
+            if start <= k <= n and (rnode == self._ROOT
+                                    or rnode in self._node_kids):
+                node, lo = rnode, k
+        for i in range(lo, n):
+            chunk = tuple(tokens[i * ps:(i + 1) * ps])
+            node = self._intern_node(node, chunk)
+            if i < start:
+                continue
             p = pages[i]
-            key = tuple(tokens[: (i + 1) * ps])
-            if key in self._index or p in self._page_key:
+            if node in self._index or p in self._page_key:
                 continue
             if self._ref.get(p, 0) <= 0:
+                # leave no barren interned nodes behind the raise — a
+                # rejected register must not poison check_invariants
+                self._prune_node(node)
                 raise ValueError(f"register of free/invalid page {p}")
-            self._index[key] = p
-            self._page_key[p] = key
-            self._page_tokens[p] = key[-ps:]
-            self._children.setdefault(key[:-ps], set()).add(p)
+            self._index[node] = p
+            self._page_key[p] = node
+            self._page_tokens[p] = chunk
+            self._children.setdefault(self._node_key[node][0],
+                                      set()).add(p)
+        # nodes interned above that ended up indexing nothing (first-
+        # writer-wins skips) must not leak: prune from the tail up
+        self._prune_node(node)
+        return (n, node)
 
     def _unindex(self, p: int) -> None:
-        key = self._page_key.pop(p, None)
-        if key is None:
+        node = self._page_key.pop(p, None)
+        if node is None:
             return
-        del self._index[key]
+        del self._index[node]
         del self._page_tokens[p]
-        parent = key[:-self.page_size]
+        parent = self._node_key[node][0]
         kids = self._children.get(parent)
         if kids is not None:
             kids.discard(p)
             if not kids:
                 del self._children[parent]
+        self._prune_node(node)
 
     def unindex(self, p: int) -> None:
         """Forget a page's prefix-cache entry (callers must do this before
@@ -281,7 +351,9 @@ class PageAllocator:
     def check_invariants(self) -> None:
         """Conservation + consistency (the property-test oracle): every
         page is exactly one of free / evictable / live; refcounts are
-        positive; the index maps are mutually consistent."""
+        positive; the index maps and the interned chain-node store are
+        mutually consistent, and no chain node leaks (every leaf indexes
+        a page)."""
         free, evict, live = set(self._free), set(self._evictable), \
             set(self._ref)
         assert len(self._free) == len(free), "free list duplicates"
@@ -293,12 +365,33 @@ class PageAllocator:
         assert all(v > 0 for v in self._ref.values()), "refcount <= 0 held"
         assert set(self._index.values()) == set(self._page_key), \
             "index/page_key mismatch"
-        assert all(self._index[k] == p and len(k) % self.page_size == 0
-                   for p, k in self._page_key.items())
+        assert all(self._index[n] == p for p, n in self._page_key.items())
         assert set(self._page_tokens) == set(self._page_key)
         kids = {p for s in self._children.values() for p in s}
         assert kids == set(self._page_key), "children set drift"
         assert evict <= set(self._page_key), "evictable page not indexed"
+        # interned chain nodes: the two maps mirror; every indexing node
+        # exists and holds a full chunk; recorded child counts match; a
+        # node with neither an index entry nor descendants is a leak
+        assert {v: k for k, v in self._intern.items()} == self._node_key, \
+            "intern/node_key mismatch"
+        assert all(n in self._node_key and
+                   len(self._node_key[n][1]) == self.page_size
+                   for n in self._index), "index node drift"
+        assert all(self._page_tokens[p] == self._node_key[n][1]
+                   for p, n in self._page_key.items()), "chunk drift"
+        counts: dict[int, int] = {}
+        for parent, _ in self._node_key.values():
+            if parent != self._ROOT:
+                counts[parent] = counts.get(parent, 0) + 1
+        assert all(self._node_kids[n] == counts.get(n, 0)
+                   for n in self._node_key), "child-count drift"
+        assert set(self._node_kids) == set(self._node_key)
+        assert all(self._node_kids[n] > 0 or n in self._index
+                   for n in self._node_key), "leaked chain node"
+        assert all(parent == self._ROOT or parent in self._node_key
+                   for parent, _ in self._node_key.values()), \
+            "dangling parent pointer"
 
 
 @dataclasses.dataclass
@@ -350,6 +443,15 @@ class ServeEngine:
     Architectures with no attention cache (pure RWKV/Mamba state) have
     nothing to page; ``paged`` silently turns off there.
 
+    Split-KV decode: every decode dispatch carries a *static* split count
+    (Flash-Decoding work partitioning) chosen by the reasoning heuristic
+    over this dispatch's (batch x KV heads) launch width and length
+    bucket — or forced via ``num_splits`` (1 disables splitting; used by
+    benchmarks for A/B).  The count is part of the decode jit cache key
+    along with the bucket, the batch, and paged-ness, and the engine
+    asserts ``decode_compiles == len(distinct keys)`` after every decode,
+    so a reasoned split change can never silently retrace.
+
     Prefix cache: ``prefix_cache=True`` (the default) lets paged
     admission reuse cached pages for page-aligned prompt prefixes (plus
     one partial page at the divergence point, copy-on-write protected).
@@ -368,7 +470,9 @@ class ServeEngine:
                  paged: bool = True, page_size: int = 64,
                  num_pages: Optional[int] = None,
                  prefix_cache: bool = True,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 num_splits: Optional[int] = None,
+                 target: str = "v5e"):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -408,6 +512,13 @@ class ServeEngine:
         # materialise the pools) so generate()-only engines — which keep
         # the dense per-row cache — accept any max_len, as before
         self.num_pages = None if num_pages is None else int(num_pages)
+        # split-KV decode: None = reason chooses per dispatch; an int
+        # forces that count (1 = sequential KV pass, the A/B baseline).
+        # ``target`` is the device the split heuristic reasons about
+        # (decode_parallelism differs across TPU generations).
+        self.num_splits = None if num_splits is None else int(num_splits)
+        self.target = target
+        self._decode_keys: set = set()
         self.prefill_compiles = 0
         self.decode_compiles = 0
         # serving-observability counters (prefix cache + COW)
@@ -425,14 +536,17 @@ class ServeEngine:
             return logits, caches
 
         # cache_len is runtime data (a per-request vector); only the length
-        # bucket — how many cache entries attention reads — is static, so
-        # generating T tokens costs at most O(log2 max_len) decode traces.
+        # bucket — how many cache entries attention reads — and the split
+        # count are static, so generating T tokens costs at most
+        # O(log2 max_len) decode traces per split regime.
         # ``tables`` is the paged path's block-table operand (None = dense).
-        def decode(params, tok, caches, cache_len, tables, kv_bucket):
+        def decode(params, tok, caches, cache_len, tables, kv_bucket,
+                   num_splits):
             self.decode_compiles += 1           # runs once per jit trace
             logits, _, caches = transformer.apply(
                 params, tok, cfg, caches=caches, cache_len=cache_len,
-                kv_bucket=kv_bucket, block_tables=tables,
+                kv_bucket=kv_bucket, num_splits=num_splits,
+                block_tables=tables,
                 page_size=self.page_size if tables is not None else None,
                 vision_embeds=self.vision)
             return logits[:, -1], caches
@@ -453,29 +567,16 @@ class ServeEngine:
         # attention pool leaf; src/dst are runtime scalars so every COW
         # event reuses one trace
         def cow_copy(caches, src, dst):
-            kinds_, _ = transformer.period_spec(cfg)
-            new_blocks = {}
-            for s, kind in enumerate(kinds_):
-                key = f"sub{s}"
-                if key not in caches["blocks"]:
-                    continue
-                big = caches["blocks"][key]
-                if kind in ("attn", "self"):    # stacked pools: page axis 1
-                    new_blocks[key] = jax.tree.map(
-                        lambda leaf: leaf.at[:, dst].set(leaf[:, src]), big)
-                else:
-                    new_blocks[key] = big
-            new = {"blocks": new_blocks}
-            if "first" in caches:
-                fk_attn = not getattr(cfg, "rwkv", False)
-                new["first"] = [
-                    jax.tree.map(lambda leaf: leaf.at[dst].set(leaf[src]),
-                                 big) if fk_attn else big
-                    for big in caches["first"]]
-            return new
+            def copy_page(axis, leaf):
+                sl = (slice(None),) * axis
+                return leaf.at[sl + (dst,)].set(leaf[sl + (src,)])
+
+            return self._map_paged_caches(copy_page,
+                                          lambda axis, leaf: leaf, caches)
 
         self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(decode, static_argnames=("kv_bucket",))
+        self._decode = jax.jit(decode,
+                               static_argnames=("kv_bucket", "num_splits"))
         self._chunk_step = jax.jit(chunk_prefill,
                                    static_argnames=("kv_bucket",))
         self._cow_copy = jax.jit(cow_copy)
@@ -489,6 +590,7 @@ class ServeEngine:
         self._allocator: Optional[PageAllocator] = None
         self._slot_tables: Optional[np.ndarray] = None
         self._slot_pages: list[list[int]] = []
+        self._slot_nodes: list = []
         self._dump_page = 0
         self._next_uid = 0
         self._admit_seq = 0
@@ -509,6 +611,38 @@ class ServeEngine:
         if self.paged:
             lo = max(lo, self.page_size)
         return min(_bucket(needed, lo), self.max_len)
+
+    def _decode_splits(self, bucket: int, batch: int,
+                       paged_dispatch: bool) -> int:
+        """Static split-KV count for a decode dispatch: the forced engine
+        override, or the reasoning heuristic over this dispatch's launch
+        width (``batch * KV heads``; one latent head for MLA), bucket,
+        and layout (``generate()`` decodes densely even on a paged
+        engine).  Deterministic, so it doubles as part of the decode jit
+        key."""
+        rows = batch * (1 if getattr(self.cfg, "mla", False)
+                        else self.cfg.num_kv_heads)
+        return resolve_num_splits(
+            self.num_splits, rows=rows, kv_len=bucket,
+            page_size=self.page_size if paged_dispatch else None,
+            target=self.target)
+
+    def _run_decode(self, toks, caches, lens, tables, bucket: int):
+        """One decode jit dispatch, with every shape-relevant knob —
+        batch, bucket, split count, paged-ness — recorded as the cache
+        key; the compile counter must track the distinct keys exactly
+        (anything else is a silent retrace, the bug class this guards)."""
+        splits = self._decode_splits(bucket, int(toks.shape[0]),
+                                     tables is not None)
+        self._decode_keys.add(
+            (int(toks.shape[0]), bucket, splits, tables is not None))
+        out = self._decode(self.params, toks, caches, lens, tables,
+                           kv_bucket=bucket, num_splits=splits)
+        assert self.decode_compiles == len(self._decode_keys), \
+            f"decode retraced outside its key set: {self.decode_compiles} " \
+            f"compiles for {len(self._decode_keys)} distinct " \
+            f"(batch, bucket, splits, paged) keys"
+        return out
 
     def _sample(self, logits, temperature: float, key):
         """Returns (tokens, next_key).  The key is threaded explicitly so
@@ -573,9 +707,9 @@ class ServeEngine:
             tok, key = self._sample(step_logits, temperature, key)
             out[:, t] = np.asarray(tok)
             bucket = self._decode_bucket(int(lens_v.max()) + 1)
-            step_logits, caches = self._decode(
-                self.params, tok[:, None].astype(jnp.int32), caches,
-                jnp.asarray(lens_v), None, kv_bucket=bucket)
+            step_logits, caches = self._run_decode(
+                tok[:, None].astype(jnp.int32), caches,
+                jnp.asarray(lens_v), None, bucket)
             lens_v = lens_v + 1
         return GenResult(tokens=out, prompt_len=lens, steps=max_new_tokens)
 
@@ -668,6 +802,9 @@ class ServeEngine:
                     (self.max_batch, self.max_len // self.page_size),
                     self._dump_page, np.int32)
                 self._slot_pages = [[] for _ in range(self.max_batch)]
+                # per-slot prefix-index resume handles (see register():
+                # each page boundary re-hashes one chunk, not the chain)
+                self._slot_nodes = [None] * self.max_batch
 
     # ---- dense slot storage ------------------------------------------
 
@@ -695,56 +832,49 @@ class ServeEngine:
 
     # ---- paged slot storage: chunked prefill + copy-on-write ---------
 
+    def _map_paged_caches(self, fn_pool, fn_row, *trees):
+        """The single place that knows which slot-cache leaves are shared
+        attention page *pools* and which are per-row state (recurrent /
+        cross): apply ``fn_pool`` / ``fn_row`` leaf-wise across ``trees``
+        (one tree transforms it, two zip-transform).  Both receive
+        ``axis`` — the leaf group's batch/page axis: 1 inside scanned
+        block stacks, 0 for the leading dense layers."""
+        kinds, _ = transformer.period_spec(self.cfg)
+        out = {"blocks": {}}
+        for s, kind in enumerate(kinds):
+            key = f"sub{s}"
+            if key not in trees[0]["blocks"]:
+                continue
+            fn = fn_pool if kind in ("attn", "self") else fn_row
+            out["blocks"][key] = jax.tree.map(
+                lambda *ls, _fn=fn: _fn(1, *ls),
+                *[t["blocks"][key] for t in trees])
+        if "first" in trees[0]:
+            fn = fn_pool if not getattr(self.cfg, "rwkv", False) else fn_row
+            out["first"] = [
+                jax.tree.map(lambda *ls, _fn=fn: _fn(0, *ls), *gs)
+                for gs in zip(*[t["first"] for t in trees])]
+        return out
+
     def _slice_row_caches(self, slot: int):
         """Batch-1 view of the slot caches for a chunk-prefill dispatch:
         attention page pools are batch-free and passed whole (the chunk
         writes only this request's pages + the dump page); per-row leaves
         (recurrent / cross state) are sliced to this row."""
-        kinds, _ = transformer.period_spec(self.cfg)
-
-        def take(axis):
-            return lambda leaf: jax.lax.dynamic_slice_in_dim(
-                leaf, slot, 1, axis)
-
-        out = {"blocks": {}}
-        for s, kind in enumerate(kinds):
-            key = f"sub{s}"
-            if key not in self._slot_caches["blocks"]:
-                continue
-            big = self._slot_caches["blocks"][key]
-            out["blocks"][key] = big if kind in ("attn", "self") \
-                else jax.tree.map(take(1), big)
-        if "first" in self._slot_caches:
-            fk_attn = not getattr(self.cfg, "rwkv", False)
-            out["first"] = [big if fk_attn else jax.tree.map(take(0), big)
-                            for big in self._slot_caches["first"]]
-        return out
+        return self._map_paged_caches(
+            lambda axis, leaf: leaf,
+            lambda axis, leaf: jax.lax.dynamic_slice_in_dim(
+                leaf, slot, 1, axis),
+            self._slot_caches)
 
     def _merge_row_caches(self, slot: int, new):
         """Inverse of :meth:`_slice_row_caches`: adopt the (shared) pool
         leaves wholesale, scatter per-row leaves back into row ``slot``."""
-        kinds, _ = transformer.period_spec(self.cfg)
-
-        def upd(axis):
-            return lambda big, small: jax.lax.dynamic_update_slice_in_dim(
-                big, small, slot, axis)
-
-        merged = {"blocks": {}}
-        for s, kind in enumerate(kinds):
-            key = f"sub{s}"
-            if key not in self._slot_caches["blocks"]:
-                continue
-            big = self._slot_caches["blocks"][key]
-            small = new["blocks"][key]
-            merged["blocks"][key] = small if kind in ("attn", "self") \
-                else jax.tree.map(upd(1), big, small)
-        if "first" in self._slot_caches:
-            fk_attn = not getattr(self.cfg, "rwkv", False)
-            merged["first"] = [
-                small if fk_attn else jax.tree.map(upd(0), big, small)
-                for big, small in zip(self._slot_caches["first"],
-                                      new["first"])]
-        self._slot_caches = merged
+        self._slot_caches = self._map_paged_caches(
+            lambda axis, big, small: small,
+            lambda axis, big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small, slot, axis),
+            self._slot_caches, new)
 
     def _cow(self, slot: int, pidx: int, new_page: int):
         """Copy-on-write: duplicate the shared page at table index
@@ -833,6 +963,7 @@ class ServeEngine:
         self._slot_pages[slot] = []
         self._slot_tables[slot, :] = self._dump_page
         self._slot_lens[slot] = 0
+        self._slot_nodes[slot] = None
         self._active[slot] = None
         req.slot = -1
         self._queue.insert(0, req)
@@ -870,10 +1001,11 @@ class ServeEngine:
             # the prefix cache, then allocate the write target
             if pidx and self.prefix_cache:
                 # only chunk pidx-1 just filled; earlier pages were
-                # registered at admission / previous boundaries
-                self._allocator.register((r.prompt + r.tokens)[:pos],
-                                         self._slot_pages[r.slot],
-                                         start=pidx - 1)
+                # registered at admission / previous boundaries, whose
+                # resume handle makes this O(page_size), not O(pos)
+                self._slot_nodes[r.slot] = self._allocator.register(
+                    (r.prompt + r.tokens)[:pos], self._slot_pages[r.slot],
+                    start=pidx - 1, resume=self._slot_nodes[r.slot])
             while self._active[r.slot] is r:
                 got = self._allocator.alloc(1)
                 if got is not None:
@@ -917,7 +1049,6 @@ class ServeEngine:
                 # recomputed — sampling needs next-token logits.
                 matched, mlen = [], 0
                 if self.prefix_cache:
-                    self.prefix_lookups += 1
                     matched, mlen = self._allocator.match_prefix(ctx)
                     mlen = min(mlen, plen - 1)
                     matched = matched[:self._allocator.pages_for(mlen)]
@@ -944,12 +1075,18 @@ class ServeEngine:
                     self._slot_tables[slot, :] = self._dump_page
                     self._queue.insert(0, req)
                     break
+                # counted per *admitted* request, not per probe: a head-of-
+                # line request blocked on pages re-probes every step, and
+                # counting retries would make the lookup/hit pair lie
+                if self.prefix_cache:
+                    self.prefix_lookups += 1
                 if mlen:
                     self.prefix_hits += 1
                     self.prefix_hit_tokens += mlen
                 logits_row = self._prefill_into_pages(slot, ctx, mlen)
                 if self.prefix_cache:
-                    self._allocator.register(ctx, self._slot_pages[slot])
+                    self._slot_nodes[slot] = self._allocator.register(
+                        ctx, self._slot_pages[slot])
                 self._slot_logits = self._slot_logits.at[slot].set(
                     logits_row)
             else:
@@ -985,6 +1122,7 @@ class ServeEngine:
             self._allocator.free(self._slot_pages[r.slot])
             self._slot_pages[r.slot] = []
             self._slot_tables[r.slot, :] = self._dump_page
+            self._slot_nodes[r.slot] = None
 
     def step(self) -> list[Request]:
         """One decode step for every active slot.
@@ -1058,9 +1196,9 @@ class ServeEngine:
             # would let the pending gather read the mutated rows
             tables = jnp.asarray(
                 self._slot_tables[:, :bucket // self.page_size].copy())
-        step_logits, self._slot_caches = self._decode(
-            self.params, jnp.asarray(toks)[:, None], self._slot_caches,
-            jnp.asarray(lens, np.int32), tables, kv_bucket=bucket)
+        step_logits, self._slot_caches = self._run_decode(
+            jnp.asarray(toks)[:, None], self._slot_caches,
+            jnp.asarray(lens, np.int32), tables, bucket)
         self._slot_logits = step_logits
         for r in active:
             self._slot_lens[r.slot] += 1

@@ -187,6 +187,44 @@ def test_match_prefix_partial_page():
     a.check_invariants()
 
 
+def test_register_rejection_leaves_allocator_consistent():
+    """A register over a free/invalid page raises *and* leaves the
+    interned chain-node store clean — a rejected call must not poison
+    later check_invariants runs (nodes interned before the raise are
+    pruned on the error path)."""
+    import pytest
+
+    a = PageAllocator(4, PS)
+    p1 = a.alloc(1)
+    toks = list(range(2 * PS))
+    with pytest.raises(ValueError, match="free/invalid"):
+        a.register(toks, p1 + [99])    # page 99 was never allocated
+    a.check_invariants()               # chunk 0 indexed, chunk 1 pruned
+    hit, mlen = a.match_prefix(toks)
+    assert hit == p1 and mlen == PS
+    a.free(p1)
+    a.check_invariants()
+
+
+def test_register_resume_handle_skips_rewalk():
+    """A growing request's resume handle registers each new boundary in
+    O(page_size); a stale (pruned) handle falls back to the full walk
+    with identical results."""
+    a = PageAllocator(8, PS)
+    toks = list(range(3 * PS))
+    pages = a.alloc(3)
+    h = a.register(toks[:PS], pages[:1])
+    h = a.register(toks[:2 * PS], pages[:2], start=1, resume=h)
+    h2 = a.register(toks, pages, start=2, resume=h)
+    assert a.match_prefix(toks) == (pages, 3 * PS)
+    # stale handle (bogus node id): silently re-walks from the root
+    a.register(toks, pages, start=2, resume=(2, 10 ** 9))
+    assert a.match_prefix(toks) == (pages, 3 * PS)
+    assert h2[0] == 3
+    a.free(pages)
+    a.check_invariants()
+
+
 def test_register_first_writer_wins():
     """Identical content arriving in a different page is not re-indexed —
     matches keep pointing at the original copy."""
