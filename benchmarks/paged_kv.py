@@ -128,10 +128,10 @@ def shared_prefix_report(cfg, params, args):
 
     waves = [wave(), wave()]         # identical waves for both engines
 
-    def run(prefix_cache):
+    def run(prefix_cache, budget=None):
         eng = ServeEngine(cfg, params, max_batch=nreq,
                           max_len=args.max_len, page_size=args.page_size,
-                          prefix_cache=prefix_cache)
+                          prefix_cache=prefix_cache, prefill_budget=budget)
         toks, stats = {}, []
         for w in waves:
             for p in w:
@@ -169,6 +169,20 @@ def shared_prefix_report(cfg, params, args):
     assert warm.allocator.alloc_count < cold.allocator.alloc_count
     assert warm_stats[1][1] - warm_stats[0][1] == 0, \
         "steady-state wave must not retrace prefill"
+
+    # budgeted interleaving admits the whole wave *before* any page is
+    # registered, so admission-time prefix probes all miss — the
+    # in-flight radix dedup recovers the sharing instead: the leader
+    # publishes full pages as its chunks land and the followers adopt
+    # them mid-prefill rather than recomputing the common prefix
+    wi, wi_toks, wi_stats = run(True, budget=args.page_size)
+    assert wi_toks == cold_toks, "interleaving changed the tokens!"
+    assert wi.inflight_dedup_pages > 0, \
+        "batch-admitted shared prefixes must dedup in flight"
+    print(f"    budgeted interleaving (budget={args.page_size}): wave-1 "
+          f"prefill tokens {wi_stats[0][0]} (vs warm sequential "
+          f"{warm_stats[0][0]}), {wi.inflight_dedup_pages} pages adopted "
+          f"in-flight from the leader, {wi.preemptions} preemptions")
 
 
 def main():

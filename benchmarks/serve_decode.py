@@ -21,6 +21,16 @@ rows seed the repo's BENCH trajectory.
 
     PYTHONPATH=src python benchmarks/serve_decode.py --sweep
     PYTHONPATH=src python benchmarks/serve_decode.py --sweep --tiny  # CI
+
+``--interleave`` A/Bs the SLO scheduler: the same mixed workload — one
+long prompt plus a tail of short high-priority prompts — through
+whole-prompt admission (``prefill_budget=None``) and budgeted chunked
+interleaving, asserting token identity, reporting TTFT/TPOT percentiles
+from the engine's own ``stats()``, and writing the rows to
+``BENCH_serve.json``.
+
+    PYTHONPATH=src python benchmarks/serve_decode.py --interleave
+    PYTHONPATH=src python benchmarks/serve_decode.py --interleave --tiny
 """
 
 from __future__ import annotations
@@ -28,6 +38,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
+import json
 import time
 
 import jax
@@ -132,6 +143,107 @@ def sweep(args):
                   f"{row[None][0] / row[1][0]:>7.2f}x")
 
 
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else None
+
+
+def interleave(args):
+    """SLO A/B on one workload: a long prompt plus short priority-1
+    prompts, whole-prompt admission vs budgeted chunked interleaving.
+
+    The prefix cache is off so the warm-up wave (compiles) cannot feed
+    pages to the measured wave; tokens must be identical between modes,
+    short-prompt p99 TTFT should drop under interleaving, and aggregate
+    tok/s should hold within ~10% (asserted at full scale, warned in
+    ``--tiny`` where a single scheduler hiccup swamps the seconds)."""
+    cfg = dataclasses.replace(registry.get_reduced(args.arch),
+                              attn_impl=args.attn_impl)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    if args.tiny:
+        long_len, short_len, n_short, new, budget, page = 96, 8, 3, 4, 16, 16
+    else:
+        # decode-heavy mix: the budgeted mode pays ~(long_len / budget)
+        # extra decode dispatches while the long prompt chunks, so the
+        # decode phase must dominate for the <=10% throughput bound
+        long_len, short_len, n_short, new, budget, page = \
+            768, 32, 12, 64, 128, 64
+    max_len = 2 * max(long_len, 64)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, long_len)))]
+    prompts += [list(map(int, rng.integers(0, cfg.vocab_size, short_len)))
+                for _ in range(n_short)]
+    prios = [0] + [1] * n_short
+    warm = [list(map(int, rng.integers(0, cfg.vocab_size, len(p))))
+            for p in prompts]
+
+    def run(pf_budget):
+        eng = ServeEngine(cfg, params, max_batch=1 + n_short,
+                          max_len=max_len, page_size=page,
+                          prefix_cache=False, prefill_budget=pf_budget)
+        for p, pr in zip(warm, prios):      # warm-up wave: compiles only
+            eng.submit(list(p), max_new_tokens=new, priority=pr)
+        eng.run_until_drained(max_steps=10_000)
+        eng.reset_metrics()
+        uids = [eng.submit(list(p), max_new_tokens=new, priority=pr)
+                for p, pr in zip(prompts, prios)]
+        t0 = time.perf_counter()
+        done = eng.run_until_drained(max_steps=10_000)
+        dt = time.perf_counter() - t0
+        by_uid = {r.uid: r for r in done}
+        reqs = [by_uid[u] for u in uids]
+        s = eng.stats()
+        short_ttft = [r.first_token_time - r.submit_time for r in reqs[1:]]
+        return {
+            "tok_s": s["generated_tokens"] / dt,
+            "wall_s": dt,
+            "ttft_long_s": reqs[0].first_token_time - reqs[0].submit_time,
+            "ttft_short_p50_s": _pct(short_ttft, 50),
+            "ttft_short_p99_s": _pct(short_ttft, 99),
+            "stats": s,
+        }, [list(r.tokens) for r in reqs]
+
+    print(f"[serve-decode --interleave] arch={args.arch} "
+          f"attn={args.attn_impl} long={long_len} "
+          f"short={short_len}x{n_short} new={new} budget={budget} "
+          f"page={page}")
+    row_a, toks_a = run(None)
+    row_b, toks_b = run(budget)
+    assert toks_a == toks_b, \
+        "interleaving changed the tokens — scheduler bug"
+    for name, row in (("whole-prompt", row_a), ("interleaved", row_b)):
+        s = row["stats"]
+        print(f"  {name:>13}: {row['tok_s']:7.1f} tok/s | "
+              f"short TTFT p50 {row['ttft_short_p50_s'] * 1e3:7.1f}ms "
+              f"p99 {row['ttft_short_p99_s'] * 1e3:7.1f}ms | "
+              f"long TTFT {row['ttft_long_s'] * 1e3:7.1f}ms | "
+              f"TPOT p50 {s['tpot_s']['p50'] * 1e3:6.1f}ms | "
+              f"{s['steps']} steps, {s['decode_compiles']} decode / "
+              f"{s['prefill_compiles']} prefill compiles")
+    speed = row_b["ttft_short_p99_s"] / row_a["ttft_short_p99_s"]
+    loss = 1.0 - row_b["tok_s"] / row_a["tok_s"]
+    print(f"  short p99 TTFT x{speed:.2f} vs whole-prompt "
+          f"({'better' if speed < 1 else 'worse'}); "
+          f"aggregate tok/s {'loss' if loss > 0 else 'gain'} "
+          f"{abs(loss) * 100:.1f}%")
+    if args.tiny:
+        if speed >= 1.0 or loss > 0.10:
+            print("  WARNING: tiny-scale numbers missed the SLO targets "
+                  "(noise-dominated at this scale)")
+    else:
+        assert speed < 1.0, "interleaving must cut short-prompt p99 TTFT"
+        assert loss <= 0.10, \
+            f"aggregate throughput loss {loss * 100:.1f}% exceeds 10%"
+    out = {"bench": "serve_interleave", "arch": args.arch,
+           "attn_impl": args.attn_impl, "tiny": bool(args.tiny),
+           "workload": {"long_len": long_len, "short_len": short_len,
+                        "n_short": n_short, "new_tokens": new,
+                        "prefill_budget": budget, "page_size": page},
+           "whole_prompt": row_a, "interleaved": row_b}
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("  wrote BENCH_serve.json")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -143,6 +255,10 @@ def main():
     ap.add_argument("--sweep", action="store_true",
                     help="split-KV decode context-length sweep "
                          "(tok/s vs KV length, splits on/off)")
+    ap.add_argument("--interleave", action="store_true",
+                    help="SLO scheduler A/B: whole-prompt admission vs "
+                         "budgeted chunked-prefill interleaving "
+                         "(writes BENCH_serve.json)")
     ap.add_argument("--passes", type=int, default=3,
                     help="warm passes per sweep cell (best-of filters "
                          "scheduler noise)")
@@ -156,6 +272,9 @@ def main():
         if args.tiny:
             args.new_tokens = 8
         sweep(args)
+        return
+    if args.interleave:
+        interleave(args)
         return
 
     cfg = dataclasses.replace(registry.get_reduced(args.arch),

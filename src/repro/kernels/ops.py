@@ -195,6 +195,7 @@ def paged_flash_decode(
 def paged_flash_prefill(
     q, k_pool, v_pool, block_tables, *,
     hist_len,
+    chunk_cap: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
 ):
@@ -213,15 +214,25 @@ def paged_flash_prefill(
     long prompt prefilled chunk-by-chunk retraces nothing after the first
     chunk.  Rows past the chunk's true length (a padded tail chunk) return
     garbage the caller discards.
+
+    ``chunk_cap``: optional static capacity ≥ C to pad the chunk axis to
+    before kernel generation — a scheduler dispatching variable-size
+    budgeted chunks passes its (bounded) cap set here so the kernel cache
+    is keyed on caps, never on the actual chunk sizes the budget produced.
     """
     b, hq, c, d = q.shape
     hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    if chunk_cap is not None:
+        if chunk_cap < c:
+            raise ValueError(f"chunk_cap {chunk_cap} < chunk length {c}")
+        q = _pad_rows(q, 2, chunk_cap)
+    cap = q.shape[2]
     tbl = jnp.asarray(block_tables, jnp.int32)
     bucket = tbl.shape[-1] * ps
     spec = AttnSpec(variant=_variant(hq, hkv), num_q_heads=hq,
                     num_kv_heads=hkv, head_dim=d, causal=True,
                     mode="chunk_prefill", dtype=_DT[q.dtype], page_size=ps)
-    kern = cached_kernel(spec, c, bucket, target, interpret, True)
+    kern = cached_kernel(spec, cap, bucket, target, interpret, True)
     qp = _pad_rows(q, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
     out = kern.pallas_fn(lens, tbl, qp, k_pool, v_pool)
@@ -231,6 +242,7 @@ def paged_flash_prefill(
 def paged_mla_prefill(
     q_latent, c_pool, block_tables, *,
     hist_len,
+    chunk_cap: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
     kv_lora_rank: int = 512,
@@ -238,15 +250,20 @@ def paged_mla_prefill(
 ):
     """One prompt chunk of causal MLA attention against a paged latent
     cache.  q_latent: (B, H, C, R+Rr); ``c_pool``/``block_tables``/
-    ``hist_len`` follow :func:`paged_flash_prefill`."""
+    ``hist_len``/``chunk_cap`` follow :func:`paged_flash_prefill`."""
     b, h, c, dq = q_latent.shape
     ps = c_pool.shape[1]
+    if chunk_cap is not None:
+        if chunk_cap < c:
+            raise ValueError(f"chunk_cap {chunk_cap} < chunk length {c}")
+        q_latent = _pad_rows(q_latent, 2, chunk_cap)
+    cap = q_latent.shape[2]
     tbl = jnp.asarray(block_tables, jnp.int32)
     bucket = tbl.shape[-1] * ps
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=True,
                         mode="chunk_prefill", dtype=_DT[q_latent.dtype],
                         page_size=ps)
-    kern = cached_kernel(spec, c, bucket, target, interpret, True)
+    kern = cached_kernel(spec, cap, bucket, target, interpret, True)
     qp = _pad_rows(q_latent, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
     out = kern.pallas_fn(lens, tbl, qp, c_pool)

@@ -205,7 +205,7 @@ def paged_scatter(pool, tables, pos, new):
     return pool.at[pages, pos % ps].set(new)
 
 
-def paged_scatter_chunk(pool, tables, start, new):
+def paged_scatter_chunk(pool, tables, start, new, valid=None):
     """Write a whole chunk of tokens per batch row into its pool pages.
 
     ``pool``: (P, Hkv, ps, D) or (P, ps, D); ``tables``: (B, Tmax) int32;
@@ -214,7 +214,14 @@ def paged_scatter_chunk(pool, tables, start, new):
     lands in page ``tables[b, (start[b]+j) // ps]`` at slot
     ``(start[b]+j) % ps`` — every touched table entry must be a valid pool
     index (the engine pads tables with its reserved dump page, so a padded
-    tail chunk spills harmlessly into the dump page)."""
+    tail chunk spills harmlessly into the dump page).
+
+    ``valid``: optional (B,) runtime count of real tokens at the head of
+    each row's chunk — positions ``j >= valid[b]`` keep the pool's
+    existing content instead of writing.  A padded tail chunk may not
+    assume it owns its last page's tail: once full pages are published to
+    the prefix index mid-prefill, another request can be holding (or
+    adopting) that page before the pad positions would land."""
     ps = pool.shape[-2]
     c = new.shape[-2]
     start = jnp.asarray(start, jnp.int32).reshape(-1)
@@ -222,10 +229,21 @@ def paged_scatter_chunk(pool, tables, start, new):
     pages = jnp.take_along_axis(jnp.asarray(tables, jnp.int32),
                                 pos // ps, axis=1)                  # (B, C)
     slots = pos % ps
+    keep = None
+    if valid is not None:
+        keep = (jnp.arange(c, dtype=jnp.int32)[None, :]
+                < jnp.asarray(valid, jnp.int32).reshape(-1)[:, None])
     if pool.ndim == 4:
         # advanced indices (B,C) around the Hkv slice -> (B, C, Hkv, D)
-        return pool.at[pages, :, slots].set(jnp.moveaxis(new, 1, 2))
-    return pool.at[pages, slots].set(new)
+        upd = jnp.moveaxis(new, 1, 2)
+        if keep is not None:
+            upd = jnp.where(keep[..., None, None], upd,
+                            pool[pages, :, slots])
+        return pool.at[pages, :, slots].set(upd)
+    upd = new
+    if keep is not None:
+        upd = jnp.where(keep[..., None], upd, pool[pages, slots])
+    return pool.at[pages, slots].set(upd)
 
 
 def run_paged_prefill(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
@@ -364,7 +382,7 @@ def _cache_append(buf, new, start, axis: int):
 def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                cross_kv=None, causal=True, head_sharding=None,
                kv_bucket=None, block_tables=None, page_size=None,
-               num_splits=None):
+               num_splits=None, chunk_valid=None):
     """x: (B, T, d).  ``cache``: optional dict(k, v, len) for decode;
     ``cache['len']`` may be a scalar or a per-request (B,) vector.
     ``kv_bucket``: static length bucket — attention reads only the first
@@ -380,7 +398,10 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
     through the first ``kv_bucket // page_size`` table columns.  T == 1 is
     paged decode; T > 1 is one chunk of chunked prefill (causal against
     history + the chunk, the cache growing page-by-page instead of through
-    a dense prefill buffer).
+    a dense prefill buffer).  ``chunk_valid``: optional (B,) runtime count
+    of real tokens in a padded prefill chunk — the scatter masks the pad
+    tail so it never lands in the pages (causality already keeps real
+    rows from attending to those positions).
     ``cross_kv``: (B, P, vision_d) patch embeddings for cross-attention.
     ``head_sharding``: PartitionSpec for (B, H, T, D) tensors — pins the
     q/o head dim to the 'model' axis so GSPMD never resolves the attention
@@ -422,8 +443,10 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                                  cache_len=kv_valid, scale=hd ** -0.5,
                                  num_splits=num_splits)
         else:
-            kp = paged_scatter_chunk(cache["k"], block_tables, hist, k)
-            vp = paged_scatter_chunk(cache["v"], block_tables, hist, v)
+            kp = paged_scatter_chunk(cache["k"], block_tables, hist, k,
+                                     valid=chunk_valid)
+            vp = paged_scatter_chunk(cache["v"], block_tables, hist, v,
+                                     valid=chunk_valid)
             cache = {"k": kp, "v": vp, "len": hist + t}
             o = run_paged_prefill(q, kp, vp, block_tables[:, :tp], cfg=cfg,
                                   hist_len=hist, scale=hd ** -0.5)
@@ -514,13 +537,13 @@ def mla_init(key, cfg: ModelConfig):
 def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
               causal=True, head_sharding=None, latent_sharding=None,
               kv_bucket=None, block_tables=None, page_size=None,
-              num_splits=None):
+              num_splits=None, chunk_valid=None):
     """Absorbed MLA.  The latent cache (R + Rr per token, head-independent)
     is both K and V — read once for both GEMMs (paper Table 2 workload).
     ``cache['len']``/``kv_bucket``/``block_tables``/``page_size``/
-    ``num_splits`` follow :func:`attn_apply`; the paged pool is
-    (P, page_size, R+Rr).  MLA decode launches only B programs (one
-    latent KV head), so the split heuristic engages earliest here."""
+    ``num_splits``/``chunk_valid`` follow :func:`attn_apply`; the paged
+    pool is (P, page_size, R+Rr).  MLA decode launches only B programs
+    (one latent KV head), so the split heuristic engages earliest here."""
     b, t, d = x.shape
     h, r, rr = cfg.num_q_heads, cfg.kv_lora_rank, cfg.rope_head_dim
     nope = cfg.nope_head_dim
@@ -564,7 +587,7 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                                  latent[:, 0])
         else:   # one chunk of chunked prefill
             pool = paged_scatter_chunk(cache["c"], block_tables, hist,
-                                       latent)
+                                       latent, valid=chunk_valid)
         cache = {"c": pool, "len": hist + t}
         kv_valid = cache["len"]
     elif cache is not None:

@@ -107,7 +107,8 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                 kv_bucket=ctx.get("kv_bucket"),
                 block_tables=ctx.get("block_tables"),
                 page_size=ctx.get("page_size"),
-                num_splits=ctx.get("num_splits"))
+                num_splits=ctx.get("num_splits"),
+                chunk_valid=ctx.get("chunk_valid"))
         else:
             o, new_cache = attention.attn_apply(
                 p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
@@ -115,7 +116,8 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                 kv_bucket=ctx.get("kv_bucket"),
                 block_tables=ctx.get("block_tables"),
                 page_size=ctx.get("page_size"),
-                num_splits=ctx.get("num_splits"))
+                num_splits=ctx.get("num_splits"),
+                chunk_valid=ctx.get("chunk_valid"))
         if new_cache is not None:
             new_cache.pop("len", None)  # length tracked by the caller
     elif kind == "cross":
@@ -196,8 +198,8 @@ def abstract_params(cfg: ModelConfig):
 def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
           caches=None, cache_len=None, positions=None, kv_bucket=None,
           block_tables=None, page_size=None, num_splits=None,
-          act_sharding=None, ep_sharding=None, head_sharding=None,
-          latent_sharding=None, moe_mesh=None):
+          chunk_valid=None, act_sharding=None, ep_sharding=None,
+          head_sharding=None, latent_sharding=None, moe_mesh=None):
     """tokens: (B, T) int32 -> logits (B, T, V) f32.
 
     ``caches``: pytree from :func:`init_caches` for decode; ``cache_len``
@@ -214,6 +216,9 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     physical pool pages, shared by every layer.  T == 1 decodes; T > 1
     runs one chunk of chunked prefill (K/V scattered straight into the
     pages, causal attention against the history through the table).
+    ``chunk_valid`` (optional (B,) runtime vector) is the count of real
+    tokens in a padded prefill chunk — every attention layer's page
+    scatter masks the pad tail so it never lands in the pools.
 
     ``num_splits`` (static): split-KV decode partition count for every
     attention layer — None lets the reasoning heuristic choose per layer
@@ -265,6 +270,7 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
                 "cache": cache, "cache_len": clen,
                 "kv_bucket": kv_bucket, "num_splits": num_splits,
                 "block_tables": block_tables, "page_size": page_size,
+                "chunk_valid": chunk_valid,
                 "ep_sharding": ep_sharding,
                 "head_sharding": head_sharding,
                 "latent_sharding": latent_sharding,

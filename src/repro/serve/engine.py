@@ -16,9 +16,23 @@ write as the request grows and freed when it retires.  A request therefore
 reserves HBM proportional to its *true* length, admitted-request capacity
 is bounded by total pages rather than ``max_batch x max_len``, and the
 per-row block table rides into the decode kernel as a runtime operand (the
-TL paged-decode layout).  When the pool runs dry mid-decode the youngest
-request is preempted — its pages are freed and it re-queues for
-re-prefill — so neighbours' pages are never corrupted.
+TL paged-decode layout).  When the pool runs dry mid-decode the
+lowest-priority-then-youngest request is preempted — its pages are freed
+and it re-queues (in admission order among victims) for re-prefill — so
+neighbours' pages are never corrupted.
+
+Admission itself can be *budgeted* (``prefill_budget``): instead of
+prefilling a whole prompt before decode resumes, each step spends at most
+that many prompt tokens on page-aligned chunk-prefill dispatches
+interleaved with the decode batch (Sarathi-style chunked prefill), so one
+long prompt never stalls the running requests — the decode-latency SLO the
+scheduler exists for.  Mid-prefill rows ride the decode step masked at
+length zero with their table remapped to the reserved dump page; a prompt
+whose last chunk lands joins the decode batch the same step.  Full pages
+are published to the prefix index *as they are written*, and every
+prefilling request re-probes the index before each chunk — identical or
+shared-prefix prompts admitted together therefore prefill once (the
+follower adopts the leader's pages, radix-style, mid-flight).
 
 Pages are *shared and ref-counted*: the allocator keeps a
 content-addressed prefix index (page-aligned token chunk chains -> page),
@@ -56,6 +70,7 @@ a whole batch at once and drops it at the end, so paging buys it nothing.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -403,19 +418,44 @@ class GenResult:
 
 @dataclasses.dataclass
 class Request:
-    """One serving request moving through the continuous-batching loop."""
+    """One serving request moving through the continuous-batching loop.
+
+    ``priority`` orders both admission and preemption (higher = more
+    important; ties broken FIFO).  ``pf_pos``/``pf_end`` track budgeted
+    chunked prefill: the request holds a slot and pages but its prompt is
+    only computed up to ``pf_pos`` (< ``pf_end``); -1 means whole-prompt
+    admission.  The ``submit/first_token/finish`` stamps are recorded in
+    both wall-clock seconds (``*_time``) and engine step counts
+    (``*_step``) — the step counts are deterministic, so benchmarks can
+    assert on them."""
 
     uid: int
     prompt: list[int]
     max_new_tokens: int
     temperature: float = 0.0
+    priority: int = 0
     tokens: list[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     seq: int = -1               # admission order (preemption picks max)
+    pf_pos: int = -1            # budgeted prefill: next position to compute
+    pf_end: int = -1            # budgeted prefill: context length
+    preempted: bool = False     # requeued victim (goes ahead of fresh)
+    submit_time: float = 0.0
+    submit_step: int = 0
+    first_token_time: Optional[float] = None
+    first_token_step: Optional[int] = None
+    finish_time: Optional[float] = None
+    finish_step: Optional[int] = None
 
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def prefilling(self) -> bool:
+        """Holds a slot but its prompt is not fully computed yet (budgeted
+        chunked prefill in flight)."""
+        return self.slot >= 0 and 0 <= self.pf_pos < self.pf_end
 
 
 class ServeEngine:
@@ -462,6 +502,20 @@ class ServeEngine:
     ``4 * page_size``) sets the chunked-prefill granularity — MoE
     architectures prefill the whole prompt as a single exact-length chunk
     for the same routing reason, still directly into pages.
+
+    Scheduler: ``prefill_budget`` (prompt tokens per step; None = off)
+    turns whole-prompt admission into budgeted chunked interleaving —
+    see the module docstring and :meth:`_schedule_prefill`.  The budget
+    is a soft cap: a chunk is indivisible, so the last dispatch of a step
+    may overshoot by less than one chunk, and a budget below one page
+    still schedules one minimal chunk per step (progress is guaranteed).
+    Requests carry a ``priority`` (:meth:`submit`): admission order is
+    priority-then-FIFO, budgeted prefill spends its tokens on the highest
+    priority first, and preemption victims are picked lowest-priority-
+    then-youngest.  Interleaving needs pad-safe paged prefill, so
+    recurrent and MoE architectures (and dense engines) fall back to
+    whole-prompt admission; priorities and metrics still apply.
+    :meth:`stats` snapshots engine-tracked TTFT/TPOT percentiles.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
@@ -471,6 +525,7 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None,
                  num_splits: Optional[int] = None,
                  target: str = "v5e"):
         self.cfg = cfg
@@ -508,6 +563,15 @@ class ServeEngine:
         # straight into pages (no dense-then-scatter copy).
         self.prefill_chunk = None if prefill_chunk is None \
             else int(prefill_chunk)
+        # Budgeted chunked-prefill interleaving (None = whole-prompt
+        # admission).  Chunks are page-aligned, so the effective per-step
+        # spend rounds to page multiples; see the class docstring.
+        if prefill_budget is not None and int(prefill_budget) <= 0:
+            raise ValueError(f"prefill_budget {prefill_budget} must be a "
+                             "positive token count (or None to disable "
+                             "chunked interleaving)")
+        self.prefill_budget = None if prefill_budget is None \
+            else int(prefill_budget)
         # layout constraints are checked at first *paged* use (submit/step
         # materialise the pools) so generate()-only engines — which keep
         # the dense per-row cache — accept any max_len, as before
@@ -527,6 +591,18 @@ class ServeEngine:
         self.prefix_hit_tokens = 0    # prompt tokens served from the cache
         self.prefill_tokens = 0       # prompt tokens actually computed
         self.cow_count = 0            # copy-on-write page copies
+        self.preemptions = 0          # active requests evicted to the queue
+        self.inflight_dedup_pages = 0  # pages adopted from in-flight peers
+        # engine-tracked latency samples (see stats()): TTFT is submit ->
+        # first sampled token, TPOT the mean inter-token gap of a finished
+        # request; each in wall seconds and in deterministic step counts
+        self._step_idx = 0
+        self._ttft_s: list[float] = []
+        self._ttft_steps: list[int] = []
+        self._tpot_s: list[float] = []
+        self._tpot_steps: list[float] = []
+        self._n_finished = 0
+        self._n_generated = 0
 
         def prefill(params, tokens, caches):
             self.prefill_compiles += 1          # runs once per jit trace
@@ -553,14 +629,16 @@ class ServeEngine:
 
         # one chunk of chunked prefill, written straight into the pages:
         # compiled per (chunk capacity, kv bucket) — never per chunk
-        # position or prompt length (cache_len is a runtime vector)
+        # position or prompt length (cache_len and chunk_valid are runtime
+        # vectors; chunk_valid masks a padded tail's scatter so the pad
+        # positions never land in pages that may already be shared)
         def chunk_prefill(params, tokens, caches, cache_len, tables,
-                          kv_bucket):
+                          chunk_valid, kv_bucket):
             self.prefill_compiles += 1      # runs once per jit trace
             logits, _, caches = transformer.apply(
                 params, tokens, cfg, caches=caches, cache_len=cache_len,
                 kv_bucket=kv_bucket, block_tables=tables,
-                page_size=self.page_size)
+                page_size=self.page_size, chunk_valid=chunk_valid)
             return logits, caches
 
         # copy one pool page (COW): page ``src`` -> ``dst`` in every
@@ -718,8 +796,12 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def submit(self, prompt: list[int], *, max_new_tokens: int = 16,
-               temperature: float = 0.0) -> int:
-        """Queue a request; it is admitted at the next :meth:`step`."""
+               temperature: float = 0.0, priority: int = 0) -> int:
+        """Queue a request; it is admitted at the next :meth:`step`.
+
+        ``priority`` (default 0; higher = more important) orders the
+        queue: admission, budgeted prefill spend, and preemption-victim
+        selection all prefer higher classes, FIFO within a class."""
         if self.vision is not None:
             raise ValueError(
                 "submit()/step() admit requests one at a time, but "
@@ -738,10 +820,34 @@ class ServeEngine:
                     f"{self._page_allocator().num_pages - 1} allocatable "
                     "pages; raise num_pages")
         req = Request(uid=self._next_uid, prompt=list(prompt),
-                      max_new_tokens=max_new_tokens, temperature=temperature)
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      priority=int(priority))
+        req.submit_time = time.perf_counter()
+        req.submit_step = self._step_idx
         self._next_uid += 1
-        self._queue.append(req)
+        self._queue_insert(req)
         return req.uid
+
+    @staticmethod
+    def _queue_key(req: Request) -> tuple:
+        """Total queue order: higher priority first; within a class,
+        preemption victims go ahead of fresh arrivals (they already hold
+        sampled tokens) in their original admission (``seq``) order, and
+        fresh arrivals stay FIFO by ``uid``."""
+        return (-req.priority, 0 if req.preempted else 1,
+                req.seq if req.preempted else req.uid)
+
+    def _queue_insert(self, req: Request) -> None:
+        """Keep ``_queue`` sorted by :meth:`_queue_key`.  This is what
+        makes multi-victim preemption order-preserving: the old
+        insert-at-front requeue re-admitted the *latest* victim first
+        whenever an earlier victim was still waiting, starving the oldest."""
+        key = self._queue_key(req)
+        i = 0
+        while i < len(self._queue) \
+                and self._queue_key(self._queue[i]) <= key:
+            i += 1
+        self._queue.insert(i, req)
 
     @property
     def active_requests(self) -> list[Request]:
@@ -905,59 +1011,103 @@ class ServeEngine:
             self._allocator.unindex(page)
         return True
 
+    def _next_chunk(self, pos: int, plen: int,
+                    budget: Optional[int]) -> tuple[int, int]:
+        """Size the next prefill chunk at ``pos`` of a ``plen``-token
+        context: returns ``(n, cap)`` — n real tokens dispatched at
+        static capacity cap.  Caps come from a bounded set (page
+        multiples up to ``prefill_chunk`` plus the one-page boundary
+        chunk), so the chunk-prefill jit cache is keyed on
+        O(prefill_chunk / page_size) shapes regardless of prompt lengths
+        *or budget values*.  ``budget`` (the scheduler's remaining
+        per-step tokens) trims mid-prompt chunks to whole pages — never
+        below one page, so progress is guaranteed even when the budget is
+        smaller than a page; ``None`` means unbudgeted (whole-prompt
+        admission prefill)."""
+        ps = self.page_size
+        if pos % ps:
+            # misaligned start (partial-page prefix hit; pad-safe only
+            # — non-pad-safe archs never prefix-match): snap back to
+            # the page grid with a one-page boundary chunk.  cap is
+            # clamped so pos + cap never crosses max_len (the block
+            # table's extent); padded positions past the allocated
+            # span land in the dump page.
+            return min(plen - pos, ps - pos % ps), \
+                min(ps, self.max_len - pos)
+        remaining = plen - pos
+        if bool(getattr(self.cfg, "moe", False)):
+            # splitting a routing batch perturbs capacity truncation:
+            # one exact whole-prompt chunk
+            return remaining, remaining
+        want = remaining if budget is None \
+            else min(remaining, max(budget, 1))
+        n = min(self.prefill_chunk, want)
+        if n < remaining:
+            # mid-prompt chunk: a whole number of pages (at least one),
+            # so every write lands page-aligned and the next chunk
+            # resumes on the grid
+            n = min(max(ps, n // ps * ps), remaining)
+        cap = -(-n // ps) * ps if self._pad_safe_prefill else n
+        return n, cap
+
+    def _prefill_chunk_step(self, slot: int, ctx: list[int], pos: int,
+                            n: int, cap: int) -> jnp.ndarray:
+        """Dispatch one chunk of ``ctx[pos:pos + n]`` (static capacity
+        ``cap``) through the TL chunk-prefill path, straight into this
+        slot's pages.  The real-token count rides along as the runtime
+        ``chunk_valid`` operand, so a padded tail's K/V never scatters
+        into the pages — a pad write may not assume it owns the page tail
+        once mid-flight dedup can hand that page to another request.
+        Returns the chunk logits (caller gathers the last real row)."""
+        toks = np.zeros((1, cap), np.int32)
+        toks[0, :n] = ctx[pos:pos + n]
+        bucket = self._decode_bucket(pos + cap)
+        # .copy(): jax CPU zero-copies aligned contiguous numpy
+        # buffers, and the dispatch is async — handing it the live
+        # table would race with the next admission/COW/growth mutation
+        # (whether a given allocation aliases is a malloc-alignment
+        # accident, so the race is intermittent by process)
+        tables = jnp.asarray(
+            self._slot_tables[slot:slot + 1,
+                              :bucket // self.page_size].copy())
+        logits, new_caches = self._chunk_step(
+            self.params, jnp.asarray(toks),
+            self._slice_row_caches(slot),
+            jnp.asarray([pos], np.int32), tables,
+            jnp.asarray([n], np.int32), kv_bucket=bucket)
+        self._merge_row_caches(slot, new_caches)
+        self.prefill_tokens += n
+        return logits
+
     def _prefill_into_pages(self, slot: int, ctx: list[int],
                             start: int) -> jnp.ndarray:
         """Chunked prefill of ``ctx[start:]`` straight into this slot's
         pages (the first ``start`` tokens came from the prefix cache).
         Chunks are ``prefill_chunk`` tokens; pad-safe architectures round
-        the tail up to a page multiple (the padded K/V lands in this
-        request's own allocated page tail, masked by ``cache_len`` and
-        overwritten token-by-token as decode proceeds) so compile count is
+        the tail up to a page multiple (the padded positions are masked
+        out of the page scatter by ``chunk_valid``) so compile count is
         bounded by chunk shapes, not prompt lengths.  Recurrent
         architectures keep exact-length tails (padding would contaminate
         state) and MoE architectures prefill one exact whole-prompt chunk
         (splitting a routing batch perturbs capacity truncation).
         Returns the next-token logits row (the last real position)."""
         plen = len(ctx)
-        ps = self.page_size
-        moe = bool(getattr(self.cfg, "moe", False))
         pos, logits, n = start, None, 0
         while pos < plen:
-            if pos % ps:
-                # misaligned start (partial-page prefix hit; pad-safe only
-                # — non-pad-safe archs never prefix-match): snap back to
-                # the page grid with a one-page boundary chunk.  cap is
-                # clamped so pos + cap never crosses max_len (the block
-                # table's extent); padded positions past the allocated
-                # span land in the dump page.
-                n = min(plen - pos, ps - pos % ps)
-                cap = min(ps, self.max_len - pos)
-            else:
-                n = plen - pos if moe \
-                    else min(self.prefill_chunk, plen - pos)
-                cap = -(-n // ps) * ps if self._pad_safe_prefill else n
-            toks = np.zeros((1, cap), np.int32)
-            toks[0, :n] = ctx[pos:pos + n]
-            bucket = self._decode_bucket(pos + cap)
-            # .copy(): jax CPU zero-copies aligned contiguous numpy
-            # buffers, and the dispatch is async — handing it the live
-            # table would race with the next admission/COW/growth mutation
-            # (whether a given allocation aliases is a malloc-alignment
-            # accident, so the race is intermittent by process)
-            tables = jnp.asarray(
-                self._slot_tables[slot:slot + 1, :bucket // ps].copy())
-            logits, new_caches = self._chunk_step(
-                self.params, jnp.asarray(toks),
-                self._slice_row_caches(slot),
-                jnp.asarray([pos], np.int32), tables, kv_bucket=bucket)
-            self._merge_row_caches(slot, new_caches)
-            self.prefill_tokens += n
+            n, cap = self._next_chunk(pos, plen, None)
+            logits = self._prefill_chunk_step(slot, ctx, pos, n, cap)
             pos += n
         return logits[0, n - 1]
 
     def _preempt(self, req: Request):
-        """Evict an active request: free its pages, requeue it at the front
-        for re-prefill (prompt + generated so far — no tokens are lost)."""
+        """Evict an active request: free its pages, requeue it for
+        re-prefill (prompt + generated so far — no tokens are lost).
+        Victims re-enter the queue ahead of fresh arrivals of their
+        priority class, ordered by original admission ``seq`` — the
+        :meth:`_queue_insert` sort keeps several victims preempted in one
+        step in their relative admission order (a plain insert-at-front
+        requeue put the latest victim first whenever an earlier victim
+        was still waiting, starving the oldest)."""
         slot = req.slot
         self._allocator.free(self._slot_pages[slot])
         self._slot_pages[slot] = []
@@ -966,22 +1116,43 @@ class ServeEngine:
         self._slot_nodes[slot] = None
         self._active[slot] = None
         req.slot = -1
-        self._queue.insert(0, req)
+        req.pf_pos = req.pf_end = -1
+        req.preempted = True
+        self.preemptions += 1
+        self._queue_insert(req)
+
+    def _pick_victim(self) -> Optional[Request]:
+        """Preemption victim: lowest priority class first, youngest
+        admission (max ``seq``) within it — a background request is
+        always evicted before a higher-priority one regardless of age.
+        Returns None when the active set is empty: a sole active request
+        can preempt *itself* (all its pages shared prefix hits free no
+        allocatable page), after which victim selection must not blow up
+        (``max()`` on the empty set raised ValueError here)."""
+        cands = self.active_requests
+        if not cands:
+            return None
+        return max(cands, key=lambda a: (-a.priority, a.seq))
 
     def _grow_pages(self):
         """Allocate-on-write: every active row whose next token starts a
         fresh page gets one before the decode writes it, and a row about
         to write mid-page is made exclusive first (COW if the page is
         shared through the prefix cache, un-indexing if it is the sole
-        owner of a cached page).  On pool exhaustion the youngest-admitted
-        request is preempted (possibly the one asking) until the write can
-        proceed — preempting a request whose pages are all shared frees no
-        allocatable page, so the loop keeps preempting rather than
-        declaring deadlock."""
+        owner of a cached page).  On pool exhaustion the lowest-priority-
+        then-youngest request is preempted (possibly the one asking)
+        until the write can proceed — preempting a request whose pages
+        are all shared frees no allocatable page, so the loop keeps
+        preempting rather than declaring deadlock, and stops cleanly
+        when the active set empties (:meth:`_pick_victim`).  Mid-prefill
+        rows are skipped: budgeted admission allocated their pages up
+        front and they take no decode write this step."""
         ps = self.page_size
         for r in list(self.active_requests):
             if self._active[r.slot] is not r:
                 continue                     # preempted by an earlier row
+            if r.prefilling:
+                continue
             pos = int(self._slot_lens[r.slot])
             pidx = pos // ps
             if pos % ps:
@@ -990,8 +1161,10 @@ class ServeEngine:
                 while self._active[r.slot] is r:
                     if self._make_writable(r.slot, pidx):
                         break
-                    self._preempt(max(self.active_requests,
-                                      key=lambda a: a.seq))
+                    victim = self._pick_victim()
+                    if victim is None:
+                        break
+                    self._preempt(victim)
                 if self._active[r.slot] is r:
                     assert self._allocator.refcount(
                         int(self._slot_tables[r.slot, pidx])) == 1, \
@@ -1012,8 +1185,10 @@ class ServeEngine:
                     self._slot_pages[r.slot].append(got[0])
                     self._slot_tables[r.slot, pidx] = got[0]
                     break
-                self._preempt(max(self.active_requests,
-                                  key=lambda a: a.seq))
+                victim = self._pick_victim()
+                if victim is None:
+                    break
+                self._preempt(victim)
 
     # ---- admission ----------------------------------------------------
 
@@ -1030,6 +1205,7 @@ class ServeEngine:
                 # nowhere to write its next token: retire it truncated at
                 # max_len — the same rule step() applies to live slots
                 self._queue.pop(0)
+                self._stamp_finish(req)
                 self._finished_early.append(req)
                 continue
             if self.paged:
@@ -1041,6 +1217,7 @@ class ServeEngine:
                     # it cannot livelock itself and everything queued
                     # behind it
                     self._queue.pop(0)
+                    self._stamp_finish(req)
                     self._finished_early.append(req)
                     continue
                 # prefix-cache probe: map cached pages of the longest
@@ -1069,11 +1246,12 @@ class ServeEngine:
                         and not self._make_writable(slot,
                                                     mlen // self.page_size):
                     # COW needs one more page and the pool is dry: roll
-                    # back and wait (FIFO preserved, nothing leaked)
+                    # back and wait (the sorted re-insert restores its
+                    # head-of-line position, nothing leaked)
                     self._allocator.free(self._slot_pages[slot])
                     self._slot_pages[slot] = []
                     self._slot_tables[slot, :] = self._dump_page
-                    self._queue.insert(0, req)
+                    self._queue_insert(req)
                     break
                 # counted per *admitted* request, not per probe: a head-of-
                 # line request blocked on pages re-probes every step, and
@@ -1083,12 +1261,24 @@ class ServeEngine:
                 if mlen:
                     self.prefix_hits += 1
                     self.prefix_hit_tokens += mlen
-                logits_row = self._prefill_into_pages(slot, ctx, mlen)
-                if self.prefix_cache:
-                    self._slot_nodes[slot] = self._allocator.register(
-                        ctx, self._slot_pages[slot])
-                self._slot_logits = self._slot_logits.at[slot].set(
-                    logits_row)
+                if self._interleaved:
+                    # budgeted admission: the slot, pages, and prefix hits
+                    # are mapped now, but the prompt compute is deferred to
+                    # _schedule_prefill, which spends the per-step token
+                    # budget across all mid-prefill rows.  The row stays at
+                    # length 0 (masked out of decode) until the last chunk
+                    # lands.
+                    self._slot_nodes[slot] = None
+                    req.pf_pos, req.pf_end = mlen, plen
+                    self._slot_lens[slot] = 0
+                else:
+                    logits_row = self._prefill_into_pages(slot, ctx, mlen)
+                    if self.prefix_cache:
+                        self._slot_nodes[slot] = self._allocator.register(
+                            ctx, self._slot_pages[slot])
+                    self._slot_logits = self._slot_logits.at[slot].set(
+                        logits_row)
+                    self._slot_lens[slot] = plen
             else:
                 self._queue.pop(0)
                 slot = free.pop(0)
@@ -1108,11 +1298,174 @@ class ServeEngine:
                 logits, caches = self._prefill(self.params,
                                                jnp.asarray(toks), caches)
                 self._write_slot(slot, caches, logits[0, plen - 1])
-            self._slot_lens[slot] = plen
+                self._slot_lens[slot] = plen
             req.slot = slot
             req.seq = self._admit_seq
             self._admit_seq += 1
+            req.preempted = False
             self._active[slot] = req
+
+    # ---- budgeted chunked-prefill scheduling (SLO interleaving) -------
+
+    @property
+    def _interleaved(self) -> bool:
+        """Budgeted chunked interleaving is active: a configured budget on
+        a paged, pad-safe engine.  Recurrent state cannot ride a masked
+        decode row and an MoE prompt is one indivisible routing batch, so
+        both (and dense engines) keep whole-prompt admission."""
+        return (self.prefill_budget is not None and self.paged
+                and self._pad_safe_prefill)
+
+    def _register_full_pages(self, r: Request) -> None:
+        """Publish the chunks a mid-prefill request has fully written so
+        far — as they land, not just at completion — so queued
+        identical/shared-prefix prompts can dedup against a leader that
+        is still prefilling.  The resume handle keeps each call
+        O(new chunks), and re-registration of already-indexed chunks is a
+        no-op (first writer wins)."""
+        if not self.prefix_cache:
+            return
+        full = r.pf_pos // self.page_size
+        if full == 0:
+            return
+        ctx = (r.prompt + r.tokens)[:full * self.page_size]
+        self._slot_nodes[r.slot] = self._allocator.register(
+            ctx, self._slot_pages[r.slot][:full],
+            resume=self._slot_nodes[r.slot])
+
+    def _adopt_shared_pages(self, r: Request) -> None:
+        """Radix-style in-flight dedup: before computing the next chunk,
+        re-probe the prefix index — a leader prefilling the same (or
+        shared-prefix) prompt publishes full pages as it goes
+        (:meth:`_register_full_pages`), and this follower maps them into
+        its table instead of recomputing, returning its own fresh page
+        for that chunk to the pool.  Adoption is whole-page and stops one
+        token short of the prompt end: sampling needs next-token logits
+        from a computed position, mirroring the admission-time
+        ``mlen = min(mlen, plen - 1)`` truncation."""
+        ps = self.page_size
+        if not self.prefix_cache or r.pf_pos % ps:
+            return
+        k0 = r.pf_pos // ps
+        kmax = (r.pf_end - 1) // ps
+        if k0 >= kmax:
+            return
+        ctx = r.prompt + r.tokens
+        pages, mlen = self._allocator.match_prefix(ctx)
+        nfull = min(mlen // ps, kmax)
+        k = k0
+        while k < nfull:
+            p, q = pages[k], self._slot_pages[r.slot][k]
+            if p == q:
+                # the index already maps our own page here (we published
+                # it) — nothing to adopt for this chunk
+                k += 1
+                continue
+            self._allocator.ref([p])
+            self._allocator.free([q])   # fresh, unwritten: refcount 1 -> 0
+            self._slot_pages[r.slot][k] = p
+            self._slot_tables[r.slot, k] = p
+            self.inflight_dedup_pages += 1
+            self.prefix_hit_tokens += ps
+            k += 1
+        r.pf_pos = k * ps
+
+    def _schedule_prefill(self) -> None:
+        """Spend up to ``prefill_budget`` prompt tokens on chunk-prefill
+        dispatches this step, highest priority first (admission ``seq``
+        breaks ties), interleaved with — not ahead of — the decode batch.
+        Chunks are whole pages mid-prompt, so the compile-count contract
+        holds (caps are page multiples ≤ ``prefill_chunk``); the budget
+        may overshoot by less than one chunk on the last dispatch because
+        a chunk is indivisible.  A request whose final chunk lands joins
+        the decode batch *this* step: its next-token logits are scattered
+        into the slot-logits matrix before sampling runs."""
+        budget = self.prefill_budget
+        pf = [r for r in self.active_requests if r.prefilling]
+        pf.sort(key=lambda r: (-r.priority, r.seq))
+        for r in pf:
+            while r.prefilling and budget > 0:
+                self._adopt_shared_pages(r)
+                ctx = r.prompt + r.tokens
+                n, cap = self._next_chunk(r.pf_pos, r.pf_end, budget)
+                logits = self._prefill_chunk_step(r.slot, ctx, r.pf_pos,
+                                                  n, cap)
+                r.pf_pos += n
+                budget -= n
+                self._register_full_pages(r)
+                if not r.prefilling:        # prompt fully in cache
+                    self._slot_lens[r.slot] = r.pf_end
+                    self._slot_logits = self._slot_logits.at[r.slot].set(
+                        logits[0, n - 1])
+            if budget <= 0:
+                break
+
+    # ---- serving metrics ----------------------------------------------
+
+    def _stamp_finish(self, r: Request) -> None:
+        """Record a request's completion (normal retire, max_len retire,
+        or capacity truncation) into the latency samples."""
+        r.finish_time = time.perf_counter()
+        r.finish_step = self._step_idx
+        self._n_finished += 1
+        self._n_generated += len(r.tokens)
+        if r.first_token_time is not None and len(r.tokens) > 1:
+            gaps = len(r.tokens) - 1
+            self._tpot_s.append(
+                (r.finish_time - r.first_token_time) / gaps)
+            self._tpot_steps.append(
+                (r.finish_step - r.first_token_step) / gaps)
+
+    def stats(self) -> dict:
+        """Snapshot of the engine-tracked serving metrics.
+
+        ``ttft_*`` (time-to-first-token: submit -> first sampled token)
+        and ``tpot_*`` (time-per-output-token: mean inter-token gap of a
+        finished request with ≥ 2 tokens) each come as a percentile dict
+        ``{n, p50, p99, mean}`` in wall seconds (``_s``) and in engine
+        step counts (``_steps`` — deterministic, so tests and benchmark
+        A/Bs can assert on them).  The remaining fields are the running
+        counters (prefix cache, COW, dedup, preemptions, compiles)."""
+        def pct(samples):
+            if not samples:
+                return {"n": 0, "p50": None, "p99": None, "mean": None}
+            a = np.asarray(samples, np.float64)
+            return {"n": int(a.size),
+                    "p50": float(np.percentile(a, 50)),
+                    "p99": float(np.percentile(a, 99)),
+                    "mean": float(a.mean())}
+        return {
+            "steps": self._step_idx,
+            "finished": self._n_finished,
+            "generated_tokens": self._n_generated,
+            "ttft_s": pct(self._ttft_s),
+            "ttft_steps": pct(self._ttft_steps),
+            "tpot_s": pct(self._tpot_s),
+            "tpot_steps": pct(self._tpot_steps),
+            "preemptions": self.preemptions,
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "inflight_dedup_pages": self.inflight_dedup_pages,
+            "cow_count": self.cow_count,
+            "prefill_compiles": self.prefill_compiles,
+            "decode_compiles": self.decode_compiles,
+        }
+
+    def reset_metrics(self) -> None:
+        """Zero the latency samples, throughput totals, and the step
+        counter.  Compile counters and jit caches are deliberately kept —
+        benchmarks call this between a warm-up wave and a measured wave.
+        Only call while the engine is drained (no queued or active
+        requests): in-flight requests carry stamps relative to the old
+        step counter."""
+        self._step_idx = 0
+        self._ttft_s, self._ttft_steps = [], []
+        self._tpot_s, self._tpot_steps = [], []
+        self._n_finished = 0
+        self._n_generated = 0
+        self.preemptions = 0
 
     def _retire(self, r: Request):
         """Release a request's slot and pages (it keeps its tokens)."""
@@ -1125,22 +1478,31 @@ class ServeEngine:
             self._slot_nodes[r.slot] = None
 
     def step(self) -> list[Request]:
-        """One decode step for every active slot.
+        """One scheduler step: admit, (budgeted) prefill, decode.
 
         Admits queued requests into free slots first (paged engines also
-        require pages for the prompt), samples one token per active
-        request, retires the ones that are now done (their final token
-        never needs to enter the cache), then decodes the rest as a batch
+        require pages for the prompt).  Under budgeted interleaving
+        (``prefill_budget``) newly-admitted prompts then receive up to
+        budget tokens of chunked prefill — a request whose final chunk
+        lands joins the decode batch this same step; one still mid-prompt
+        rides the decode masked at length 0 with its table row remapped
+        to the dump page (its real pages must not take the masked row's
+        dummy write).  Then one token is sampled per decode-phase
+        request, the ones that are now done retire (their final token
+        never needs to enter the cache), the rest decode as a batch
         (idle slots ride along masked at length 0, writing into the
-        reserved dump page) and retires requests that hit max_len.
+        reserved dump page), and requests that hit max_len retire.
         Returns the requests that finished this step — including any that
         were truncated at pool capacity after a preemption.
         """
         self._ensure_slots()
+        self._step_idx += 1
         self._admit()
+        if self._interleaved:
+            self._schedule_prefill()
         finished = self._finished_early
         self._finished_early = []
-        active = self.active_requests
+        active = [r for r in self.active_requests if not r.prefilling]
         if not active:
             return finished
 
@@ -1148,6 +1510,7 @@ class ServeEngine:
         # temperature>0 requests pay for an individual sampling dispatch
         greedy = np.asarray(jnp.argmax(self._slot_logits, axis=-1))
         toks = np.zeros((self.max_batch,), np.int32)
+        now = time.perf_counter()
         for r in active:
             if r.temperature > 0.0:
                 tok, self._key = self._sample(self._slot_logits[r.slot],
@@ -1157,6 +1520,11 @@ class ServeEngine:
                 tok = int(greedy[r.slot])
             r.tokens.append(tok)
             toks[r.slot] = tok
+            if len(r.tokens) == 1:
+                r.first_token_time = now
+                r.first_token_step = self._step_idx
+                self._ttft_s.append(now - r.submit_time)
+                self._ttft_steps.append(self._step_idx - r.submit_step)
 
         # retire requests their last sampled token just completed — before
         # page growth and decode, so a done request can neither be
@@ -1165,6 +1533,7 @@ class ServeEngine:
         still = []
         for r in active:
             if r.done:
+                self._stamp_finish(r)
                 finished.append(r)
                 self._retire(r)
             else:
@@ -1177,7 +1546,7 @@ class ServeEngine:
             # allocate this step's write pages; may preempt (the preempted
             # request keeps its sampled token and re-prefills later)
             self._grow_pages()
-            active = self.active_requests
+            active = [r for r in self.active_requests if not r.prefilling]
             if not active:
                 return finished
 
@@ -1194,8 +1563,13 @@ class ServeEngine:
             # CPU may zero-copy an aligned contiguous numpy buffer (when
             # bucket == max_len this slice is the whole table), which
             # would let the pending gather read the mutated rows
-            tables = jnp.asarray(
-                self._slot_tables[:, :bucket // self.page_size].copy())
+            tables_np = self._slot_tables[:, :bucket // self.page_size].copy()
+            for r in self.active_requests:
+                if r.prefilling:
+                    # masked row, but its dummy write would land in the
+                    # request's real page 0 — send it to the dump page
+                    tables_np[r.slot, :] = self._dump_page
+            tables = jnp.asarray(tables_np)
         step_logits, self._slot_caches = self._run_decode(
             jnp.asarray(toks)[:, None], self._slot_caches,
             jnp.asarray(lens, np.int32), tables, bucket)
@@ -1205,6 +1579,7 @@ class ServeEngine:
 
         for r in active:
             if self._slot_lens[r.slot] + 1 > self.max_len:
+                self._stamp_finish(r)
                 finished.append(r)
                 self._retire(r)
         return finished

@@ -321,3 +321,65 @@ def test_prefix_cache_off_for_unsound_archs():
         engine = ServeEngine(cfg, params, max_batch=1, max_len=64,
                              page_size=16, prefix_cache=True)
         assert engine.paged and not engine.prefix_cache
+
+
+# --------------------------------------------------------------------------
+# satellite: mlen = min(mlen, plen - 1) truncation at page-boundary prompts
+# --------------------------------------------------------------------------
+
+def test_full_match_page_aligned_prompt_cows_shared_final_page(gqa):
+    """plen ≡ 0 (mod page_size) with a *fully* cached prompt: the
+    truncation to plen - 1 re-enters the final shared page mid-page, so
+    the one recomputed token would be written into a page another live
+    request still reads.  COW must make the writer's copy private — the
+    original holder's decode stream is the corruption oracle."""
+    cfg, params = gqa
+    rng = np.random.default_rng(41)
+    prompt = list(map(int, rng.integers(0, cfg.vocab_size, 32)))  # 2 pages
+    engine = _mk(cfg, params)
+    ua = engine.submit(list(prompt), max_new_tokens=12)
+    engine.step()                       # A live, both full pages registered
+    assert engine.cow_count == 0
+    ub = engine.submit(list(prompt), max_new_tokens=12)
+    done = engine.run_until_drained()
+    assert engine.cow_count == 1, (
+        f"the fully-matched shared final page must COW exactly once "
+        f"before B recomputes token 31 into it, saw {engine.cow_count}")
+    assert engine.prefix_hit_tokens == 31   # plen - 1, not plen
+    by_uid = {r.uid: list(r.tokens) for r in done}
+    solo = _solo_tokens_list(cfg, params, prompt, 12)
+    np.testing.assert_array_equal(np.asarray(by_uid[ua]), solo,
+                                  err_msg="holder A was corrupted")
+    np.testing.assert_array_equal(np.asarray(by_uid[ub]), solo,
+                                  err_msg="writer B diverged")
+    assert engine.allocator.free_pages == engine.num_pages - 1
+    engine.allocator.check_invariants()
+
+
+def test_full_match_one_past_boundary_needs_no_cow(gqa):
+    """plen ≡ 1 (mod page_size): truncation to plen - 1 lands exactly on
+    a page boundary, the shared pages are only ever read, and the one
+    recomputed token opens the writer's own fresh page — zero COWs."""
+    cfg, params = gqa
+    rng = np.random.default_rng(42)
+    prompt = list(map(int, rng.integers(0, cfg.vocab_size, 33)))
+    engine = _mk(cfg, params)
+    ua = engine.submit(list(prompt), max_new_tokens=12)
+    engine.step()                       # A live: pages 0,1 registered
+    ub = engine.submit(list(prompt), max_new_tokens=12)
+    done = engine.run_until_drained()
+    assert engine.cow_count == 0, (
+        "a page-aligned truncated match shares read-only pages; "
+        f"saw {engine.cow_count} COWs")
+    assert engine.prefix_hit_tokens == 32   # the two full pages
+    by_uid = {r.uid: list(r.tokens) for r in done}
+    solo = _solo_tokens_list(cfg, params, prompt, 12)
+    np.testing.assert_array_equal(np.asarray(by_uid[ua]), solo)
+    np.testing.assert_array_equal(np.asarray(by_uid[ub]), solo)
+    assert engine.allocator.free_pages == engine.num_pages - 1
+    engine.allocator.check_invariants()
+
+
+def _solo_tokens_list(cfg, params, prompt, n):
+    solo = ServeEngine(cfg, params, max_batch=1, max_len=128, paged=False)
+    return solo.generate([prompt], max_new_tokens=n).tokens[0]

@@ -1,0 +1,281 @@
+"""SLO-aware budgeted chunked-prefill scheduler (``prefill_budget``).
+
+The contract under test: interleaving prompt chunks between decode steps
+is *invisible to tokens* (greedy outputs identical to whole-prompt
+admission, prefix cache on or off), bounded in compiled shapes, honest in
+its metrics, and actually does the SLO thing — a short high-priority
+prompt gets its first token while a long prompt is still mid-prefill,
+priority classes order admission / budget spend / preemption, and
+identical in-flight prompts dedup against the leader's published pages.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.models import registry
+from repro.models import transformer as T
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def gqa():
+    cfg = registry.get_reduced("deepseek-7b")
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _mk(cfg, params, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 128)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("num_pages", 40)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _drain(engine, prompts, n=6, priorities=None, max_steps=400):
+    uids = [engine.submit(list(p), max_new_tokens=n,
+                          priority=0 if priorities is None else priorities[i])
+            for i, p in enumerate(prompts)]
+    done = engine.run_until_drained(max_steps=max_steps)
+    by_uid = {r.uid: list(r.tokens) for r in done}
+    return [by_uid[u] for u in uids], {r.uid: r for r in done}, uids
+
+
+def _prompts(cfg, rng, lens):
+    return [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+            for n in lens]
+
+
+# --------------------------------------------------------------------------
+# parity: budgeted interleaving == whole-prompt admission
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefix_cache", [True, False])
+def test_interleaved_matches_whole_prompt_mixed_lengths(gqa, prefix_cache):
+    """Tentpole invariant: the scheduler moves *when* prompt tokens are
+    computed, never what anything generates.  Mixed lengths spanning
+    several chunk boundaries, stepped manually with the allocator's
+    conservation oracle asserted after every single step."""
+    cfg, params = gqa
+    rng = np.random.default_rng(31)
+    prompts = _prompts(cfg, rng, [50, 13, 29])
+    base, _, _ = _drain(_mk(cfg, params, prefix_cache=prefix_cache),
+                        prompts)
+    engine = _mk(cfg, params, prefix_cache=prefix_cache,
+                 prefill_budget=16)
+    uids = [engine.submit(list(p), max_new_tokens=6) for p in prompts]
+    done = []
+    for _ in range(400):
+        done.extend(engine.step())
+        engine.allocator.check_invariants()
+        if not engine._queue and not engine.active_requests:
+            break
+    by_uid = {r.uid: list(r.tokens) for r in done}
+    got = [by_uid[u] for u in uids]
+    assert got == base, "interleaving changed the tokens"
+
+
+def test_interleaved_matches_whole_prompt_across_budgets(gqa):
+    """Any budget — smaller than a page, page-sized, several pages —
+    produces the same tokens; only the step at which they land moves."""
+    cfg, params = gqa
+    rng = np.random.default_rng(32)
+    prompts = _prompts(cfg, rng, [40, 7, 22])
+    base, _, _ = _drain(_mk(cfg, params), prompts)
+    for budget in (5, 16, 48):
+        got, _, _ = _drain(_mk(cfg, params, prefill_budget=budget),
+                           prompts)
+        assert got == base, f"budget={budget} changed the tokens"
+
+
+@given(
+    lens=st.lists(st.integers(min_value=1, max_value=45), min_size=1,
+                  max_size=3),
+    budget=st.sampled_from([8, 16, 24]),
+    prefix_cache=st.booleans(),
+)
+@settings(max_examples=10, deadline=None)
+def test_interleaved_matches_whole_prompt_property(gqa, lens, budget,
+                                                   prefix_cache):
+    """Property form: any prompt-length mix x budget x cache setting is
+    output-identical to whole-prompt admission, and the page pool is
+    conserved afterwards."""
+    cfg, params = gqa
+    rng = np.random.default_rng(sum(lens) * 31 + budget)
+    prompts = _prompts(cfg, rng, lens)
+    base, _, _ = _drain(_mk(cfg, params, prefix_cache=prefix_cache),
+                        prompts, n=4)
+    engine = _mk(cfg, params, prefix_cache=prefix_cache,
+                 prefill_budget=budget)
+    got, _, _ = _drain(engine, prompts, n=4)
+    assert got == base
+    assert engine.allocator.free_pages == engine.num_pages - 1
+    engine.allocator.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# the SLO part: TTFT of a short prompt behind a long one
+# --------------------------------------------------------------------------
+
+def test_short_high_priority_first_token_lands_mid_long_prefill(gqa):
+    """A 96-token prompt takes ceil(96/16) = 6 budgeted steps to prefill;
+    an 8-token priority-1 prompt submitted alongside must get its first
+    token on step 1 — while the long prompt is still chunking — instead
+    of queueing behind the whole prefill.  Deterministic step-count
+    TTFT, the benchmark asserts the wall-clock version."""
+    cfg, params = gqa
+    rng = np.random.default_rng(33)
+    long_p, short_p = _prompts(cfg, rng, [96, 8])
+    engine = _mk(cfg, params, prefill_budget=16, max_len=256)
+    got, reqs, uids = _drain(engine, [long_p, short_p], n=4,
+                             priorities=[0, 1])
+    r_long, r_short = reqs[uids[0]], reqs[uids[1]]
+    assert r_short.first_token_step == 1, (
+        f"short prompt's first token must land on step 1, "
+        f"got {r_short.first_token_step}")
+    assert r_long.first_token_step == 6, (
+        f"96 tokens / budget 16 = 6 chunked steps, "
+        f"got {r_long.first_token_step}")
+    # parity: neither request's tokens moved
+    base, _, _ = _drain(_mk(cfg, params, max_len=256),
+                        [long_p, short_p], n=4)
+    assert got == base
+    # a finished-prefill request decodes every step: perfect step TPOT
+    s = engine.stats()
+    assert s["tpot_steps"]["p50"] == 1.0
+    assert s["ttft_steps"]["n"] == 2
+
+
+def test_equal_priority_budget_is_fifo(gqa):
+    """Within a priority class the budget is spent FIFO by admission:
+    the earlier long prompt finishes prefill strictly before the later
+    one gets any budget (no starvation *across* steps, strict order
+    within one)."""
+    cfg, params = gqa
+    rng = np.random.default_rng(34)
+    pa, pb = _prompts(cfg, rng, [48, 48])
+    engine = _mk(cfg, params, prefill_budget=16, max_len=256)
+    _, reqs, uids = _drain(engine, [pa, pb], n=2)
+    ra, rb = reqs[uids[0]], reqs[uids[1]]
+    assert ra.first_token_step == 3          # 48/16 chunks
+    assert rb.first_token_step == 6          # budget freed only after A
+
+
+# --------------------------------------------------------------------------
+# priority classes: queue order and preemption victims
+# --------------------------------------------------------------------------
+
+def test_priority_orders_admission_queue(gqa):
+    """A later-submitted priority-1 request is admitted before queued
+    priority-0 requests (FIFO within a class)."""
+    cfg, params = gqa
+    rng = np.random.default_rng(35)
+    busy, c0, c1, hi = _prompts(cfg, rng, [16, 16, 16, 16])
+    engine = _mk(cfg, params, max_batch=1, max_len=64)
+    engine.submit(busy, max_new_tokens=12)
+    engine.step()                            # busy occupies the only slot
+    u0 = engine.submit(c0, max_new_tokens=2)
+    u1 = engine.submit(c1, max_new_tokens=2)
+    uh = engine.submit(hi, max_new_tokens=2, priority=1)
+    assert [r.uid for r in engine._queue] == [uh, u0, u1]
+    done = engine.run_until_drained(max_steps=200)
+    order = [r.uid for r in done]
+    assert order.index(uh) < order.index(u0) < order.index(u1)
+
+
+def test_preemption_picks_lowest_priority_not_youngest(gqa):
+    """Under pool pressure the victim is the lowest priority class, even
+    when a lower-seq (older) request — the old youngest-first rule would
+    have evicted the young high-priority request instead."""
+    cfg, params = gqa
+    rng = np.random.default_rng(36)
+    p_low, p_hi = _prompts(cfg, rng, [16, 16])
+    engine = _mk(cfg, params, max_batch=2, max_len=64, num_pages=4)
+    ul = engine.submit(p_low, max_new_tokens=12, priority=0)
+    uh = engine.submit(p_hi, max_new_tokens=12, priority=1)
+    engine.step()   # both admitted (1 page each), 1 free page; both grow:
+    # low (older, processed first) takes the free page, high's growth
+    # must evict *low* — the lowest class — despite low's older seq
+    assert engine.preemptions >= 1
+    assert [r.uid for r in engine._queue] == [ul]
+    assert [r.uid for r in engine.active_requests] == [uh]
+    done = engine.run_until_drained(max_steps=200)
+    assert {r.uid for r in done} == {ul, uh}
+    engine.allocator.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# in-flight radix dedup
+# --------------------------------------------------------------------------
+
+def test_inflight_identical_prompts_dedup_published_pages(gqa):
+    """Two identical 64-token prompts under a small budget: the leader
+    publishes full pages as chunks land, the follower adopts them and
+    recomputes only the final partial-progress page — saving whole-page
+    prefill compute without changing a token."""
+    cfg, params = gqa
+    rng = np.random.default_rng(37)
+    prompt = _prompts(cfg, rng, [64])[0]
+    engine = _mk(cfg, params, max_batch=2, max_len=256,
+                 prefill_budget=16)
+    got, _, _ = _drain(engine, [prompt, prompt], n=4)
+    assert got[0] == got[1]
+    # the follower adopted the leader's first 3 pages (the 4th holds the
+    # truncated last token and is never adoptable)
+    assert engine.inflight_dedup_pages == 3
+    assert engine.prefill_tokens == 64 + 16, (
+        f"follower should recompute only its last page, prefilled "
+        f"{engine.prefill_tokens} tokens total")
+    # parity against a dedup-free engine
+    base, _, _ = _drain(_mk(cfg, params, max_batch=2, max_len=256,
+                            prefix_cache=False), [prompt, prompt], n=4)
+    assert got == base
+    engine.allocator.check_invariants()
+
+
+# --------------------------------------------------------------------------
+# metrics and compile accounting
+# --------------------------------------------------------------------------
+
+def test_stats_fields_and_reset(gqa):
+    cfg, params = gqa
+    rng = np.random.default_rng(38)
+    engine = _mk(cfg, params, prefill_budget=16)
+    _drain(engine, _prompts(cfg, rng, [20, 9]), n=5)
+    s = engine.stats()
+    assert s["finished"] == 2
+    assert s["generated_tokens"] == 10
+    for k in ("ttft_s", "ttft_steps", "tpot_s", "tpot_steps"):
+        assert s[k]["n"] == 2
+        assert s[k]["p50"] is not None and s[k]["p99"] >= s[k]["p50"] >= 0
+    assert s["steps"] > 0
+    assert s["decode_compiles"] >= 1 and s["prefill_compiles"] >= 1
+    engine.reset_metrics()
+    s2 = engine.stats()
+    assert s2["finished"] == 0 and s2["ttft_s"]["n"] == 0
+    assert s2["steps"] == 0 and s2["preemptions"] == 0
+    # compile counters survive the reset — they key the jit caches
+    assert s2["decode_compiles"] == s["decode_compiles"]
+    # and the engine still serves after a reset
+    got, _, _ = _drain(engine, _prompts(cfg, rng, [11]), n=3)
+    assert len(got[0]) == 3
+    assert engine.stats()["finished"] == 1
+
+
+def test_interleaved_compiles_bounded_by_shapes(gqa):
+    """Chunked interleaving must not leak per-position traces: chunk caps
+    are page multiples ≤ prefill_chunk and decode keys on (batch, bucket,
+    splits, paged) — N mixed-length prompts stay within the same shape
+    budget as whole-prompt admission (the engine's internal
+    decode_compiles == len(keys) assertion runs on every step)."""
+    cfg, params = gqa
+    rng = np.random.default_rng(39)
+    engine = _mk(cfg, params, prefill_budget=16)
+    lens = [3, 17, 31, 18, 45, 9, 33, 27]
+    for p in _prompts(cfg, rng, lens):
+        engine.submit(p, max_new_tokens=3)
+    engine.run_until_drained(max_steps=400)
+    # caps: 16/32/48-token chunks x one kv bucket reachable at 128 max_len
+    assert engine.prefill_compiles <= 8
+    assert engine.decode_compiles <= 2

@@ -412,3 +412,71 @@ def test_run_until_drained_raises_on_max_steps():
     assert len(engine.active_requests) == 1
     done = engine.run_until_drained()
     assert len(done) == 1 and len(done[0].tokens) == 40
+
+
+def test_multi_preemption_single_pass_preserves_admission_order():
+    """Satellite regression: two preemptions inside one _grow_pages pass
+    must requeue the victims in admission (seq) order — the old
+    insert-at-front requeue depended on victim-selection order for this,
+    and reversed it whenever an earlier victim was still queued.  Three
+    one-page prompts on a 3-page pool all hit a page boundary on the
+    same step: the oldest grows into the only reclaimable page, the
+    middle one preempts the youngest and then itself — and the queue
+    must read [middle, youngest], never [youngest, middle]."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(13)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, 16)))
+               for _ in range(3)]
+    engine = ServeEngine(cfg, params, max_batch=3, max_len=64,
+                         page_size=16, num_pages=4)
+    uids = [engine.submit(p, max_new_tokens=8) for p in prompts]
+    engine.step()
+    assert engine.preemptions == 2, (
+        "geometry drift: this test needs both victims evicted in the "
+        f"same _grow_pages pass, saw {engine.preemptions} preemptions")
+    queued = [r.uid for r in engine._queue]
+    assert queued == [uids[1], uids[2]], (
+        f"victims must requeue in admission order, got uids {queued}")
+    assert [r.seq for r in engine._queue] == sorted(
+        r.seq for r in engine._queue)
+    done = engine.run_until_drained(max_steps=200)
+    by_uid = {r.uid: r.tokens for r in done}
+    for uid, prompt in zip(uids, prompts):
+        np.testing.assert_array_equal(
+            np.asarray(by_uid[uid]),
+            _solo_tokens(cfg, params, prompt, 8, max_len=64),
+            err_msg=f"request {uid}")
+    assert engine.allocator.free_pages == engine.num_pages - 1
+
+
+def test_sole_request_all_pages_shared_self_preempts_cleanly():
+    """Satellite regression: a sole active request whose pages are all
+    prefix-cache hits frees no allocatable page by preempting others —
+    it preempts *itself*, and victim selection on the now-empty active
+    set must return None instead of raising (max() on an empty
+    sequence).  The request then retires truncated at pool capacity on
+    re-admission, exactly like the non-shared overflow path."""
+    cfg = registry.get_reduced("deepseek-7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(14)
+    prompt = list(map(int, rng.integers(0, cfg.vocab_size, 32)))
+    # 2 allocatable pages of 16: the 32-token prompt fills the pool
+    engine = ServeEngine(cfg, params, max_batch=1, max_len=64,
+                         page_size=16, num_pages=3)
+    engine.submit(list(prompt), max_new_tokens=1)
+    first = engine.run_until_drained()
+    assert len(first) == 1 and len(first[0].tokens) == 1
+    # identical prompt: both pages come back as shared prefix hits, the
+    # one recomputed token COWs / rides the partial page, and the first
+    # decode write needs a third page that can never exist
+    engine.submit(list(prompt), max_new_tokens=8)
+    done = engine.run_until_drained(max_steps=50)   # must not ValueError
+    assert len(done) == 1
+    assert engine.preemptions >= 1, "the sole request must self-preempt"
+    np.testing.assert_array_equal(
+        np.asarray(done[0].tokens),
+        _solo_tokens(cfg, params, prompt, len(done[0].tokens), max_len=64))
+    assert len(done[0].tokens) >= 1
+    assert engine.allocator.free_pages == engine.num_pages - 1
+    engine.allocator.check_invariants()
