@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 
-from .reason import BlockConfig, _vmem_bytes
+from .reason import LANE, MAX_KV_SPLITS, BlockConfig, _vmem_bytes
 from .spec import AttnSpec
 from .target import TPUTarget, dtype_bytes, get_target
 
@@ -28,6 +28,15 @@ from .target import TPUTarget, dtype_bytes, get_target
 # Calibrated so that 128x128 tiles on v5e land near published flash kernels'
 # sweet spot; only relative ordering matters for the search.
 _STEP_OVERHEAD_S = 2.0e-6
+
+# Split-KV scoring constants, in KV-token equivalents (only relative
+# ordering matters).  Merging one extra partial (acc, m, l) tile in the
+# LSE-combine stage costs about this much KV traffic:
+_SPLIT_COMBINE_TOKENS = 8.0
+# and each extra *wave* (when rows*splits overflows the target's parallel
+# program slots, the scheduler serialises a second round of programs) pays
+# a dispatch cost on top of its KV read:
+_WAVE_OVERHEAD_TOKENS = 16.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,3 +124,73 @@ def tune(spec: AttnSpec, q_len: int, kv_len: int,
          target: TPUTarget | str = "v5e") -> TuneResult:
     name = target if isinstance(target, str) else target.name
     return _tune_cached(spec, q_len, kv_len, name)
+
+
+# ---------------------------------------------------------------------------
+# split-KV work-partitioning search (Flash-Decoding / FA-2's parallelism axis)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitTune:
+    """Scored split-KV decision for one decode/verify dispatch."""
+
+    num_splits: int
+    est_cost: float            # critical-path cost in KV-token equivalents
+    candidates_tried: int
+    table: tuple = ()          # (splits, waves, cost) rows for reports
+
+
+@functools.lru_cache(maxsize=2048)
+def _tune_splits_cached(rows: int, kv_len: int, unit: int,
+                        target_name: str) -> SplitTune:
+    """Score every legal split count and keep the cheapest critical path.
+
+    The same napkin reasoning as the block search, one level up: a decode
+    (or speculative-verify) grid exposes ``rows = bsz * heads`` parallel
+    programs; splitting the KV axis ``s`` ways multiplies the program count
+    by ``s`` but divides each program's sequential KV read by ``s``.  The
+    critical path is then
+
+      waves(s)   = ceil(rows * s / decode_parallelism)   (program rounds)
+      cost(s)    = waves * (ceil(units/s) * unit + wave overhead)
+                   + (s - 1) * combine cost              (extra LSE merges)
+
+    measured in KV-token equivalents — only the ordering matters.  ``unit``
+    is the indivisible split quantum (one page when paged, one lane tile
+    dense), so candidates are clamped to whole units and to
+    :data:`~repro.core.reason.MAX_KV_SPLITS`.  Ties break toward fewer
+    splits (less partial-tile HBM).
+    """
+    target = get_target(target_name)
+    par = max(1, int(target.decode_parallelism))
+    units = max(1, _ceil_div(max(1, int(kv_len)), max(1, int(unit))))
+    rows = max(1, int(rows))
+
+    best: tuple[float, int] | None = None
+    table = []
+    for s in range(1, min(units, MAX_KV_SPLITS) + 1):
+        waves = _ceil_div(rows * s, par)
+        per_split = _ceil_div(units, s) * unit
+        cost = waves * (per_split + _WAVE_OVERHEAD_TOKENS) \
+            + (s - 1) * _SPLIT_COMBINE_TOKENS
+        table.append((s, waves, cost))
+        if best is None or cost < best[0]:
+            best = (cost, s)
+    cost, s = best
+    return SplitTune(num_splits=s, est_cost=cost,
+                     candidates_tried=len(table), table=tuple(table))
+
+
+def tune_splits(*, rows: int, kv_len: int, page_size=None,
+                target: TPUTarget | str = "v5e") -> SplitTune:
+    """Split-KV partition search for a decode/verify dispatch.
+
+    ``reason.choose_num_splits`` delegates here — the split decision lives
+    in the same scored-search framework as the (BM, BN) decision, keyed by
+    the same :class:`~repro.core.target.TPUTarget` calibration
+    (``decode_parallelism``).
+    """
+    name = target if isinstance(target, str) else target.name
+    unit = int(page_size) if page_size else LANE
+    return _tune_splits_cached(int(rows), int(kv_len), unit, name)

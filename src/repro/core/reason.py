@@ -117,21 +117,30 @@ def choose_num_splits(*, rows: int, kv_len: int, mode: str = "decode",
 
     Decode grids expose only ``rows = bsz * heads`` parallel programs while
     the KV axis rides the sequential grid dimension — a small continuous-
-    batching batch over a long context leaves the device idle.  Split the
-    KV axis until ``rows * splits`` reaches the target's
-    ``decode_parallelism``, but never below one page (paged) / one lane
-    tile (dense) per split and never past :data:`MAX_KV_SPLITS` (the
-    combine stage's overhead bound).  Deterministic: a pure function of
-    (mode, rows, bucketed KV length, page geometry, target).
+    batching batch over a long context leaves the device idle.  The
+    decision is the autotuner's scored search
+    (:func:`repro.core.autotune.tune_splits`): every legal split count —
+    whole pages (paged) / lane tiles (dense), at most
+    :data:`MAX_KV_SPLITS` — is costed as waves of ``rows * splits``
+    programs against the target's calibrated ``decode_parallelism`` plus
+    per-split LSE-combine overhead, and the cheapest critical path wins.
+    Deterministic: a pure function of (mode, rows, bucketed KV length,
+    page geometry, target).
+
+    ``verify`` mode (speculative-decode verification) consults the same
+    scoring — a K-token verify program has decode's shape problem (few
+    rows, long cache); prefill modes never split (they already parallelise
+    over q tiles).
     """
-    if mode != "decode":
+    if mode not in ("decode", "verify"):
         return 1
     if isinstance(target, str):
         target = get_target(target)
-    want = -(-int(target.decode_parallelism) // max(1, int(rows)))
-    unit = int(page_size) if page_size else LANE
-    cap = max(1, int(kv_len) // max(1, unit))
-    return int(max(1, min(want, cap, MAX_KV_SPLITS)))
+    from . import autotune  # lazy: autotune imports reason's block machinery
+
+    return int(autotune.tune_splits(rows=rows, kv_len=kv_len,
+                                    page_size=page_size,
+                                    target=target).num_splits)
 
 
 def resolve_num_splits(num_splits: Optional[int], *, rows: int, kv_len: int,
@@ -205,7 +214,11 @@ def reason_parameters(
     # the *history length*: M chunk tokens sit at runtime positions
     # hist..hist+M-1, so the causal diagonal is shifted by the scalar and
     # one compiled kernel serves every chunk position within the bucket.
-    chunked = spec.mode == "chunk_prefill"
+    # Verify programs (speculative decode) are chunked-prefill geometry —
+    # K+1 candidate tokens at runtime positions hist..hist+K — with decode's
+    # work-partitioning problem (few rows, long cache), so they may carry a
+    # split-KV layout on top of the chunk tiling.
+    chunked = spec.mode in ("chunk_prefill", "verify")
     runtime_kv = spec.mode == "decode" or chunked
 
     # Paged decode layout: the KV cache is a pool of PAGE_SIZE-token pages
@@ -235,7 +248,7 @@ def reason_parameters(
     # the translated gather/mask machinery is untouched inside a split.
     splits = 1
     if num_splits is not None and int(num_splits) != 1:
-        if spec.mode != "decode":
+        if spec.mode not in ("decode", "verify"):
             raise ReasonError(
                 f"KV split is a decode work-partitioning decision; mode "
                 f"{spec.mode!r} parallelises over q tiles instead")

@@ -15,7 +15,7 @@ import math
 from typing import Optional
 
 VARIANTS = ("mha", "gqa", "mqa", "mla")
-MODES = ("full", "decode", "chunk_prefill")
+MODES = ("full", "decode", "chunk_prefill", "verify")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,7 +26,7 @@ class AttnSpec:
     head_dim: int = 128
     causal: bool = True
     window: Optional[int] = None       # sliding-window size (None = global)
-    mode: str = "full"     # "full" (train/prefill) | "decode" | "chunk_prefill"
+    mode: str = "full"  # "full" | "decode" | "chunk_prefill" | "verify"
     # MLA-only geometry (DeepSeek-V2/V3): latent KV rank + decoupled RoPE dim
     kv_lora_rank: int = 512
     rope_head_dim: int = 64
@@ -43,6 +43,13 @@ class AttnSpec:
     # prefix history) plus the chunk itself.  The history length is a
     # *runtime* per-row scalar — it shifts the causal diagonal — so one
     # compiled kernel serves every chunk position within a bucket.
+    #
+    # ``verify`` is the speculative-decode verification mode: K+1 candidate
+    # tokens (the committed token plus K drafts) attend causally to the
+    # paged history, exactly the chunk_prefill geometry but with decode-like
+    # M (a handful of rows) — so reason may additionally partition the KV
+    # axis split-KV style (``num_splits``) when the cache is long, which
+    # chunk_prefill never does.
     page_size: Optional[int] = None
 
     def __post_init__(self):
@@ -50,23 +57,23 @@ class AttnSpec:
             raise ValueError(f"variant {self.variant!r} not in {VARIANTS}")
         if self.mode not in MODES:
             raise ValueError(f"mode {self.mode!r} not in {MODES}")
-        if self.mode == "chunk_prefill":
+        if self.mode in ("chunk_prefill", "verify"):
             if self.page_size is None:
-                raise ValueError("chunk_prefill is the paged prefill mode "
-                                 "— it needs page_size (dense prefill uses "
+                raise ValueError(f"{self.mode} is a paged mode — it needs "
+                                 "page_size (dense prefill uses "
                                  "mode='full')")
             if not self.causal:
-                raise ValueError("chunk_prefill is causal by construction "
+                raise ValueError(f"{self.mode} is causal by construction "
                                  "(the chunk extends the sequence)")
             if self.window is not None:
-                raise ValueError("chunk_prefill does not support sliding "
+                raise ValueError(f"{self.mode} does not support sliding "
                                  "windows (the runtime history offset and "
                                  "the static window mask would conflict)")
         if self.page_size is not None:
-            if self.mode not in ("decode", "chunk_prefill"):
+            if self.mode not in ("decode", "chunk_prefill", "verify"):
                 raise ValueError("paged KV layout (page_size) is a decode/"
-                                 "chunk-prefill cache contract; train "
-                                 "specs are dense")
+                                 "chunk-prefill/verify cache contract; "
+                                 "train specs are dense")
             if self.page_size <= 0 or self.page_size % 8:
                 raise ValueError(f"page_size {self.page_size} must be a "
                                  "positive multiple of the f32 sublane (8)")

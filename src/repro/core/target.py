@@ -48,9 +48,13 @@ class TPUTarget:
     supported_dtypes: tuple[str, ...] = ("f32", "bf16", "int8")
     # How many *parallel* grid programs the scheduler wants in flight to
     # fill the core (megacore halves + enough live DMA streams to hide
-    # HBM latency).  The reasoning stage splits a decode kernel's KV axis
-    # (Flash-Decoding) until `bsz * heads * splits` reaches this — the
-    # TPU analogue of GPU FlashDecoding sizing splits to the SM count.
+    # HBM latency).  The autotuner's split search (autotune.tune_splits,
+    # consulted by reason.choose_num_splits) costs decode/verify waves of
+    # `bsz * heads * splits` programs against this — the TPU analogue of
+    # GPU FlashDecoding sizing splits to the SM count.  Calibration: the
+    # latency-hiding stream count scales with HBM bandwidth per core
+    # (~16 per 800 GB/s core at v5e's latency), doubled again by a
+    # megacore's second TensorCore (v5p).
     decode_parallelism: int = 16
     # fraction of VMEM the autotuner may plan into (leave room for Mosaic's
     # own double-buffering of pipelined operands)
@@ -95,6 +99,7 @@ TARGETS: dict[str, TPUTarget] = {
         peak_bf16_tflops=918.0,
         hbm_gbps=1640.0,
         supported_dtypes=("f32", "bf16", "int8", "fp8"),
+        decode_parallelism=32,            # 2x v5e HBM bandwidth per core
     ),
     "cpu-interp": TPUTarget(name="cpu-interp"),
 }

@@ -270,6 +270,88 @@ def paged_mla_prefill(
     return out[:, :, :c, :]
 
 
+def paged_flash_verify(
+    q, k_pool, v_pool, block_tables, *,
+    hist_len,
+    chunk_cap: Optional[int] = None,
+    num_splits: Optional[int] = None,
+    interpret: bool = True,
+    target: str = "v5e",
+):
+    """Speculative-decode verification: K+1 candidate tokens of causal
+    attention against a paged KV cache, returning per-position outputs.
+
+    q: (B, Hq, C, D) — the committed token plus the drafts, sitting at
+    runtime cache positions ``hist_len .. hist_len + C - 1`` with their K/V
+    already scattered into the pages (like :func:`paged_flash_prefill`, and
+    the caller rolls those pages back past the accepted length).  Row i's
+    output is the attention for position ``hist_len + i``, so the caller's
+    logits at row i decide draft i+1 — one dispatch verifies the whole
+    draft window.
+
+    The TL mode is ``verify``: chunk_prefill's runtime history-offset
+    tiling *plus* decode's split-KV partitioning — ``num_splits`` follows
+    :func:`paged_flash_decode` (``None`` lets the reasoning stage consult
+    the autotuner's scored split search for this grid; verify grids expose
+    ``B * Hq`` programs).  Compiled once per (chunk capacity, bucket
+    capacity, page size, splits).
+    """
+    b, hq, c, d = q.shape
+    hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    if chunk_cap is not None:
+        if chunk_cap < c:
+            raise ValueError(f"chunk_cap {chunk_cap} < draft window {c}")
+        q = _pad_rows(q, 2, chunk_cap)
+    cap = q.shape[2]
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    bucket = tbl.shape[-1] * ps
+    spec = AttnSpec(variant=_variant(hq, hkv), num_q_heads=hq,
+                    num_kv_heads=hkv, head_dim=d, causal=True,
+                    mode="verify", dtype=_DT[q.dtype], page_size=ps)
+    splits = resolve_num_splits(num_splits, rows=b * hq, kv_len=bucket,
+                                mode="verify", page_size=ps, target=target)
+    kern = cached_kernel(spec, cap, bucket, target, interpret, True, splits)
+    qp = _pad_rows(q, 2, kern.blocks.bm)
+    lens = _norm_cache_len(hist_len, b, 0)
+    out = kern.pallas_fn(lens, tbl, qp, k_pool, v_pool)
+    return out[:, :, :c, :]
+
+
+def paged_mla_verify(
+    q_latent, c_pool, block_tables, *,
+    hist_len,
+    chunk_cap: Optional[int] = None,
+    num_splits: Optional[int] = None,
+    interpret: bool = True,
+    target: str = "v5e",
+    kv_lora_rank: int = 512,
+    rope_head_dim: int = 64,
+):
+    """Speculative-decode verification against a paged latent cache.
+    q_latent: (B, H, C, R+Rr); everything else follows
+    :func:`paged_flash_verify` (MLA verify grids expose ``B * H``
+    programs)."""
+    b, h, c, dq = q_latent.shape
+    ps = c_pool.shape[1]
+    if chunk_cap is not None:
+        if chunk_cap < c:
+            raise ValueError(f"chunk_cap {chunk_cap} < draft window {c}")
+        q_latent = _pad_rows(q_latent, 2, chunk_cap)
+    cap = q_latent.shape[2]
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    bucket = tbl.shape[-1] * ps
+    spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=True,
+                        mode="verify", dtype=_DT[q_latent.dtype],
+                        page_size=ps)
+    splits = resolve_num_splits(num_splits, rows=b * h, kv_len=bucket,
+                                mode="verify", page_size=ps, target=target)
+    kern = cached_kernel(spec, cap, bucket, target, interpret, True, splits)
+    qp = _pad_rows(q_latent, 2, kern.blocks.bm)
+    lens = _norm_cache_len(hist_len, b, 0)
+    out = kern.pallas_fn(lens, tbl, qp, c_pool)
+    return out[:, :, :c, :]
+
+
 def paged_mla_decode(
     q_latent, c_pool, block_tables, *,
     cache_len=None,

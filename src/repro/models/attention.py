@@ -158,12 +158,13 @@ def naive_attention(q, k, v, *, causal, scale, window=None, kv_valid=None):
 
 
 def _resolve_splits(num_splits, *, rows: int, kv_len: int,
-                    page_size=None, target: str = "v5e") -> int:
-    """Decode split-KV count for the XLA scan backend — the same
+                    page_size=None, mode: str = "decode",
+                    target: str = "v5e") -> int:
+    """Decode/verify split-KV count for the XLA scan backend — the same
     resolution point as the TL pipeline (one decision, two lowerings)."""
     from ..core.reason import resolve_num_splits
     return resolve_num_splits(num_splits, rows=rows, kv_len=kv_len,
-                              page_size=page_size, target=target)
+                              mode=mode, page_size=page_size, target=target)
 
 
 # --------------------------------------------------------------------------
@@ -269,6 +270,37 @@ def run_paged_prefill(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
     vc = jnp.moveaxis(v_pool[tables], 1, 0)
     return xla_flash(q, kc, vc, causal=True, scale=scale, kv_valid=kv_valid,
                      prechunked=True)
+
+
+def run_paged_verify(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
+                     hist_len, scale: float, num_splits=None):
+    """Speculative-decode verification through a block table: the K+1
+    candidate rows (committed token + drafts, K/V already scattered)
+    attend causally to history + themselves, like
+    :func:`run_paged_prefill`, but the TL mode is ``verify`` — decode's
+    split-KV partitioning rides on top of the chunk tiling for long
+    caches.  ``num_splits`` follows :func:`run_paged_decode` (None =
+    reasoned per backend via the autotuner's split scoring)."""
+    c = q.shape[2]
+    if cfg.attn_impl == "tl_pallas":
+        from ..kernels import ops
+        return ops.paged_flash_verify(
+            q, k_pool, v_pool, tables, hist_len=hist_len,
+            num_splits=num_splits).astype(q.dtype)
+    kv_valid = jnp.asarray(hist_len).reshape(-1) + c
+    if cfg.attn_impl == "naive":
+        return naive_attention(q, gather_pages(k_pool, tables),
+                               gather_pages(v_pool, tables),
+                               causal=True, scale=scale, kv_valid=kv_valid)
+    kc = jnp.moveaxis(k_pool[tables], 1, 0)     # (tp, B, Hkv, ps, D)
+    vc = jnp.moveaxis(v_pool[tables], 1, 0)
+    ps = k_pool.shape[-2]
+    return xla_flash(q, kc, vc, causal=True, scale=scale, kv_valid=kv_valid,
+                     prechunked=True,
+                     num_splits=_resolve_splits(
+                         num_splits, rows=q.shape[0] * q.shape[1],
+                         kv_len=tables.shape[-1] * ps, page_size=ps,
+                         mode="verify"))
 
 
 def run_paged_decode(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
@@ -382,7 +414,7 @@ def _cache_append(buf, new, start, axis: int):
 def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                cross_kv=None, causal=True, head_sharding=None,
                kv_bucket=None, block_tables=None, page_size=None,
-               num_splits=None, chunk_valid=None):
+               num_splits=None, chunk_valid=None, verify=False):
     """x: (B, T, d).  ``cache``: optional dict(k, v, len) for decode;
     ``cache['len']`` may be a scalar or a per-request (B,) vector.
     ``kv_bucket``: static length bucket — attention reads only the first
@@ -402,6 +434,10 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
     of real tokens in a padded prefill chunk — the scatter masks the pad
     tail so it never lands in the pages (causality already keeps real
     rows from attending to those positions).
+    ``verify``: the T > 1 paged chunk is a speculative-decode draft window
+    — same scatter + causal-against-history semantics, but attention runs
+    the ``verify`` TL mode, which may split the KV axis (``num_splits``
+    applies) for long caches.
     ``cross_kv``: (B, P, vision_d) patch embeddings for cross-attention.
     ``head_sharding``: PartitionSpec for (B, H, T, D) tensors — pins the
     q/o head dim to the 'model' axis so GSPMD never resolves the attention
@@ -448,8 +484,15 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             vp = paged_scatter_chunk(cache["v"], block_tables, hist, v,
                                      valid=chunk_valid)
             cache = {"k": kp, "v": vp, "len": hist + t}
-            o = run_paged_prefill(q, kp, vp, block_tables[:, :tp], cfg=cfg,
-                                  hist_len=hist, scale=hd ** -0.5)
+            if verify:
+                o = run_paged_verify(q, kp, vp, block_tables[:, :tp],
+                                     cfg=cfg, hist_len=hist,
+                                     scale=hd ** -0.5,
+                                     num_splits=num_splits)
+            else:
+                o = run_paged_prefill(q, kp, vp, block_tables[:, :tp],
+                                      cfg=cfg, hist_len=hist,
+                                      scale=hd ** -0.5)
     elif cache is not None:
         # decode: append new kv at cache['len'] (per-request positions for
         # heterogeneous batches), attend to the prefix
@@ -537,13 +580,14 @@ def mla_init(key, cfg: ModelConfig):
 def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
               causal=True, head_sharding=None, latent_sharding=None,
               kv_bucket=None, block_tables=None, page_size=None,
-              num_splits=None, chunk_valid=None):
+              num_splits=None, chunk_valid=None, verify=False):
     """Absorbed MLA.  The latent cache (R + Rr per token, head-independent)
     is both K and V — read once for both GEMMs (paper Table 2 workload).
     ``cache['len']``/``kv_bucket``/``block_tables``/``page_size``/
-    ``num_splits``/``chunk_valid`` follow :func:`attn_apply`; the paged
-    pool is (P, page_size, R+Rr).  MLA decode launches only B programs
-    (one latent KV head), so the split heuristic engages earliest here."""
+    ``num_splits``/``chunk_valid``/``verify`` follow :func:`attn_apply`;
+    the paged pool is (P, page_size, R+Rr).  MLA decode launches only B
+    programs (one latent KV head), so the split heuristic engages earliest
+    here."""
     b, t, d = x.shape
     h, r, rr = cfg.num_q_heads, cfg.kv_lora_rank, cfg.rope_head_dim
     nope = cfg.nope_head_dim
@@ -610,6 +654,12 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                                              num_splits=num_splits,
                                              kv_lora_rank=r,
                                              rope_head_dim=rr)
+            elif verify:
+                o_lat = ops.paged_mla_verify(q_full, pool, tbl,
+                                             hist_len=hist,
+                                             num_splits=num_splits,
+                                             kv_lora_rank=r,
+                                             rope_head_dim=rr)
             else:
                 o_lat = ops.paged_mla_prefill(q_full, pool, tbl,
                                               hist_len=hist,
@@ -624,6 +674,10 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                 splits = _resolve_splits(num_splits, rows=b,
                                          kv_len=tbl.shape[-1] * ps,
                                          page_size=ps)
+            elif verify:
+                splits = _resolve_splits(num_splits, rows=b * h,
+                                         kv_len=tbl.shape[-1] * ps,
+                                         page_size=ps, mode="verify")
             o_lat = xla_flash(q_full, lat, lat[..., :r], causal=t > 1,
                               scale=scale, kv_valid=kv_valid,
                               prechunked=True, num_splits=splits)

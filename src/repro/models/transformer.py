@@ -108,7 +108,8 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                 block_tables=ctx.get("block_tables"),
                 page_size=ctx.get("page_size"),
                 num_splits=ctx.get("num_splits"),
-                chunk_valid=ctx.get("chunk_valid"))
+                chunk_valid=ctx.get("chunk_valid"),
+                verify=bool(ctx.get("verify")))
         else:
             o, new_cache = attention.attn_apply(
                 p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
@@ -117,7 +118,8 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                 block_tables=ctx.get("block_tables"),
                 page_size=ctx.get("page_size"),
                 num_splits=ctx.get("num_splits"),
-                chunk_valid=ctx.get("chunk_valid"))
+                chunk_valid=ctx.get("chunk_valid"),
+                verify=bool(ctx.get("verify")))
         if new_cache is not None:
             new_cache.pop("len", None)  # length tracked by the caller
     elif kind == "cross":
@@ -198,8 +200,9 @@ def abstract_params(cfg: ModelConfig):
 def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
           caches=None, cache_len=None, positions=None, kv_bucket=None,
           block_tables=None, page_size=None, num_splits=None,
-          chunk_valid=None, act_sharding=None, ep_sharding=None,
-          head_sharding=None, latent_sharding=None, moe_mesh=None):
+          chunk_valid=None, verify=False, act_sharding=None,
+          ep_sharding=None, head_sharding=None, latent_sharding=None,
+          moe_mesh=None):
     """tokens: (B, T) int32 -> logits (B, T, V) f32.
 
     ``caches``: pytree from :func:`init_caches` for decode; ``cache_len``
@@ -225,6 +228,13 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     geometry, 1 forces the sequential KV pass, >1 forces that many
     (clamped) splits.  Shape-relevant: callers jitting ``apply`` must key
     their cache on it alongside ``kv_bucket``.
+
+    ``verify`` (static bool): the T > 1 paged chunk is a speculative-
+    decode draft window — attention runs the ``verify`` TL mode (chunk
+    tiling + optional split-KV; ``num_splits`` applies) and the returned
+    per-position logits are the draft-acceptance oracle.  Semantically
+    identical to chunked prefill of the same tokens; only the
+    work-partitioning differs.
 
     ``act_sharding``: optional PartitionSpec for the (B, T, d) residual
     stream.  Constraining it *inside* the period scan is what shards the
@@ -270,7 +280,7 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
                 "cache": cache, "cache_len": clen,
                 "kv_bucket": kv_bucket, "num_splits": num_splits,
                 "block_tables": block_tables, "page_size": page_size,
-                "chunk_valid": chunk_valid,
+                "chunk_valid": chunk_valid, "verify": verify,
                 "ep_sharding": ep_sharding,
                 "head_sharding": head_sharding,
                 "latent_sharding": latent_sharding,

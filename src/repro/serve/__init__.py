@@ -1,1 +1,2 @@
+from .draft import DraftProposer, NgramProposer, make_proposer  # noqa: F401
 from .engine import PageAllocator, ServeEngine  # noqa: F401

@@ -1,0 +1,91 @@
+"""Draft-token proposers for speculative decoding.
+
+The serving engine's speculative path (``ServeEngine(spec_decode=True)``)
+splits each decode step in two: a cheap *draft* source proposes up to K
+continuation tokens, and one batched ``verify`` dispatch scores all of
+them in a single TL kernel launch (see ``core/spec.py`` mode="verify").
+This module is the draft side.
+
+The default source is *self-speculative*: :class:`NgramProposer` does
+prompt-lookup decoding (Saxena; "Prompt Lookup Decoding") over the
+request's own token history — no second model, no extra params, no
+extra HBM.  When the tail n-gram of the history has appeared before,
+the tokens that followed that earlier occurrence are proposed verbatim.
+On repetitive continuations (code, structured text, retrieval-heavy
+prompts) acceptance is high; on novel text it degrades to zero accepted
+drafts, which the engine bounds to one wasted verify lane per step.
+
+Anything with a ``propose(uid, history, k)`` method is a valid source
+(:class:`DraftProposer`), so a small draft *model* can slot in: load a
+reduced config from ``configs/`` (``registry.get_reduced``), run its own
+greedy decode for k tokens, and return them — the engine never looks at
+how the drafts were produced, only whether the target model's verify
+logits agree.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+
+@runtime_checkable
+class DraftProposer(Protocol):
+    """Draft source contract for the engine's speculative decode path."""
+
+    def propose(self, uid: int, history: Sequence[int],
+                k: int) -> list[int]:
+        """Up to ``k`` draft tokens continuing ``history`` (the request's
+        prompt plus everything committed so far, including the token the
+        engine just sampled).  Fewer than ``k`` — including none — is
+        always legal; the engine verifies whatever comes back."""
+        ...
+
+
+class NgramProposer:
+    """Prompt-lookup drafts: match the longest tail n-gram of the history
+    earlier in the history and propose the tokens that followed it.
+
+    ``max_n`` down to ``min_n`` tail lengths are tried longest-first (a
+    longer match is stronger evidence the continuation repeats); within
+    one n the *most recent* earlier occurrence wins (locality: recent
+    repeats track the current phrasing better than distant ones).  Cost
+    is O(len(history) * max_n) per call in the worst case — draft-side
+    work is Python-cheap by design; the accelerator only ever runs the
+    single verify dispatch.
+    """
+
+    def __init__(self, max_n: int = 4, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(f"need 1 <= min_n <= max_n, got "
+                             f"min_n={min_n} max_n={max_n}")
+        self.max_n = int(max_n)
+        self.min_n = int(min_n)
+
+    def propose(self, uid: int, history: Sequence[int],
+                k: int) -> list[int]:
+        h = list(history)
+        if k <= 0 or len(h) < self.min_n + 1:
+            return []
+        for n in range(min(self.max_n, len(h) - 1), self.min_n - 1, -1):
+            tail = h[-n:]
+            # scan right-to-left over earlier occurrences, excluding the
+            # tail itself (i + n <= len(h) - 1 keeps >= 1 follow token)
+            for i in range(len(h) - n - 1, -1, -1):
+                if h[i:i + n] == tail:
+                    out = h[i + n:i + n + k]
+                    if out:
+                        return out
+        return []
+
+
+def make_proposer(name: str = "ngram", **kwargs) -> DraftProposer:
+    """Draft-source factory (the knob ``ServeEngine(draft_proposer=...)``
+    resolves string specs through).  ``"ngram"`` is the only built-in;
+    a draft-model source belongs here once a reduced target from
+    ``configs/`` is wired up as a proposer."""
+    if name == "ngram":
+        return NgramProposer(**kwargs)
+    raise ValueError(
+        f"unknown draft proposer {name!r}; built-ins: ['ngram'] — for a "
+        "draft model, wrap a reduced config from configs/ in an object "
+        "with a propose(uid, history, k) method")

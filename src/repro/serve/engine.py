@@ -80,6 +80,18 @@ import numpy as np
 from ..core.reason import resolve_num_splits
 from ..models import transformer
 from ..models.config import ModelConfig
+from .draft import NgramProposer
+
+
+# Speculative-decode draft throttle: a request whose drafts keep getting
+# rejected quarters its allowed draft length down to zero (its rows then
+# ride the cheap plain-decode dispatch), and re-probes with a single draft
+# once per this many steps so a continuation that turns repetitive later
+# can re-earn its full draft budget.  The quarter-step decay and the long
+# probe period are what bound the zero-acceptance overhead: a draft-hostile
+# stream pays the wide verify window on ~2 + new_tokens/32 steps instead of
+# every step.
+_SPEC_PROBE_PERIOD = 32
 
 
 def _bucket(n: int, lo: int = 64) -> int:
@@ -385,6 +397,13 @@ class PageAllocator:
         kids = {p for s in self._children.values() for p in s}
         assert kids == set(self._page_key), "children set drift"
         assert evict <= set(self._page_key), "evictable page not indexed"
+        # a page on the free list has no content contract left, so it
+        # must not still be matchable through the prefix index — the
+        # speculative-decode rollback path frees draft pages wholesale,
+        # and an indexed page slipping through would serve a future
+        # prefix hit from reused (overwritten) storage
+        assert not (free & set(self._page_key)), \
+            "indexed page on the free list"
         # interned chain nodes: the two maps mirror; every indexing node
         # exists and holds a full chunk; recorded child counts match; a
         # node with neither an index entry nor descendants is a leak
@@ -439,6 +458,7 @@ class Request:
     seq: int = -1               # admission order (preemption picks max)
     pf_pos: int = -1            # budgeted prefill: next position to compute
     pf_end: int = -1            # budgeted prefill: context length
+    spec_k: int = -1            # speculative draft throttle (-1 = full k)
     preempted: bool = False     # requeued victim (goes ahead of fresh)
     submit_time: float = 0.0
     submit_step: int = 0
@@ -492,6 +512,25 @@ class ServeEngine:
     asserts ``decode_compiles == len(distinct keys)`` after every decode,
     so a reasoned split change can never silently retrace.
 
+    Speculative decode: ``spec_decode=True`` swaps the decode dispatch
+    for draft -> verify -> rollback.  A draft source (``draft_proposer``;
+    default: self-speculative n-gram prompt-lookup, see
+    :mod:`repro.serve.draft`) proposes up to ``draft_k`` continuation
+    tokens per greedy request per step; one batched ``verify`` dispatch —
+    the TL verify mode: a K+1-token causal window at the row's runtime
+    history length, chunk-prefill tiling with decode's split-KV
+    partitioning — scores every position at once, the longest
+    draft prefix agreeing with the verify argmaxes commits, and pages
+    allocated past the accepted length roll back to the pool through the
+    allocator's refcount machinery.  The committed stream is
+    token-for-token identical to non-speculative greedy decode; the jit
+    cache is keyed ``(batch, draft capacity, bucket, splits, paged)``
+    with the same no-silent-retrace assertion as decode.  The path needs
+    the paged cache and pad-safe numerics (recurrent state cannot roll
+    back; capacity-truncated MoE couples drafts into committed tokens),
+    elsewhere the flag silently turns off; temperature > 0 requests ride
+    the verify dispatch undrafted (plain decode semantics).
+
     Prefix cache: ``prefix_cache=True`` (the default) lets paged
     admission reuse cached pages for page-aligned prompt prefixes (plus
     one partial page at the divergence point, copy-on-write protected).
@@ -527,6 +566,8 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
                  num_splits: Optional[int] = None,
+                 spec_decode: bool = False, draft_k: int = 4,
+                 draft_proposer=None,
                  target: str = "v5e"):
         self.cfg = cfg
         self.params = params
@@ -582,9 +623,34 @@ class ServeEngine:
         # (decode_parallelism differs across TPU generations).
         self.num_splits = None if num_splits is None else int(num_splits)
         self.target = target
+        # Speculative decoding: a draft source proposes up to ``draft_k``
+        # continuation tokens per request per step and one batched
+        # ``verify`` dispatch (TL mode="verify") scores them all; the
+        # longest agreeing prefix commits, pages past the accepted length
+        # roll back to the pool.  Verify is a paged chunk program, so the
+        # path needs the paged cache and pad-safe numerics (a recurrent
+        # state cannot be rolled back; capacity-truncated MoE routing
+        # couples draft tokens into the committed ones' numerics) —
+        # elsewhere the flag silently turns off, like prefix_cache.
+        if int(draft_k) < 1:
+            raise ValueError(f"draft_k {draft_k} must be >= 1")
+        self.spec_decode = bool(spec_decode and self.paged
+                                and self._pad_safe_prefill)
+        self.draft_k = int(draft_k)
+        self._proposer = draft_proposer if draft_proposer is not None \
+            else NgramProposer()
         self._decode_keys: set = set()
+        self._verify_keys: set = set()
         self.prefill_compiles = 0
         self.decode_compiles = 0
+        self.verify_compiles = 0
+        # speculative-decode observability: drafts offered vs accepted
+        # (the per-dispatch acceptance-rate samples feed stats()'s
+        # p50/p99) and pages the rollback returned to the pool
+        self.drafted_tokens = 0       # draft tokens sent to verify
+        self.accepted_tokens = 0      # drafts committed (excl. t0)
+        self.rollback_pages = 0       # spec pages freed past acceptance
+        self._accept_rates: list[float] = []
         # serving-observability counters (prefix cache + COW)
         self.prefix_lookups = 0       # submit/step admissions that probed
         self.prefix_hits = 0          # admissions that reused >= 1 token
@@ -641,6 +707,23 @@ class ServeEngine:
                 page_size=self.page_size, chunk_valid=chunk_valid)
             return logits, caches
 
+        # speculative verify: one K+1-token causal window per row (the
+        # committed token plus the drafts) through the TL verify mode —
+        # chunk-prefill geometry with decode's split-KV partitioning.
+        # cache_len (per-row history) and chunk_valid (per-row real draft
+        # count) are runtime vectors; only the draft capacity (the token
+        # axis), the bucket, and the split count are static, so the jit
+        # cache is keyed exactly like decode plus the capacity.
+        def verify(params, toks, caches, cache_len, tables, chunk_valid,
+                   kv_bucket, num_splits):
+            self.verify_compiles += 1       # runs once per jit trace
+            logits, _, caches = transformer.apply(
+                params, toks, cfg, caches=caches, cache_len=cache_len,
+                kv_bucket=kv_bucket, num_splits=num_splits,
+                block_tables=tables, page_size=self.page_size,
+                chunk_valid=chunk_valid, verify=True)
+            return logits, caches
+
         # copy one pool page (COW): page ``src`` -> ``dst`` in every
         # attention pool leaf; src/dst are runtime scalars so every COW
         # event reuses one trace
@@ -657,6 +740,8 @@ class ServeEngine:
                                static_argnames=("kv_bucket", "num_splits"))
         self._chunk_step = jax.jit(chunk_prefill,
                                    static_argnames=("kv_bucket",))
+        self._verify = jax.jit(verify,
+                               static_argnames=("kv_bucket", "num_splits"))
         self._cow_copy = jax.jit(cow_copy)
 
         # continuous-batching state (submit/step API)
@@ -691,17 +776,19 @@ class ServeEngine:
         return min(_bucket(needed, lo), self.max_len)
 
     def _decode_splits(self, bucket: int, batch: int,
-                       paged_dispatch: bool) -> int:
-        """Static split-KV count for a decode dispatch: the forced engine
-        override, or the reasoning heuristic over this dispatch's launch
-        width (``batch * KV heads``; one latent head for MLA), bucket,
-        and layout (``generate()`` decodes densely even on a paged
-        engine).  Deterministic, so it doubles as part of the decode jit
-        key."""
+                       paged_dispatch: bool,
+                       mode: str = "decode") -> int:
+        """Static split-KV count for a decode/verify dispatch: the forced
+        engine override, or the reasoning heuristic over this dispatch's
+        launch width (``batch * KV heads``; one latent head for MLA),
+        bucket, and layout (``generate()`` decodes densely even on a
+        paged engine).  Deterministic, so it doubles as part of the
+        decode jit key.  Verify dispatches score splits through the same
+        autotuner search (``mode="verify"``)."""
         rows = batch * (1 if getattr(self.cfg, "mla", False)
                         else self.cfg.num_kv_heads)
         return resolve_num_splits(
-            self.num_splits, rows=rows, kv_len=bucket,
+            self.num_splits, rows=rows, kv_len=bucket, mode=mode,
             page_size=self.page_size if paged_dispatch else None,
             target=self.target)
 
@@ -720,6 +807,26 @@ class ServeEngine:
             f"decode retraced outside its key set: {self.decode_compiles} " \
             f"compiles for {len(self._decode_keys)} distinct " \
             f"(batch, bucket, splits, paged) keys"
+        return out
+
+    def _run_verify(self, toks, caches, lens, tables, valid, bucket: int):
+        """One speculative-verify jit dispatch with the same no-silent-
+        retrace contract as :meth:`_run_decode`: the key adds the static
+        draft capacity (the token axis) to (batch, bucket, splits,
+        paged), and the compile counter must track the distinct keys
+        exactly."""
+        cap = int(toks.shape[1])
+        splits = self._decode_splits(bucket, int(toks.shape[0]), True,
+                                     mode="verify")
+        self._verify_keys.add((int(toks.shape[0]), cap, bucket, splits,
+                               True))
+        out = self._verify(self.params, toks, caches, lens, tables, valid,
+                           kv_bucket=bucket, num_splits=splits)
+        assert self.verify_compiles == len(self._verify_keys), \
+            f"verify retraced outside its key set: " \
+            f"{self.verify_compiles} compiles for " \
+            f"{len(self._verify_keys)} distinct " \
+            f"(batch, cap, bucket, splits, paged) keys"
         return out
 
     def _sample(self, logits, temperature: float, key):
@@ -1190,6 +1297,165 @@ class ServeEngine:
                     break
                 self._preempt(victim)
 
+    # ---- speculative decode (draft -> verify -> rollback) -------------
+
+    def _grow_spec_pages(self, r: Request, ntok: int) -> int:
+        """Extend the slot's pages so up to ``ntok`` tokens (the committed
+        token plus its drafts) can be written this step, and return how
+        many actually fit.  :meth:`_grow_pages` already secured the page
+        under the first write, so everything here is a fresh append —
+        refcount-1, unindexed, trivially writable.  Pool pressure never
+        preempts on behalf of a draft: speculative tokens are optional
+        work, so exhaustion just truncates the proposal to what fits."""
+        ps = self.page_size
+        pos = int(self._slot_lens[r.slot])
+        first = pos // ps
+        room = (first + 1) * ps - pos     # slack in the secured page
+        pidx = first + 1
+        while room < ntok:
+            got = self._allocator.alloc(1)
+            if got is None:
+                break
+            self._slot_pages[r.slot].append(got[0])
+            self._slot_tables[r.slot, pidx] = got[0]
+            pidx += 1
+            room += ps
+        return min(room, ntok)
+
+    def _rollback_pages(self, slot: int, new_len: int) -> None:
+        """Free the speculative pages past the accepted length: the slot
+        keeps ``pages_for(new_len)`` pages, the tail goes back through
+        the allocator's refcount machinery (a shared page is unreffed,
+        never clobbered — rejected drafts only ever wrote pages this
+        slot exclusively owned).  Rejected-draft K/V left in the *kept*
+        tail page sits past ``new_len``, which every later read masks
+        and the next decode overwrites."""
+        keep = self._allocator.pages_for(new_len)
+        dropped = self._slot_pages[slot][keep:]
+        if not dropped:
+            return
+        self._allocator.free(dropped)
+        self._slot_pages[slot] = self._slot_pages[slot][:keep]
+        self._slot_tables[slot, keep:keep + len(dropped)] = self._dump_page
+        self.rollback_pages += len(dropped)
+
+    def _spec_step(self, active: list[Request], toks: np.ndarray,
+                   finished: list[Request]) -> list[Request]:
+        """Speculative tail of :meth:`step`: draft, verify once, commit
+        the longest accepted prefix, roll the cache back.
+
+        Every decode-phase row rides the one verify dispatch — a row with
+        zero drafts (nothing proposed, temperature > 0, or no page room)
+        is just a decode through the verify program (``chunk_valid=1``),
+        so the zero-acceptance overhead is the K+1-wide query window, not
+        an extra dispatch; a step where *no* row drafts falls back to the
+        plain decode shape entirely, and the per-request throttle drives
+        persistently rejected rows there.  Greedy acceptance: draft
+        ``d_i`` commits iff
+        it equals the argmax of the verify logits at the previous
+        position — the committed stream is exactly what non-speculative
+        greedy decode would have produced, token for token."""
+        ps = self.page_size
+        cap = self.draft_k + 1
+        spec_toks = np.zeros((self.max_batch, cap), np.int32)
+        spec_toks[:, 0] = toks
+        valid = np.ones((self.max_batch,), np.int32)
+        drafts: dict[int, list[int]] = {}
+        for r in active:
+            pos = int(self._slot_lens[r.slot])
+            d: list[int] = []
+            if r.temperature == 0.0:
+                # per-request throttle: rejected drafts halve the allowed
+                # length toward zero, a lone probe draft every
+                # _SPEC_PROBE_PERIOD steps keeps the path able to recover
+                allow = r.spec_k if r.spec_k >= 0 else self.draft_k
+                if allow == 0 and (self._step_idx - r.submit_step) \
+                        % _SPEC_PROBE_PERIOD == 0:
+                    allow = 1
+                # a draft past max_new_tokens or the cache capacity could
+                # commit tokens the non-speculative engine never would
+                limit = min(allow,
+                            r.max_new_tokens - len(r.tokens),
+                            self.max_len - 1 - pos)
+                if limit > 0:
+                    d = list(self._proposer.propose(
+                        r.uid, r.prompt + r.tokens, limit))[:limit]
+            if d:
+                d = d[:self._grow_spec_pages(r, 1 + len(d)) - 1]
+            drafts[r.slot] = d
+            self.drafted_tokens += len(d)
+            valid[r.slot] = 1 + len(d)
+            spec_toks[r.slot, 1:1 + len(d)] = d
+
+        if not any(drafts.values()):
+            # nothing speculated anywhere this step (novel text, throttled
+            # rows, temperature-only batch): the verify window would be
+            # all padding, so take the plain decode dispatch — this is
+            # what bounds the zero-acceptance overhead
+            return self._decode_step(active, toks, finished)
+
+        lens = self._slot_lens.copy()
+        bucket = self._decode_bucket(
+            min(int(lens.max()) + cap, self.max_len))
+        tables_np = self._slot_tables[:, :bucket // ps].copy()
+        for r in self.active_requests:
+            if r.prefilling:
+                tables_np[r.slot, :] = self._dump_page
+        step_logits, self._slot_caches = self._run_verify(
+            jnp.asarray(spec_toks), self._slot_caches,
+            jnp.asarray(lens, np.int32), jnp.asarray(tables_np),
+            jnp.asarray(valid), bucket)
+
+        # longest accepted prefix per row: d_i commits iff it matches the
+        # greedy token after position i-1; the next step's logits row is
+        # the verify output at the last committed position
+        pred = np.asarray(jnp.argmax(step_logits, axis=-1))
+        accepted = np.zeros((self.max_batch,), np.int32)
+        for r in active:
+            d = drafts[r.slot]
+            j = 0
+            while j < len(d) and d[j] == int(pred[r.slot, j]):
+                j += 1
+            if d:
+                self.accepted_tokens += j
+                self._accept_rates.append(j / len(d))
+                # throttle update: full acceptance restores the full
+                # draft budget, partial acceptance tracks what landed,
+                # total rejection quarters toward zero
+                if j == len(d):
+                    r.spec_k = self.draft_k
+                elif j > 0:
+                    r.spec_k = j
+                else:
+                    r.spec_k = (r.spec_k if r.spec_k >= 0
+                                else self.draft_k) // 4
+            accepted[r.slot] = j
+            r.tokens.extend(d[:j])
+            pos = int(self._slot_lens[r.slot])
+            new_len = pos + 1 + j
+            self._slot_lens[r.slot] = new_len
+            self._rollback_pages(r.slot, new_len)
+            if self.prefix_cache:
+                # a multi-token commit can cross page boundaries between
+                # the boundary-start publishes _grow_pages does — index
+                # every newly filled page now (resume handle: O(new
+                # chunks); re-registration is a no-op)
+                full = new_len // ps
+                if full:
+                    ctx = (r.prompt + r.tokens)[:full * ps]
+                    self._slot_nodes[r.slot] = self._allocator.register(
+                        ctx, self._slot_pages[r.slot][:full],
+                        resume=self._slot_nodes[r.slot])
+        self._slot_logits = step_logits[
+            jnp.arange(self.max_batch), jnp.asarray(accepted)]
+
+        for r in active:
+            if r.done or int(self._slot_lens[r.slot]) + 1 > self.max_len:
+                self._stamp_finish(r)
+                finished.append(r)
+                self._retire(r)
+        return finished
+
     # ---- admission ----------------------------------------------------
 
     def _admit(self):
@@ -1451,6 +1717,14 @@ class ServeEngine:
             "cow_count": self.cow_count,
             "prefill_compiles": self.prefill_compiles,
             "decode_compiles": self.decode_compiles,
+            "verify_compiles": self.verify_compiles,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "rollback_pages": self.rollback_pages,
+            # per-verify-dispatch-per-row acceptance fraction (rows that
+            # offered >= 1 draft); p50/p99 locate whether a mediocre mean
+            # is uniform mediocrity or a bimodal hit-or-miss draft source
+            "acceptance_rate": pct(self._accept_rates),
         }
 
     def reset_metrics(self) -> None:
@@ -1466,6 +1740,10 @@ class ServeEngine:
         self._n_finished = 0
         self._n_generated = 0
         self.preemptions = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.rollback_pages = 0
+        self._accept_rates = []
 
     def _retire(self, r: Request):
         """Release a request's slot and pages (it keeps its tokens)."""
@@ -1550,6 +1828,19 @@ class ServeEngine:
             if not active:
                 return finished
 
+        if self.spec_decode:
+            # draft + single verify dispatch + rollback replaces the
+            # decode dispatch below; token streams are bit-identical
+            return self._spec_step(active, toks, finished)
+        return self._decode_step(active, toks, finished)
+
+    def _decode_step(self, active: list[Request], toks: np.ndarray,
+                     finished: list[Request]) -> list[Request]:
+        """Non-speculative tail of :meth:`step`: one batched decode
+        dispatch, cache lengths advance by one.  Also the speculative
+        path's fallback for steps where no row drafted anything — the
+        verify window would be all padding, so the plain decode shape is
+        strictly cheaper."""
         # idle slots decode a dummy token against a length-0 cache window;
         # their rows are garbage and never read back (paged: written to the
         # dump page)

@@ -75,6 +75,26 @@ def _run_interleaving(npages: int, ops: list[tuple[int, int]]) -> None:
                         a.free([p])
                         h[0][i] = got[0]
                     break
+        elif code == 5 and holders:
+            # speculative decode: draft pages allocated in a burst, the
+            # accepted prefix optionally published to the index, and the
+            # unaccepted tail rolled back to the pool the same step (the
+            # engine's _grow_spec_pages / _rollback_pages pair).  Rolled-
+            # back pages carry no committed tokens, so they are never
+            # indexed — the free list must stay disjoint from the index.
+            h = holders[arg % len(holders)]
+            k = 1 + arg % 4
+            got = a.alloc(k)
+            if got is not None:
+                accept = (arg // 7) % (k + 1)
+                h[0].extend(got)
+                h[1].extend(_tokens(arg + 13, accept * PS))
+                if (arg // 11) % 2:
+                    a.register(h[1], h[0])   # publish committed pages
+                tail = got[accept:]
+                if tail:
+                    a.free(tail)
+                    del h[0][len(h[0]) - len(tail):]
         a.check_invariants()
         assert a.free_pages + a.live_pages == a.num_pages
         held = {p for h in holders for p in h[0]}
@@ -91,13 +111,14 @@ def _run_interleaving(npages: int, ops: list[tuple[int, int]]) -> None:
 
 @given(
     npages=st.integers(2, 12),
-    ops=st.lists(st.tuples(st.integers(0, 4), st.integers(0, 2 ** 20)),
+    ops=st.lists(st.tuples(st.integers(0, 5), st.integers(0, 2 ** 20)),
                  max_size=80),
 )
 @settings(max_examples=60, deadline=None)
 def test_arbitrary_interleavings_conserve_pages(npages, ops):
-    """Random submit/grow/COW/retire/register interleavings never leak or
-    double-free, and the index never drifts from the refcount state."""
+    """Random submit/grow/COW/retire/register/spec-rollback interleavings
+    never leak or double-free, the index never drifts from the refcount
+    state, and a rolled-back page never stays matchable."""
     _run_interleaving(npages, ops)
 
 
@@ -109,7 +130,7 @@ def test_seeded_interleavings_conserve_pages(seed):
 
     rng = np.random.default_rng(seed)
     npages = int(rng.integers(2, 13))
-    ops = [(int(rng.integers(0, 5)), int(rng.integers(0, 2 ** 20)))
+    ops = [(int(rng.integers(0, 6)), int(rng.integers(0, 2 ** 20)))
            for _ in range(int(rng.integers(10, 80)))]
     _run_interleaving(npages, ops)
 

@@ -1,0 +1,231 @@
+"""Speculative decoding: n-gram drafts + the TL verify mode + rollback.
+
+The load-bearing contract is *token identity*: a spec engine commits
+exactly the stream non-speculative greedy decode produces — for every
+head layout (GQA / MQA / MLA), in bf16, with permuted page tables, and
+when the draft source is pure garbage (zero acceptance).  On top of that
+the suite locks the verify compile-key accounting (no silent retrace),
+the draft/accept/rollback counters and their reset, and the engine gates
+(recurrent / MoE / dense turn the flag off).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import registry
+from repro.models import transformer as T
+from repro.serve import NgramProposer, ServeEngine, make_proposer
+from repro.serve.draft import DraftProposer
+
+
+def _params(cfg):
+    return T.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(cfg, rng, repetitive=True):
+    """A mix the drafts can bite on: repetitive prompts (n-gram lookup
+    hits) plus one random prompt (drafts mostly miss)."""
+    base = list(map(int, rng.integers(0, cfg.vocab_size, 5)))
+    out = [base * 6, base * 3 + [7]] if repetitive else []
+    out.append(list(map(int, rng.integers(0, cfg.vocab_size, 23))))
+    return out
+
+
+def _run(cfg, params, prompts, *, spec, new=24, check=True, **kw):
+    kw.setdefault("page_size", 16)
+    eng = ServeEngine(cfg, params, max_batch=len(prompts), max_len=256,
+                      spec_decode=spec, **kw)
+    uids = [eng.submit(list(p), max_new_tokens=new) for p in prompts]
+    done = eng.run_until_drained(max_steps=4000)
+    by = {r.uid: r for r in done}
+    if check and eng._allocator is not None:
+        eng._allocator.check_invariants()
+    return [by[u].tokens for u in uids], eng
+
+
+CASES = {
+    "gqa": lambda: registry.get_reduced("deepseek-7b"),
+    "mqa": lambda: registry.get_reduced("deepseek-7b", num_kv_heads=1),
+    "mla": lambda: registry.get_reduced("deepseek-v2-lite-16b", moe=False),
+    "bf16": lambda: registry.get_reduced("deepseek-7b", dtype="bf16"),
+}
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_spec_decode_matches_greedy_stream(case):
+    """Spec and non-spec engines commit identical greedy tokens across
+    head layouts and dtypes; drafts actually fire (the repetitive
+    prompts would be a vacuous pass otherwise)."""
+    cfg = CASES[case]()
+    params = _params(cfg)
+    prompts = _prompts(cfg, np.random.default_rng(0))
+    ref, _ = _run(cfg, params, prompts, spec=False)
+    got, eng = _run(cfg, params, prompts, spec=True, draft_k=6)
+    assert got == ref
+    s = eng.stats()
+    assert s["drafted_tokens"] > 0
+    assert 0 < s["accepted_tokens"] <= s["drafted_tokens"]
+    # acceptance shortened the run: fewer steps than tokens generated
+    # by the longest request
+    assert s["steps"] < 24 + len(prompts)
+
+
+def test_spec_decode_permuted_page_tables():
+    """Token identity survives a scrambled free list: a warm-up wave
+    allocates and retires pages first, so the measured requests' tables
+    are permuted and non-contiguous relative to the non-spec run."""
+    cfg = CASES["gqa"]()
+    params = _params(cfg)
+    rng = np.random.default_rng(1)
+    prompts = _prompts(cfg, rng)
+    warm = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+            for n in (37, 19, 52)]
+    ref, _ = _run(cfg, params, prompts, spec=False)
+
+    eng = ServeEngine(cfg, params, max_batch=3, max_len=256, page_size=16,
+                      spec_decode=True, draft_k=6)
+    for p in warm:
+        eng.submit(p, max_new_tokens=9)
+    eng.run_until_drained(max_steps=2000)
+    uids = [eng.submit(list(p), max_new_tokens=24) for p in prompts]
+    done = {r.uid: r for r in eng.run_until_drained(max_steps=4000)}
+    assert [done[u].tokens for u in uids] == ref
+    eng._allocator.check_invariants()
+
+
+class _GarbageProposer:
+    """Worst-case draft source: always proposes out-of-distribution
+    tokens, so every draft is rejected (zero acceptance)."""
+
+    def __init__(self, vocab):
+        self.vocab = vocab
+
+    def propose(self, uid, history, k):
+        return [(history[-1] + 1 + i) % self.vocab for i in range(k)]
+
+
+def test_zero_acceptance_still_matches_and_rolls_back():
+    """All-rejected drafts degrade to plain greedy decode — same tokens,
+    acceptance p50/p99 == 0, and every draft page rolled back."""
+    cfg = CASES["gqa"]()
+    params = _params(cfg)
+    prompts = _prompts(cfg, np.random.default_rng(2))
+    ref, ref_eng = _run(cfg, params, prompts, spec=False)
+    got, eng = _run(cfg, params, prompts, spec=True, draft_k=6,
+                    draft_proposer=_GarbageProposer(cfg.vocab_size))
+    assert got == ref
+    s = eng.stats()
+    assert s["drafted_tokens"] > 0 and s["accepted_tokens"] == 0
+    assert s["acceptance_rate"]["p50"] == 0.0
+    assert s["acceptance_rate"]["p99"] == 0.0
+    assert s["rollback_pages"] > 0
+    # zero acceptance commits one token per step, exactly like non-spec
+    assert s["steps"] == ref_eng.stats()["steps"]
+
+
+def test_verify_compile_keys_bounded():
+    """The no-silent-retrace contract extends to verify: compiles equal
+    the distinct (batch, cap, bucket, splits, paged) keys, and a long
+    generation stays within O(buckets) traces."""
+    cfg = CASES["gqa"]()
+    params = _params(cfg)
+    prompts = _prompts(cfg, np.random.default_rng(3))
+    _, eng = _run(cfg, params, prompts, spec=True, draft_k=4, new=48)
+    assert eng.verify_compiles == len(eng._verify_keys)
+    assert eng.verify_compiles <= 3      # buckets touched, not steps
+    # no-draft steps fall back to the decode shape — same contract there
+    assert eng.decode_compiles == len(eng._decode_keys)
+    caps = {k[1] for k in eng._verify_keys}
+    assert caps == {eng.draft_k + 1}
+
+
+def test_spec_counters_reset():
+    """reset_metrics zeroes the draft/accept/rollback counters and the
+    acceptance samples but keeps the compile accounting (warm-up wave
+    contract)."""
+    cfg = CASES["gqa"]()
+    params = _params(cfg)
+    prompts = _prompts(cfg, np.random.default_rng(4))
+    _, eng = _run(cfg, params, prompts, spec=True, draft_k=6)
+    s = eng.stats()
+    assert s["drafted_tokens"] > 0 and s["acceptance_rate"]["n"] > 0
+    compiles = s["verify_compiles"]
+    assert compiles > 0
+    eng.reset_metrics()
+    s = eng.stats()
+    assert s["drafted_tokens"] == 0 and s["accepted_tokens"] == 0
+    assert s["rollback_pages"] == 0
+    assert s["acceptance_rate"] == {"n": 0, "p50": None, "p99": None,
+                                    "mean": None}
+    assert s["verify_compiles"] == compiles
+
+
+def test_spec_gates_off_where_unsound():
+    """Recurrent state cannot roll back, MoE routing couples drafts into
+    committed numerics, and a dense engine has no pages to roll back —
+    the flag silently turns off (mirroring prefix_cache's gates)."""
+    for arch, kw in [("rwkv6-1.6b", {}),
+                     ("deepseek-v2-lite-16b", {}),     # MoE
+                     ("deepseek-7b", {"paged": False})]:
+        cfg = registry.get_reduced(arch)
+        eng = ServeEngine(cfg, _params(cfg), max_batch=1, max_len=64,
+                          spec_decode=True, **kw)
+        assert not eng.spec_decode, (arch, kw)
+    with pytest.raises(ValueError, match="draft_k"):
+        cfg = registry.get_reduced("deepseek-7b")
+        ServeEngine(cfg, _params(cfg), max_batch=1, max_len=64,
+                    spec_decode=True, draft_k=0)
+
+
+def test_spec_respects_max_new_tokens_and_temperature():
+    """Drafts never overshoot a request's budget, and temperature > 0
+    rows ride the verify dispatch undrafted (their sampled stream is
+    untouched by speculation)."""
+    cfg = CASES["gqa"]()
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    base = list(map(int, rng.integers(0, cfg.vocab_size, 4)))
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=256, page_size=16,
+                      spec_decode=True, draft_k=6)
+    u_greedy = eng.submit(base * 7, max_new_tokens=5)
+    u_temp = eng.submit(base * 7, max_new_tokens=5, temperature=0.8)
+    done = {r.uid: r for r in eng.run_until_drained(max_steps=2000)}
+    assert len(done[u_greedy].tokens) == 5
+    assert len(done[u_temp].tokens) == 5
+
+
+def test_ngram_proposer_prompt_lookup():
+    """Longest tail n-gram wins; within an n the most recent earlier
+    occurrence wins; no match proposes nothing."""
+    p = NgramProposer(max_n=3, min_n=1)
+    #           0  1  2  3  4  5  6  7
+    history = [1, 2, 3, 9, 1, 2, 3, 9, 1, 2, 3]
+    assert p.propose(0, history, 4) == [9, 1, 2, 3]
+    # most recent occurrence of the tail 1-gram [5]
+    assert p.propose(0, [5, 7, 5, 8, 5], 2) == [8, 5]
+    assert p.propose(0, [1, 2, 3], 4) == []      # nothing repeats
+    assert p.propose(0, [1], 4) == []            # history too short
+    assert isinstance(p, DraftProposer)
+    assert isinstance(make_proposer("ngram", max_n=2), NgramProposer)
+    with pytest.raises(ValueError, match="unknown draft proposer"):
+        make_proposer("bigmodel")
+
+
+def test_spec_with_prefix_cache_and_interleaving():
+    """Speculation composes with the rest of the scheduler: budgeted
+    chunked prefill, prefix sharing between requests, and the multi-token
+    commit's own page publication all preserve token identity."""
+    cfg = CASES["gqa"]()
+    params = _params(cfg)
+    rng = np.random.default_rng(6)
+    base = list(map(int, rng.integers(0, cfg.vocab_size, 4)))
+    prompts = [(base * 12)[:44], (base * 12)[:44],
+               list(map(int, rng.integers(0, cfg.vocab_size, 30)))]
+    ref, _ = _run(cfg, params, prompts, spec=False, prefill_budget=16)
+    got, eng = _run(cfg, params, prompts, spec=True, draft_k=4,
+                    prefill_budget=16)
+    assert got == ref
+    assert eng.stats()["accepted_tokens"] > 0
