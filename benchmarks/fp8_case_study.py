@@ -26,7 +26,8 @@ def run():
     v6e = get_target("v6e")
     peak_fp8 = v6e.peak_bf16_tflops * 2  # fp8 MXU rate on v6e-class parts
     for s in (512, 1024, 2048, 4096, 8192, 16384):
-        for dtype, tgt, peak in (("bf16", "v5e", 197.0),
+        for dtype, tgt, peak in (
+                ("bf16", "v5e", get_target("v5e").peak_bf16_tflops),
                                  ("bf16", "v6e", v6e.peak_bf16_tflops),
                                  ("fp8", "v6e", peak_fp8)):
             spec = AttnSpec.mha(16, 128, dtype=dtype)

@@ -1,0 +1,194 @@
+"""Int8-quantized KV pages A/B: serving capacity on a fixed HBM budget.
+
+The quantized-page contract (this PR's tentpole) stores every KV page
+pool as symmetric int8 with one f32 absmax scale per page, dequantized
+per page inside the kernel's KV loop — Q/O/compute dtypes unchanged, a
+bounded dequant error (see README), and a 2x (bf16) / ~4x (f32) smaller
+cache row per token.
+
+This benchmark makes the capacity claim concrete the way an operator
+would provision it: fix one KV HBM byte budget, size each engine's page
+pool to that budget at *its* bytes-per-page (fp pools pay the model
+dtype; int8 pools pay 1 byte/element + 4 bytes/page/scale), then drive
+both engines over the same oversubscribed request wave and report
+
+* KV HBM reserved per request at its peak length,
+* the peak number of *concurrently resident* requests the pool sustains
+  (the capacity headline — target >= 1.8x for the quantized engine), and
+* steady-state decode tok/s (the dequant is a per-page multiply riding
+  the existing gather; it must not move throughput materially), with the
+  compile counters asserted identical — quantization changes the cache
+  dtype, never the compile-key space.
+
+Results land in ``BENCH_kvq.json``.
+
+    PYTHONPATH=src python benchmarks/kv_compress.py --arch deepseek-7b
+    PYTHONPATH=src python benchmarks/kv_compress.py --tiny   # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.models import registry
+from repro.models import transformer as T
+from repro.serve import ServeEngine
+
+from paged_kv import drive, kv_bytes_per_token
+
+
+def page_bytes(cfg, page_size: int, quant: bool) -> int:
+    """HBM bytes one page pool slot occupies across all attention layers.
+
+    fp pages pay the model dtype per element; int8 pages pay one byte per
+    element plus one f32 absmax scale per (page, pool) — two pools (K, V)
+    for MHA-family caches, one latent pool for MLA."""
+    kinds, nper = T.period_spec(cfg)
+    if cfg.mla:
+        elems = cfg.kv_lora_rank + cfg.rope_head_dim
+        n_scales = 1
+    else:
+        elems = 2 * cfg.num_kv_heads * cfg.head_dim
+        n_scales = 2
+    if quant:
+        row = elems * page_size * 1 + n_scales * 4
+    else:
+        bytes_per = 2 if cfg.dtype in ("bf16", "f16") else 4
+        row = elems * page_size * bytes_per
+    n_attn = sum(k in ("attn", "self") for k in kinds) * nper
+    n_attn += cfg.first_k_dense if not getattr(cfg, "rwkv", False) else 0
+    return row * n_attn
+
+
+def peak_concurrency(eng: ServeEngine, prompts, new_tokens) -> int:
+    """Submit everything, step to drain, return the peak number of
+    requests concurrently holding pages — the pool's capacity under the
+    scheduler's own admission/preemption policy, not a closed form."""
+    for p in prompts:
+        eng.submit(list(p), max_new_tokens=new_tokens)
+    peak, steps = 0, 0
+    while (eng._queue or any(r is not None for r in eng._active)) \
+            and steps < 20000:
+        eng.step()
+        peak = max(peak, sum(r is not None for r in eng._active))
+        steps += 1
+    assert not eng._queue, "wave did not drain"
+    return peak
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--page-size", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=100)
+    ap.add_argument("--fp-pages", type=int, default=24,
+                    help="fp pool size; sets the shared HBM byte budget")
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale smoke run for CI")
+    args = ap.parse_args()
+    if args.tiny:
+        args.page_size, args.new_tokens = 16, 3
+        args.prompt_len, args.fp_pages = 24, 8
+
+    cfg = registry.get_reduced(args.arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    ps = args.page_size
+
+    pb_fp = page_bytes(cfg, ps, quant=False)
+    pb_q = page_bytes(cfg, ps, quant=True)
+    budget = args.fp_pages * pb_fp              # the shared HBM budget
+    pages_q = budget // pb_q
+    per_tok = kv_bytes_per_token(cfg)
+
+    # oversubscribe: enough identical-length requests to fill the bigger
+    # pool twice over, so the pool (not the wave) bounds concurrency
+    need = -(-(args.prompt_len + args.new_tokens) // ps)
+    nreq = max(4, 2 * int(pages_q) // need)
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, args.prompt_len)))
+               for _ in range(nreq)]
+    max_len = ps * (need + 1)
+
+    print(f"[kv-compress] arch={args.arch} dtype={cfg.dtype} "
+          f"page_size={ps} prompt_len={args.prompt_len} "
+          f"new={args.new_tokens} x {nreq} requests")
+    print(f"  HBM budget {budget:,}B -> fp pool {args.fp_pages} pages "
+          f"({pb_fp:,}B/page), int8 pool {pages_q} pages "
+          f"({pb_q:,}B/page)")
+
+    def build(quant):
+        pool = pages_q if quant else args.fp_pages
+        return ServeEngine(cfg, params, max_batch=nreq, max_len=max_len,
+                           page_size=ps, num_pages=int(pool),
+                           kv_quant=quant)
+
+    # --- capacity: peak concurrent residents on the fixed budget -------
+    conc_fp = peak_concurrency(build(False), prompts, args.new_tokens)
+    conc_q = peak_concurrency(build(True), prompts, args.new_tokens)
+    ratio = conc_q / max(1, conc_fp)
+    req_bytes_fp = need * pb_fp
+    req_bytes_q = need * pb_q
+    print(f"  KV HBM per request at peak length ({need} pages): "
+          f"fp {req_bytes_fp:,}B vs int8 {req_bytes_q:,}B "
+          f"({req_bytes_fp / req_bytes_q:.2f}x smaller)")
+    print(f"  peak concurrent requests on the budget: fp {conc_fp} vs "
+          f"int8 {conc_q} ({ratio:.2f}x)")
+
+    # --- throughput: the dequant must ride the gather for ~free --------
+    eng_fp, eng_q = build(False), build(True)
+    wave = prompts[: max(2, conc_fp)]           # fits both engines
+    drive(eng_fp, wave, args.new_tokens)        # compile pass
+    drive(eng_q, wave, args.new_tokens)
+    passes = 1 if args.tiny else 3
+    tps_fp = max(drive(eng_fp, wave, args.new_tokens)[0]
+                 for _ in range(passes))
+    tps_q = max(drive(eng_q, wave, args.new_tokens)[0]
+                for _ in range(passes))
+    print(f"  steady-state decode: fp {tps_fp:.1f} tok/s vs int8 "
+          f"{tps_q:.1f} tok/s ({tps_q / tps_fp:.2f}x)")
+    print(f"  compiles (prefill/decode): fp {eng_fp.prefill_compiles}/"
+          f"{eng_fp.decode_compiles} vs int8 {eng_q.prefill_compiles}/"
+          f"{eng_q.decode_compiles}")
+
+    # quantization changes the cache dtype, never the compile-key space
+    assert eng_q.decode_compiles == eng_fp.decode_compiles, \
+        "int8 pages changed the decode compile count"
+    assert eng_q.prefill_compiles == eng_fp.prefill_compiles, \
+        "int8 pages changed the prefill compile count"
+    if args.tiny:
+        assert ratio > 1.0, (
+            f"int8 pages must raise capacity on a fixed budget "
+            f"(got {ratio:.2f}x)")
+    else:
+        assert ratio >= 1.8, (
+            f"capacity ratio {ratio:.2f}x missed the >=1.8x target")
+
+    out = {"bench": "kv_compress", "arch": args.arch, "dtype": cfg.dtype,
+           "tiny": bool(args.tiny),
+           "workload": {"page_size": ps, "prompt_len": args.prompt_len,
+                        "new_tokens": args.new_tokens, "requests": nreq,
+                        "kv_bytes_per_token_fp": per_tok},
+           "hbm_budget_bytes": int(budget),
+           "page_bytes": {"fp": int(pb_fp), "int8": int(pb_q)},
+           "pool_pages": {"fp": int(args.fp_pages), "int8": int(pages_q)},
+           "request_kv_bytes": {"fp": int(req_bytes_fp),
+                                "int8": int(req_bytes_q)},
+           "peak_concurrent": {"fp": int(conc_fp), "int8": int(conc_q),
+                               "ratio": float(ratio)},
+           "decode_tok_s": {"fp": float(tps_fp), "int8": float(tps_q)},
+           "compiles": {"fp": [eng_fp.prefill_compiles,
+                               eng_fp.decode_compiles],
+                        "int8": [eng_q.prefill_compiles,
+                                 eng_q.decode_compiles]}}
+    with open("BENCH_kvq.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("  wrote BENCH_kvq.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -290,6 +290,11 @@ def reason_parameters(
     if paged:
         params["KV_PAGED"] = 1
         params["PAGE_SIZE"] = spec.page_size
+    if spec.kv_dtype is not None:
+        # marker: the KV pool holds quantized values; one f32 absmax scale
+        # per page rides the scalar-prefetch tier next to the block table
+        # and the backends dequantize at tile materialization, before QK^T
+        params["KV_QUANT"] = 1
     if splits > 1:
         # marker + final (clamped) split count; the backends re-derive the
         # identical per-split tile layout through split_layout
@@ -307,17 +312,21 @@ def reason_parameters(
     body = copy.deepcopy(sketch.body)
 
     # (1)+(3) allocations ----------------------------------------------------
+    # Quantized pages change only the *cache* allocations (K/V, MLA's C):
+    # Q and O keep the spec dtype, and the register tier is f32 as always —
+    # the dequant happens at tile materialization inside the KV loop.
+    kv_dt = spec.kv_dtype or spec.dtype
     allocs: list[Statement] = []
     if mla:
         allocs += [
             Allocate("Q", MemSpace.GLOBAL, ("M", dq_sym), spec.dtype, offset="bh"),
-            Allocate("C", MemSpace.GLOBAL, ("N", dq_sym), spec.dtype, offset="b"),
+            Allocate("C", MemSpace.GLOBAL, ("N", dq_sym), kv_dt, offset="b"),
         ]
     else:
         allocs += [
             Allocate("Q", MemSpace.GLOBAL, ("M", dq_sym), spec.dtype, offset="bh"),
-            Allocate("K", MemSpace.GLOBAL, ("N", dq_sym), spec.dtype, offset="bh_kv"),
-            Allocate("V", MemSpace.GLOBAL, ("N", dv_sym), spec.dtype, offset="bh_kv"),
+            Allocate("K", MemSpace.GLOBAL, ("N", dq_sym), kv_dt, offset="bh_kv"),
+            Allocate("V", MemSpace.GLOBAL, ("N", dv_sym), kv_dt, offset="bh_kv"),
         ]
     allocs += [
         Allocate("O", MemSpace.GLOBAL, ("M", dv_sym), spec.dtype, offset="bh"),
@@ -389,6 +398,6 @@ def reason_parameters(
         meta={**sketch.meta, "stage": "code", "blocks": blocks,
               "target": target.name, "runtime_kv_len": runtime_kv,
               "paged": paged, "chunk_prefill": chunked,
-              "num_splits": splits},
+              "num_splits": splits, "kv_quant": spec.kv_dtype is not None},
     )
     return prog

@@ -51,6 +51,13 @@ class AttnSpec:
     # axis split-KV style (``num_splits``) when the cache is long, which
     # chunk_prefill never does.
     page_size: Optional[int] = None
+    # Quantized KV page storage.  None = pages hold ``dtype`` values;
+    # "int8" = pages hold symmetric int8 values with one f32 absmax scale
+    # per *page* riding the scalar-prefetch tier next to the block table.
+    # Dequantization happens inside the KV inner loop of every backend
+    # (scale gather + cast before the QK^T tile), so Q/O and all compute
+    # stay in ``dtype``/f32 — only the cache residency shrinks.
+    kv_dtype: Optional[str] = None
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
@@ -77,6 +84,14 @@ class AttnSpec:
             if self.page_size <= 0 or self.page_size % 8:
                 raise ValueError(f"page_size {self.page_size} must be a "
                                  "positive multiple of the f32 sublane (8)")
+        if self.kv_dtype is not None:
+            if self.kv_dtype != "int8":
+                raise ValueError(f"kv_dtype {self.kv_dtype!r} unsupported; "
+                                 "only 'int8' quantized pages are lowered")
+            if self.page_size is None:
+                raise ValueError("kv_dtype is a paged-cache contract (the "
+                                 "scale table rides the block table); set "
+                                 "page_size")
         if self.variant == "mha" and self.num_q_heads != self.num_kv_heads:
             raise ValueError("MHA requires num_q_heads == num_kv_heads")
         if self.variant == "mqa" and self.num_kv_heads != 1:

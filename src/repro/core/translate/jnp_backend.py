@@ -60,6 +60,12 @@ def translate_jnp(prog: TLProgram):
     Python).  Logical KV tile ``i`` is read from physical rows
     ``table[i*BN // PAGE_SIZE] * PAGE_SIZE + (i*BN) % PAGE_SIZE`` onward.
 
+    Quantized-page programs (``meta['kv_quant']``) insert one ``(P,)`` f32
+    per-page scale vector per int8 pool between the table and the inputs —
+    ``fn(kv_len, block_table, k_scale, v_scale, q2d, k2d, v2d)`` (MLA:
+    ``c_scale``) — and each gathered tile is dequantized
+    (``int8 * scale``) before the score GEMM, identical to Pallas.
+
     Chunked-prefill programs (``meta['chunk_prefill']``) reuse the paged
     signature with the leading scalar reinterpreted as the *history*
     length: the M q rows sit at positions ``hist .. hist+M-1`` and the
@@ -83,6 +89,11 @@ def translate_jnp(prog: TLProgram):
     chunked = bool(prog.meta.get("chunk_prefill") or p.get("KV_CHUNK"))
     page = int(p["PAGE_SIZE"]) if paged else None
     mpp = page // bn if paged else None    # KV tiles per page
+    # quantized int8 pools: one f32 absmax scale per page, passed between
+    # the block table and the regular inputs (same contract as Pallas)
+    kv_quant = bool(prog.meta.get("kv_quant") or p.get("KV_QUANT"))
+    quant_names = (("C",) if "C" in prog.inputs else ("K", "V")) \
+        if kv_quant else ()
     # split-KV: the same fixed-point layout the Pallas backend derives
     ns, tps = split_layout(int(p.get("NUM_SPLITS", 1)), tkv, mpp or 1)
     n_pad = tkv * bn
@@ -176,10 +187,15 @@ def translate_jnp(prog: TLProgram):
                         if table is not None and allocs[nm].shape[0] == "N":
                             # paged gather: logical tile i -> physical rows
                             # (BN | PAGE_SIZE, so a tile never straddles)
-                            start = int(table[i // mpp]) * page \
-                                + (i % mpp) * bn
-                            state[nm] = jnp.asarray(
-                                env[nm][start:start + rows])
+                            pg = int(table[i // mpp])
+                            start = pg * page + (i % mpp) * bn
+                            tile = jnp.asarray(env[nm][start:start + rows])
+                            if nm in env.get("__scales__", ()):
+                                # int8 page dequant: the tile lives in one
+                                # page, so one scalar scale covers it
+                                tile = tile.astype(jnp.float32) \
+                                    * env["__scales__"][nm][pg]
+                            state[nm] = tile
                         else:
                             state[nm] = jnp.asarray(
                                 env[nm][i * rows:(i + 1) * rows])
@@ -259,8 +275,14 @@ def translate_jnp(prog: TLProgram):
 
     def fn(*arrays):
         kv_limit = table = None
+        scales = {}
         if paged:
             kv_len, table, *arrays = arrays
+            if kv_quant:
+                svals, arrays = arrays[:len(quant_names)], \
+                    arrays[len(quant_names):]
+                scales = {nm: jnp.asarray(s, jnp.float32).reshape(-1)
+                          for nm, s in zip(quant_names, svals)}
             table = np.asarray(table).reshape(-1)
             if table.shape[0] * mpp != tkv:
                 raise ValueError(
@@ -279,7 +301,7 @@ def translate_jnp(prog: TLProgram):
         if len(arrays) != len(input_names):
             raise ValueError(f"expected inputs {input_names}"
                              + (" with a leading kv_len" if runtime_kv else ""))
-        env = {}
+        env = {"__scales__": scales} if scales else {}
         for nm, arr in zip(input_names, arrays):
             if allocs[nm].shape[0] == "M":
                 env[nm] = _pad_to(arr, m_pad)
@@ -300,4 +322,5 @@ def translate_jnp(prog: TLProgram):
     fn.page_size = page
     fn.chunk_prefill = chunked
     fn.num_splits = ns
+    fn.kv_quant = kv_quant
     return fn

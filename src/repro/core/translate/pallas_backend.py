@@ -77,7 +77,7 @@ from .jnp_backend import TranslateError
 # fp8 kernels execute at bf16 numerics in interpret mode (DESIGN A4);
 # on fp8-capable MXUs the translator would emit float8_e4m3fn here.
 _JDTYPE = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16,
-           "fp8": jnp.bfloat16}
+           "fp8": jnp.bfloat16, "int8": jnp.int8}
 
 
 def _compiler_params(dimension_semantics):
@@ -148,6 +148,15 @@ def translate_pallas(
     page index (the engine uses a reserved dump page): the gather still
     issues the DMA, the runtime length mask discards the values.
 
+    Quantized-page programs (``meta['kv_quant']`` — int8 pools) extend the
+    paged signature with one per-page f32 scale vector per pool, between
+    the block table and the regular operands:
+    ``fn(kv_len, block_tables, k_scale, v_scale, q, k_pool, v_pool)`` (MLA:
+    ``fn(kv_len, block_tables, c_scale, q, c_pool)``), each scale shaped
+    ``(P,)``.  Scales ride the scalar-prefetch tier; the kernel multiplies
+    each staged KV tile by its page's scale (one scalar per tile — BN
+    divides PAGE_SIZE, so a tile never spans two scales) before QK^T.
+
     Split-KV programs (``params['NUM_SPLITS'] > 1`` — decode mode) keep
     the same call signature but change the launch: the KV tiles are
     partitioned into ``NUM_SPLITS`` page-aligned slices riding a
@@ -182,6 +191,12 @@ def translate_pallas(
     chunked = bool(prog.meta.get("chunk_prefill") or p.get("KV_CHUNK"))
     page = int(p["PAGE_SIZE"]) if paged else None
     mpp = page // bn if paged else None     # KV tiles per page (BN | PAGE_SIZE)
+    # Quantized KV pages: the pools hold int8, one f32 absmax scale per
+    # physical page rides the scalar-prefetch tier after the block table,
+    # and the Copy g->s materialisation dequantizes the tile before QK^T.
+    kv_quant = bool(prog.meta.get("kv_quant") or p.get("KV_QUANT"))
+    mla = "C" in prog.inputs
+    quant_names = (("C",) if mla else ("K", "V")) if kv_quant else ()
     # split-KV decode (Flash-Decoding): NUM_SPLITS parallel KV partitions,
     # re-derived through the same fixed-point layout the reasoning stage
     # used (whole tiles; page-aligned in paged layouts)
@@ -193,7 +208,6 @@ def translate_pallas(
     out_dtype = _JDTYPE[allocs[out_name].dtype]
     in_dtype = _JDTYPE[allocs[prog.inputs[0]].dtype]
     dv = prog.resolve(allocs[out_name].shape[1])
-    mla = "C" in prog.inputs
     lane = int(p.get("LANE", 128))
     q_off = int(p.get("QOFF", 0))
     causal = any(
@@ -206,11 +220,20 @@ def translate_pallas(
 
         def kernel(*refs):
             kv_len = None
+            scale_refs = {}
+            brow = None
             if paged:
                 # scalar-prefetch tier: full (B,) lens + (B, Tp) table in
-                # SMEM; the table is consumed by the BlockSpec index maps
+                # SMEM; the table is consumed by the BlockSpec index maps.
+                # Quantized pools add one (P,) f32 scale vector per pool,
+                # gathered per page through the same table.
                 lens_ref, _table_ref, *refs = refs
-                kv_len = lens_ref[pl.program_id(0) // hq]
+                if kv_quant:
+                    srefs, refs = refs[:len(quant_names)], \
+                        refs[len(quant_names):]
+                    scale_refs = dict(zip(quant_names, srefs))
+                brow = pl.program_id(0) // hq
+                kv_len = lens_ref[brow]
             elif runtime_kv:
                 # the (1, 1) SMEM tile the BlockSpec indexed to this row
                 kv_ref, *refs = refs
@@ -263,7 +286,15 @@ def translate_pallas(
                         # Copy g->s: the BlockSpec already staged the tile
                         # into VMEM; materialise it into the trace env.
                         ref = env[nm + "__ref"]
-                        env[nm] = ref[...].reshape(ref.shape[-2:])
+                        tile = ref[...].reshape(ref.shape[-2:])
+                        if nm in scale_refs:
+                            # int8 page dequant: every row of this KV tile
+                            # lives in one physical page (BN | PAGE_SIZE),
+                            # so one scalar scale covers the whole tile
+                            s_pg = scale_refs[nm][_table_ref[brow,
+                                                             ki // mpp]]
+                            tile = tile.astype(jnp.float32) * s_pg
+                        env[nm] = tile
                     elif s.dst is MemSpace.GLOBAL:
                         val = env[nm].astype(out_dtype)
                         o_ref[...] = val.reshape(o_ref.shape)
@@ -434,8 +465,12 @@ def translate_pallas(
     # ---- BlockSpecs from the TL Copy statements ------------------------------
     def build(*operands):
         kv_len_arg = table_arg = None
+        scale_args = ()
         if paged:
             kv_len_arg, table_arg, *operands = operands
+            if kv_quant:
+                scale_args = tuple(operands[:len(quant_names)])
+                operands = operands[len(quant_names):]
         elif runtime_kv:
             kv_len_arg, *operands = operands
         q, *kv = operands
@@ -488,10 +523,10 @@ def translate_pallas(
                                      f"!= PAGE_SIZE={page}")
                 in_specs = [
                     pl.BlockSpec((1, 1, bm, dqk),
-                                 mk(lambda bh, qi, ki, lens, tbl:
+                                 mk(lambda bh, qi, ki, lens, tbl, *sc:
                                     (bh // hq, bh % hq, qi, 0))),
                     pl.BlockSpec((1, bn, dqk),
-                                 mk(lambda bh, qi, ki, lens, tbl:
+                                 mk(lambda bh, qi, ki, lens, tbl, *sc:
                                     (kv_page(tbl, bh // hq, ki),
                                      ki % mpp, 0))),
                 ]
@@ -517,14 +552,14 @@ def translate_pallas(
                                      f"PAGE_SIZE={page}")
                 in_specs = [
                     pl.BlockSpec((1, 1, bm, dqk),
-                                 mk(lambda bh, qi, ki, lens, tbl:
+                                 mk(lambda bh, qi, ki, lens, tbl, *sc:
                                     (bh // hq, bh % hq, qi, 0))),
                     pl.BlockSpec((1, 1, bn, dqk),
-                                 mk(lambda bh, qi, ki, lens, tbl:
+                                 mk(lambda bh, qi, ki, lens, tbl, *sc:
                                     (kv_page(tbl, bh // hq, ki),
                                      (bh % hq) // qpk, ki % mpp, 0))),
                     pl.BlockSpec((1, 1, bn, v.shape[-1]),
-                                 mk(lambda bh, qi, ki, lens, tbl:
+                                 mk(lambda bh, qi, ki, lens, tbl, *sc:
                                     (kv_page(tbl, bh // hq, ki),
                                      (bh % hq) // qpk, ki % mpp, 0))),
                 ]
@@ -613,8 +648,18 @@ def translate_pallas(
         if paged:
             lens = jnp.asarray(kv_len_arg, jnp.int32).reshape(-1)
             lens = jnp.broadcast_to(lens, (bsz,))
+            scales = ()
+            if kv_quant:
+                npool = args[1].shape[0]
+                scales = tuple(jnp.asarray(s, jnp.float32).reshape(-1)
+                               for s in scale_args)
+                for s in scales:
+                    if s.shape[0] != npool:
+                        raise ValueError(
+                            f"page scale vector has {s.shape[0]} rows; the "
+                            f"pool has {npool} pages")
             grid_spec = pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=2,
+                num_scalar_prefetch=2 + len(scales),
                 grid=grid,
                 in_specs=in_specs,
                 out_specs=out_specs,
@@ -628,7 +673,7 @@ def translate_pallas(
                 debug=debug,
                 **kwargs,
             )
-            out = call(lens, table, *args)
+            out = call(lens, table, *scales, *args)
             return combine(out) if split else out
 
         if runtime_kv:
@@ -662,4 +707,5 @@ def translate_pallas(
     build.page_size = page
     build.chunk_prefill = chunked
     build.num_splits = ns
+    build.kv_quant = kv_quant
     return build

@@ -38,6 +38,27 @@ def _variant(hq: int, hkv: int) -> str:
     return "gqa"
 
 
+def _quant_args(pool, scales):
+    """Detect an int8-quantized page pool and normalise its per-page
+    scales.  Returns ``(kv_dtype, scale_args)``: the spec's layout flag
+    plus the f32 scale vectors to pass between the block table and the
+    regular kernel operands (see ``translate_pallas``).  ``scales`` is a
+    single ``(P,)`` array (MLA latent pool) or a (k_scale, v_scale)
+    tuple; a float pool takes no scales."""
+    if pool.dtype != jnp.int8:
+        if scales is not None:
+            raise ValueError("per-page scales supplied for a non-int8 "
+                             f"pool of dtype {pool.dtype}")
+        return None, ()
+    if scales is None:
+        raise ValueError("int8 page pools need per-page absmax scales "
+                         "(kv_scales= / c_scale=)")
+    if not isinstance(scales, (tuple, list)):
+        scales = (scales,)
+    return "int8", tuple(jnp.asarray(s, jnp.float32).reshape(-1)
+                         for s in scales)
+
+
 def flash_attention(
     q, k, v, *,
     causal: bool = True,
@@ -152,6 +173,7 @@ def flash_decode(
 def paged_flash_decode(
     q, k_pool, v_pool, block_tables, *,
     cache_len=None,
+    kv_scales=None,
     num_splits: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
@@ -164,6 +186,10 @@ def paged_flash_decode(
     row's ``ceil(cache_len / page_size)`` used pages must still be valid
     pool indices — pad with a reserved page).  ``cache_len`` follows
     :func:`flash_decode` (int / traced scalar / per-request (B,) vector).
+
+    ``kv_scales``: required iff the pools are int8 — a ``(k_scale,
+    v_scale)`` pair of per-page ``(P,)`` f32 absmax scales; the kernel
+    dequantizes each gathered page tile before QK^T.
 
     The kernel is compiled once per *bucket capacity* ``Tp * page_size``
     and per page size — never per pool size P, cache length, or table
@@ -179,23 +205,25 @@ def paged_flash_decode(
     bucket = tbl.shape[-1] * ps
     g = hq // hkv
     q_rows = q.reshape(b, hkv, g, d)
+    kv_dt, scales = _quant_args(k_pool, kv_scales)
     spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
                     head_dim=d, causal=False, mode="decode",
-                    dtype=_DT[q.dtype], page_size=ps)
+                    dtype=_DT[q.dtype], page_size=ps, kv_dtype=kv_dt)
     splits = resolve_num_splits(num_splits, rows=b * hkv,
                                 kv_len=bucket, page_size=ps,
                                 target=target)
     kern = cached_kernel(spec, g, bucket, target, interpret, False, splits)
     qp = _pad_rows(q_rows, 2, kern.blocks.bm)
     lens = _norm_cache_len(cache_len, b, bucket)
-    out = kern.pallas_fn(lens, tbl, qp, k_pool, v_pool)   # (B, Hkv, Gpad, D)
-    return out[:, :, :g, :].reshape(b, hq, 1, d)
+    out = kern.pallas_fn(lens, tbl, *scales, qp, k_pool, v_pool)
+    return out[:, :, :g, :].reshape(b, hq, 1, d)          # (B, Hkv, Gpad, D)
 
 
 def paged_flash_prefill(
     q, k_pool, v_pool, block_tables, *,
     hist_len,
     chunk_cap: Optional[int] = None,
+    kv_scales=None,
     interpret: bool = True,
     target: str = "v5e",
 ):
@@ -229,13 +257,15 @@ def paged_flash_prefill(
     cap = q.shape[2]
     tbl = jnp.asarray(block_tables, jnp.int32)
     bucket = tbl.shape[-1] * ps
+    kv_dt, scales = _quant_args(k_pool, kv_scales)
     spec = AttnSpec(variant=_variant(hq, hkv), num_q_heads=hq,
                     num_kv_heads=hkv, head_dim=d, causal=True,
-                    mode="chunk_prefill", dtype=_DT[q.dtype], page_size=ps)
+                    mode="chunk_prefill", dtype=_DT[q.dtype], page_size=ps,
+                    kv_dtype=kv_dt)
     kern = cached_kernel(spec, cap, bucket, target, interpret, True)
     qp = _pad_rows(q, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
-    out = kern.pallas_fn(lens, tbl, qp, k_pool, v_pool)
+    out = kern.pallas_fn(lens, tbl, *scales, qp, k_pool, v_pool)
     return out[:, :, :c, :]
 
 
@@ -243,6 +273,7 @@ def paged_mla_prefill(
     q_latent, c_pool, block_tables, *,
     hist_len,
     chunk_cap: Optional[int] = None,
+    c_scale=None,
     interpret: bool = True,
     target: str = "v5e",
     kv_lora_rank: int = 512,
@@ -250,7 +281,9 @@ def paged_mla_prefill(
 ):
     """One prompt chunk of causal MLA attention against a paged latent
     cache.  q_latent: (B, H, C, R+Rr); ``c_pool``/``block_tables``/
-    ``hist_len``/``chunk_cap`` follow :func:`paged_flash_prefill`."""
+    ``hist_len``/``chunk_cap`` follow :func:`paged_flash_prefill`;
+    ``c_scale`` is the (P,) f32 per-page scale vector, required iff the
+    latent pool is int8."""
     b, h, c, dq = q_latent.shape
     ps = c_pool.shape[1]
     if chunk_cap is not None:
@@ -260,13 +293,14 @@ def paged_mla_prefill(
     cap = q_latent.shape[2]
     tbl = jnp.asarray(block_tables, jnp.int32)
     bucket = tbl.shape[-1] * ps
+    kv_dt, scales = _quant_args(c_pool, c_scale)
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=True,
                         mode="chunk_prefill", dtype=_DT[q_latent.dtype],
-                        page_size=ps)
+                        page_size=ps, kv_dtype=kv_dt)
     kern = cached_kernel(spec, cap, bucket, target, interpret, True)
     qp = _pad_rows(q_latent, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
-    out = kern.pallas_fn(lens, tbl, qp, c_pool)
+    out = kern.pallas_fn(lens, tbl, *scales, qp, c_pool)
     return out[:, :, :c, :]
 
 
@@ -274,6 +308,7 @@ def paged_flash_verify(
     q, k_pool, v_pool, block_tables, *,
     hist_len,
     chunk_cap: Optional[int] = None,
+    kv_scales=None,
     num_splits: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
@@ -305,15 +340,17 @@ def paged_flash_verify(
     cap = q.shape[2]
     tbl = jnp.asarray(block_tables, jnp.int32)
     bucket = tbl.shape[-1] * ps
+    kv_dt, scales = _quant_args(k_pool, kv_scales)
     spec = AttnSpec(variant=_variant(hq, hkv), num_q_heads=hq,
                     num_kv_heads=hkv, head_dim=d, causal=True,
-                    mode="verify", dtype=_DT[q.dtype], page_size=ps)
+                    mode="verify", dtype=_DT[q.dtype], page_size=ps,
+                    kv_dtype=kv_dt)
     splits = resolve_num_splits(num_splits, rows=b * hq, kv_len=bucket,
                                 mode="verify", page_size=ps, target=target)
     kern = cached_kernel(spec, cap, bucket, target, interpret, True, splits)
     qp = _pad_rows(q, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
-    out = kern.pallas_fn(lens, tbl, qp, k_pool, v_pool)
+    out = kern.pallas_fn(lens, tbl, *scales, qp, k_pool, v_pool)
     return out[:, :, :c, :]
 
 
@@ -321,6 +358,7 @@ def paged_mla_verify(
     q_latent, c_pool, block_tables, *,
     hist_len,
     chunk_cap: Optional[int] = None,
+    c_scale=None,
     num_splits: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
@@ -340,21 +378,23 @@ def paged_mla_verify(
     cap = q_latent.shape[2]
     tbl = jnp.asarray(block_tables, jnp.int32)
     bucket = tbl.shape[-1] * ps
+    kv_dt, scales = _quant_args(c_pool, c_scale)
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=True,
                         mode="verify", dtype=_DT[q_latent.dtype],
-                        page_size=ps)
+                        page_size=ps, kv_dtype=kv_dt)
     splits = resolve_num_splits(num_splits, rows=b * h, kv_len=bucket,
                                 mode="verify", page_size=ps, target=target)
     kern = cached_kernel(spec, cap, bucket, target, interpret, True, splits)
     qp = _pad_rows(q_latent, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
-    out = kern.pallas_fn(lens, tbl, qp, c_pool)
+    out = kern.pallas_fn(lens, tbl, *scales, qp, c_pool)
     return out[:, :, :c, :]
 
 
 def paged_mla_decode(
     q_latent, c_pool, block_tables, *,
     cache_len=None,
+    c_scale=None,
     num_splits: Optional[int] = None,
     interpret: bool = True,
     target: str = "v5e",
@@ -374,9 +414,10 @@ def paged_mla_decode(
     ps = c_pool.shape[1]
     tbl = jnp.asarray(block_tables, jnp.int32)
     bucket = tbl.shape[-1] * ps
+    kv_dt, scales = _quant_args(c_pool, c_scale)
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=False,
                         mode="decode", dtype=_DT[q_latent.dtype],
-                        page_size=ps)
+                        page_size=ps, kv_dtype=kv_dt)
     splits = resolve_num_splits(num_splits, rows=b, kv_len=bucket,
                                 page_size=ps, target=target)
     kern = cached_kernel(spec, h, bucket, target, interpret, False, splits)
@@ -384,7 +425,7 @@ def paged_mla_decode(
     q_rows = q_latent.reshape(b, 1, h, dq)
     qp = _pad_rows(q_rows, 2, kern.blocks.bm)
     lens = _norm_cache_len(cache_len, b, bucket)
-    out = kern.pallas_fn(lens, tbl, qp, c_pool)           # (B, 1, Hpad, R)
+    out = kern.pallas_fn(lens, tbl, *scales, qp, c_pool)  # (B, 1, Hpad, R)
     return out[:, 0, :h, :].reshape(b, h, 1, kv_lora_rank)
 
 

@@ -171,7 +171,17 @@ def _resolve_splits(num_splits, *, rows: int, kv_len: int,
 # paged KV cache (decode)
 # --------------------------------------------------------------------------
 
-def gather_pages(pool, tables):
+def _deq(gathered, tables, scale):
+    """Dequantize a page gather: ``gathered`` is ``pool[tables]`` with
+    leading (B, Tp) axes; ``scale`` the (P,) f32 per-page absmax table.
+    One scalar per page — the same contract the Pallas kernel applies per
+    KV tile inside its inner loop."""
+    s = jnp.asarray(scale, jnp.float32).reshape(-1)[tables]       # (B, Tp)
+    return (gathered.astype(jnp.float32)
+            * s.reshape(s.shape + (1,) * (gathered.ndim - 2)))
+
+
+def gather_pages(pool, tables, scale=None):
     """Materialise the dense per-row cache view of a page pool.
 
     ``pool``: (P, Hkv, ps, D) KV pool or (P, ps, D) MLA latent pool;
@@ -179,13 +189,27 @@ def gather_pages(pool, tables):
     (B, Hkv, Tp*ps, D) / (B, Tp*ps, D).  This is the *definition* of the
     paged layout — the Pallas kernel's block-table gather must agree with
     it, and the XLA/naive decode fallbacks attend through it directly.
+    ``scale``: (P,) f32 per-page absmax scales for an int8 pool — the
+    gather dequantizes to f32 on the way out.
     """
     g = pool[tables]                                  # (B, Tp, ...)
+    if scale is not None:
+        g = _deq(g, tables, scale)
     if pool.ndim == 4:
         b, tp, hkv, ps, d = g.shape
         return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, tp * ps, d)
     b, tp, ps, d = g.shape
     return g.reshape(b, tp * ps, d)
+
+
+def gather_prechunked(pool, tables, scale=None):
+    """Page gather in :func:`xla_flash`'s ``prechunked`` operand layout —
+    one scan chunk per page, (Tp, B, ..., ps, D) — dequantizing int8
+    pools (``scale``: (P,) f32) on the way."""
+    g = pool[tables]
+    if scale is not None:
+        g = _deq(g, tables, scale)
+    return jnp.moveaxis(g, 1, 0)
 
 
 def paged_scatter(pool, tables, pos, new):
@@ -247,53 +271,144 @@ def paged_scatter_chunk(pool, tables, start, new, valid=None):
     return pool.at[pages, slots].set(upd)
 
 
+# int8 page quantization: symmetric absmax, one f32 scale per *page*.
+_QMAX = 127.0     # int8 range used symmetrically (-127..127; -128 unused)
+_QTINY = 1e-30    # guards 0-divide on never-written (scale 0.0) pages
+
+
+def _quant_rescale(pool, scale, pages, amax):
+    """Shared write-side scale bookkeeping.  ``pages``/``amax`` are the
+    flat pages being written and the absmax of each write.  Grows the
+    per-page running-max scales, renormalises the pool's existing int8
+    content wherever a scale grew (ratio multiply + round — the ratio is
+    exactly 1.0 for untouched pages, so only written pages can move), and
+    returns ``(pool, grown_scales)``."""
+    old = jnp.asarray(scale, jnp.float32).reshape(-1)
+    grown = old.at[pages.reshape(-1)].max(amax.reshape(-1) / _QMAX)
+    ratio = jnp.where(grown > old, old / jnp.maximum(grown, _QTINY), 1.0)
+    rsh = ratio.reshape((-1,) + (1,) * (pool.ndim - 1))
+    pool = jnp.round(pool.astype(jnp.float32) * rsh).astype(jnp.int8)
+    return pool, grown
+
+
+def _quantize(new32, s_tok):
+    """Quantize f32 values against their pages' (broadcast) scales."""
+    s = jnp.maximum(s_tok, _QTINY)
+    s = s.reshape(s.shape + (1,) * (new32.ndim - s.ndim))
+    return jnp.clip(jnp.round(new32 / s), -_QMAX, _QMAX).astype(jnp.int8)
+
+
+def paged_scatter_quant(pool, tables, pos, new, *, scale):
+    """Quantizing :func:`paged_scatter` for int8 page pools.
+
+    ``pool``: int8 (P, Hkv, ps, D) / (P, ps, D); ``scale``: (P,) f32
+    per-page absmax scales (dequant value = int8 * scale).  Scales are a
+    *running max*: a token whose absmax exceeds ``127 * scale`` of its
+    page grows that page's scale, renormalising the page's existing int8
+    content to the new scale before the token is quantized in (bounded
+    requantization error ≤ half a quantum of the grown scale).  Returns
+    ``(pool, scale)`` — the caller threads both through the cache."""
+    ps = pool.shape[-2]
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    pages = jnp.take_along_axis(
+        jnp.asarray(tables, jnp.int32), (pos // ps)[:, None], axis=1)[:, 0]
+    new32 = jnp.asarray(new, jnp.float32)
+    amax = jnp.abs(new32).reshape(new32.shape[0], -1).max(axis=1)   # (B,)
+    pool, grown = _quant_rescale(pool, scale, pages, amax)
+    q = _quantize(new32, grown[pages])
+    if pool.ndim == 4:
+        return pool.at[pages, :, pos % ps].set(q), grown
+    return pool.at[pages, pos % ps].set(q), grown
+
+
+def paged_scatter_chunk_quant(pool, tables, start, new, *, scale, valid=None):
+    """Quantizing :func:`paged_scatter_chunk`.  ``scale``/``valid`` follow
+    :func:`paged_scatter_quant` / :func:`paged_scatter_chunk`; positions
+    past ``valid`` neither write the pool nor bump any page's scale (a
+    padded tail chunk may not touch pages another request already owns).
+    Returns ``(pool, scale)``."""
+    ps = pool.shape[-2]
+    c = new.shape[-2]
+    start = jnp.asarray(start, jnp.int32).reshape(-1)
+    pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # (B, C)
+    pages = jnp.take_along_axis(jnp.asarray(tables, jnp.int32),
+                                pos // ps, axis=1)                  # (B, C)
+    slots = pos % ps
+    keep = None
+    if valid is not None:
+        keep = (jnp.arange(c, dtype=jnp.int32)[None, :]
+                < jnp.asarray(valid, jnp.int32).reshape(-1)[:, None])
+    new32 = jnp.asarray(new, jnp.float32)
+    upd = jnp.moveaxis(new32, 1, 2) if pool.ndim == 4 else new32
+    amax = jnp.abs(upd).reshape(upd.shape[0], c, -1).max(axis=-1)   # (B, C)
+    if keep is not None:
+        amax = jnp.where(keep, amax, 0.0)
+    pool, grown = _quant_rescale(pool, scale, pages, amax)
+    q = _quantize(upd, grown[pages])
+    if pool.ndim == 4:
+        if keep is not None:
+            q = jnp.where(keep[..., None, None], q, pool[pages, :, slots])
+        return pool.at[pages, :, slots].set(q), grown
+    if keep is not None:
+        q = jnp.where(keep[..., None], q, pool[pages, slots])
+    return pool.at[pages, slots].set(q), grown
+
+
 def run_paged_prefill(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
-                      hist_len, scale: float):
+                      hist_len, scale: float, kv_scales=None):
     """Chunked prefill attention through a block table: the chunk's q rows
     attend causally to the pages already written (history + the chunk
     itself — scatter first, then attend).  ``hist_len`` is the per-row
     cache length *before* this chunk.  Pallas shifts the causal diagonal
     by the runtime history inside the kernel; the XLA/naive paths feed the
     page gather into the flash scan, whose bottom-right alignment
-    (``q_off = kv_valid - M``) lands on the same diagonal."""
+    (``q_off = kv_valid - M``) lands on the same diagonal.
+    ``kv_scales``: ``(k_scale, v_scale)`` per-page (P,) f32 absmax scales
+    iff the pools are int8 — Pallas dequantizes inside its KV loop, the
+    fallbacks dequantize the page gather."""
     c = q.shape[2]
+    ks, vs = kv_scales if kv_scales is not None else (None, None)
     if cfg.attn_impl == "tl_pallas":
         from ..kernels import ops
         return ops.paged_flash_prefill(
-            q, k_pool, v_pool, tables, hist_len=hist_len).astype(q.dtype)
+            q, k_pool, v_pool, tables, hist_len=hist_len,
+            kv_scales=kv_scales).astype(q.dtype)
     kv_valid = jnp.asarray(hist_len).reshape(-1) + c
     if cfg.attn_impl == "naive":
-        return naive_attention(q, gather_pages(k_pool, tables),
-                               gather_pages(v_pool, tables),
+        return naive_attention(q, gather_pages(k_pool, tables, ks),
+                               gather_pages(v_pool, tables, vs),
                                causal=True, scale=scale, kv_valid=kv_valid)
-    kc = jnp.moveaxis(k_pool[tables], 1, 0)     # (tp, B, Hkv, ps, D)
-    vc = jnp.moveaxis(v_pool[tables], 1, 0)
+    kc = gather_prechunked(k_pool, tables, ks)  # (tp, B, Hkv, ps, D)
+    vc = gather_prechunked(v_pool, tables, vs)
     return xla_flash(q, kc, vc, causal=True, scale=scale, kv_valid=kv_valid,
                      prechunked=True)
 
 
 def run_paged_verify(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
-                     hist_len, scale: float, num_splits=None):
+                     hist_len, scale: float, num_splits=None,
+                     kv_scales=None):
     """Speculative-decode verification through a block table: the K+1
     candidate rows (committed token + drafts, K/V already scattered)
     attend causally to history + themselves, like
     :func:`run_paged_prefill`, but the TL mode is ``verify`` — decode's
     split-KV partitioning rides on top of the chunk tiling for long
     caches.  ``num_splits`` follows :func:`run_paged_decode` (None =
-    reasoned per backend via the autotuner's split scoring)."""
+    reasoned per backend via the autotuner's split scoring);
+    ``kv_scales`` follows :func:`run_paged_prefill`."""
     c = q.shape[2]
+    ks, vs = kv_scales if kv_scales is not None else (None, None)
     if cfg.attn_impl == "tl_pallas":
         from ..kernels import ops
         return ops.paged_flash_verify(
             q, k_pool, v_pool, tables, hist_len=hist_len,
-            num_splits=num_splits).astype(q.dtype)
+            num_splits=num_splits, kv_scales=kv_scales).astype(q.dtype)
     kv_valid = jnp.asarray(hist_len).reshape(-1) + c
     if cfg.attn_impl == "naive":
-        return naive_attention(q, gather_pages(k_pool, tables),
-                               gather_pages(v_pool, tables),
+        return naive_attention(q, gather_pages(k_pool, tables, ks),
+                               gather_pages(v_pool, tables, vs),
                                causal=True, scale=scale, kv_valid=kv_valid)
-    kc = jnp.moveaxis(k_pool[tables], 1, 0)     # (tp, B, Hkv, ps, D)
-    vc = jnp.moveaxis(v_pool[tables], 1, 0)
+    kc = gather_prechunked(k_pool, tables, ks)  # (tp, B, Hkv, ps, D)
+    vc = gather_prechunked(v_pool, tables, vs)
     ps = k_pool.shape[-2]
     return xla_flash(q, kc, vc, causal=True, scale=scale, kv_valid=kv_valid,
                      prechunked=True,
@@ -304,7 +419,8 @@ def run_paged_verify(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
 
 
 def run_paged_decode(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
-                     cache_len, scale: float, num_splits=None):
+                     cache_len, scale: float, num_splits=None,
+                     kv_scales=None):
     """Decode attention through a block table (see :func:`gather_pages`).
 
     The Pallas kernel gathers pages inside its BlockSpec DMAs; the XLA
@@ -312,18 +428,20 @@ def run_paged_decode(q, k_pool, v_pool, tables, *, cfg: ModelConfig,
     per page (``prechunked``), so neither materialises the dense
     ``(B, Hkv, N, D)`` cache view.  ``num_splits``: split-KV decode —
     None lets the reasoning heuristic decide per backend, 1 forces the
-    sequential KV pass, >1 forces that many (clamped) splits."""
+    sequential KV pass, >1 forces that many (clamped) splits.
+    ``kv_scales`` follows :func:`run_paged_prefill`."""
+    ks, vs = kv_scales if kv_scales is not None else (None, None)
     if cfg.attn_impl == "tl_pallas":
         from ..kernels import ops
         return ops.paged_flash_decode(
             q, k_pool, v_pool, tables, cache_len=cache_len,
-            num_splits=num_splits).astype(q.dtype)
+            num_splits=num_splits, kv_scales=kv_scales).astype(q.dtype)
     if cfg.attn_impl == "naive":
-        return naive_attention(q, gather_pages(k_pool, tables),
-                               gather_pages(v_pool, tables),
+        return naive_attention(q, gather_pages(k_pool, tables, ks),
+                               gather_pages(v_pool, tables, vs),
                                causal=False, scale=scale, kv_valid=cache_len)
-    kc = jnp.moveaxis(k_pool[tables], 1, 0)     # (tp, B, Hkv, ps, D)
-    vc = jnp.moveaxis(v_pool[tables], 1, 0)
+    kc = gather_prechunked(k_pool, tables, ks)  # (tp, B, Hkv, ps, D)
+    vc = gather_prechunked(v_pool, tables, vs)
     ps = k_pool.shape[-2]
     return xla_flash(q, kc, vc, causal=False, scale=scale, kv_valid=cache_len,
                      prechunked=True,
@@ -470,29 +588,58 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
         hist = cache["len"]
         tp = ((kv_bucket if kv_bucket is not None
                else block_tables.shape[1] * page_size) // page_size)
+        # int8-quantized pools carry per-page scale leaves ("ks"/"vs");
+        # the quantizing scatter threads them, attention dequantizes
+        quant = "ks" in cache
+        scales = None
         if t == 1:
-            kp = paged_scatter(cache["k"], block_tables, hist, k[:, :, 0])
-            vp = paged_scatter(cache["v"], block_tables, hist, v[:, :, 0])
+            if quant:
+                kp, ksc = paged_scatter_quant(cache["k"], block_tables,
+                                              hist, k[:, :, 0],
+                                              scale=cache["ks"])
+                vp, vsc = paged_scatter_quant(cache["v"], block_tables,
+                                              hist, v[:, :, 0],
+                                              scale=cache["vs"])
+                scales = (ksc, vsc)
+            else:
+                kp = paged_scatter(cache["k"], block_tables, hist,
+                                   k[:, :, 0])
+                vp = paged_scatter(cache["v"], block_tables, hist,
+                                   v[:, :, 0])
             cache = {"k": kp, "v": vp, "len": hist + t}
+            if quant:
+                cache["ks"], cache["vs"] = scales
             kv_valid = cache["len"]
             o = run_paged_decode(q, kp, vp, block_tables[:, :tp], cfg=cfg,
                                  cache_len=kv_valid, scale=hd ** -0.5,
-                                 num_splits=num_splits)
+                                 num_splits=num_splits, kv_scales=scales)
         else:
-            kp = paged_scatter_chunk(cache["k"], block_tables, hist, k,
-                                     valid=chunk_valid)
-            vp = paged_scatter_chunk(cache["v"], block_tables, hist, v,
-                                     valid=chunk_valid)
+            if quant:
+                kp, ksc = paged_scatter_chunk_quant(
+                    cache["k"], block_tables, hist, k,
+                    scale=cache["ks"], valid=chunk_valid)
+                vp, vsc = paged_scatter_chunk_quant(
+                    cache["v"], block_tables, hist, v,
+                    scale=cache["vs"], valid=chunk_valid)
+                scales = (ksc, vsc)
+            else:
+                kp = paged_scatter_chunk(cache["k"], block_tables, hist, k,
+                                         valid=chunk_valid)
+                vp = paged_scatter_chunk(cache["v"], block_tables, hist, v,
+                                         valid=chunk_valid)
             cache = {"k": kp, "v": vp, "len": hist + t}
+            if quant:
+                cache["ks"], cache["vs"] = scales
             if verify:
                 o = run_paged_verify(q, kp, vp, block_tables[:, :tp],
                                      cfg=cfg, hist_len=hist,
                                      scale=hd ** -0.5,
-                                     num_splits=num_splits)
+                                     num_splits=num_splits,
+                                     kv_scales=scales)
             else:
                 o = run_paged_prefill(q, kp, vp, block_tables[:, :tp],
                                       cfg=cfg, hist_len=hist,
-                                      scale=hd ** -0.5)
+                                      scale=hd ** -0.5, kv_scales=scales)
     elif cache is not None:
         # decode: append new kv at cache['len'] (per-request positions for
         # heterogeneous batches), attend to the prefix
@@ -626,13 +773,27 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             raise ValueError("block_tables given without page_size — the "
                              "paged cache layout needs both")
         hist = cache["len"]
+        quant = "cs" in cache   # int8 latent pool + per-page scale leaf
+        c_scale = None
         if t == 1:
-            pool = paged_scatter(cache["c"], block_tables, hist,
-                                 latent[:, 0])
+            if quant:
+                pool, c_scale = paged_scatter_quant(
+                    cache["c"], block_tables, hist, latent[:, 0],
+                    scale=cache["cs"])
+            else:
+                pool = paged_scatter(cache["c"], block_tables, hist,
+                                     latent[:, 0])
         else:   # one chunk of chunked prefill
-            pool = paged_scatter_chunk(cache["c"], block_tables, hist,
-                                       latent, valid=chunk_valid)
+            if quant:
+                pool, c_scale = paged_scatter_chunk_quant(
+                    cache["c"], block_tables, hist, latent,
+                    scale=cache["cs"], valid=chunk_valid)
+            else:
+                pool = paged_scatter_chunk(cache["c"], block_tables, hist,
+                                           latent, valid=chunk_valid)
         cache = {"c": pool, "len": hist + t}
+        if quant:
+            cache["cs"] = c_scale
         kv_valid = cache["len"]
     elif cache is not None:
         latent = _cache_append(cache["c"], latent, cache["len"], 1)
@@ -651,23 +812,27 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             if t == 1:
                 o_lat = ops.paged_mla_decode(q_full, pool, tbl,
                                              cache_len=kv_valid,
+                                             c_scale=c_scale,
                                              num_splits=num_splits,
                                              kv_lora_rank=r,
                                              rope_head_dim=rr)
             elif verify:
                 o_lat = ops.paged_mla_verify(q_full, pool, tbl,
                                              hist_len=hist,
+                                             c_scale=c_scale,
                                              num_splits=num_splits,
                                              kv_lora_rank=r,
                                              rope_head_dim=rr)
             else:
                 o_lat = ops.paged_mla_prefill(q_full, pool, tbl,
                                               hist_len=hist,
+                                              c_scale=c_scale,
                                               kv_lora_rank=r,
                                               rope_head_dim=rr)
         else:
             # page gather straight into the flash scan: one chunk per page
-            lat = jnp.moveaxis(pool[tbl], 1, 0)[:, :, None]  # (tp,B,1,ps,R+Rr)
+            # (dequantizing an int8 latent pool on the way)
+            lat = gather_prechunked(pool, tbl, c_scale)[:, :, None]
             ps = pool.shape[-2]
             splits = 1
             if t == 1:

@@ -366,7 +366,7 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
                 paged: bool = False, page_size: int = 64,
-                num_pages: Optional[int] = None):
+                num_pages: Optional[int] = None, kv_quant: bool = False):
     """Decode caches, stacked over periods for the scanned blocks.
 
     Cache entries do NOT carry the running length — pass ``cache_len`` to
@@ -378,11 +378,21 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
     through the ``block_tables`` argument of :func:`apply`.  HBM is then
     reserved per *pool*, not per ``batch x max_len`` slot; recurrent /
     cross-attention state stays per-row (it is O(1) in sequence length).
+
+    ``kv_quant=True`` (paged only) stores the pools as symmetric int8
+    with one f32 absmax scale per page — extra ``(num_pages,)`` leaves
+    ``"ks"``/``"vs"`` (``"cs"`` for MLA) next to the pools.  The
+    attention layer quantizes on scatter and dequantizes per page inside
+    the kernel's KV loop; Q/O/compute dtypes are unchanged, so the cache
+    footprint drops ~2x (bf16) / ~4x (f32) for a bounded dequant error.
     """
     kinds, nper = period_spec(cfg)
     dt = layers.jdtype(cfg.dtype)
     if paged and num_pages is None:
         raise ValueError("paged caches need num_pages (the pool capacity)")
+    if kv_quant and not paged:
+        raise ValueError("kv_quant is a paged-pool contract (per-page "
+                         "absmax scales); pass paged=True")
 
     def one_cache(kind):
         if kind == "cross":
@@ -392,14 +402,22 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
                                     cfg.num_patches, cfg.head_dim), dt)}
         if kind in ("attn", "self"):
             if paged:
+                pdt = jnp.int8 if kv_quant else dt
                 if cfg.mla:
-                    return {"c": jnp.zeros(
+                    c = {"c": jnp.zeros(
                         (num_pages, page_size,
-                         cfg.kv_lora_rank + cfg.rope_head_dim), dt)}
-                return {"k": jnp.zeros((num_pages, cfg.num_kv_heads,
-                                        page_size, cfg.head_dim), dt),
-                        "v": jnp.zeros((num_pages, cfg.num_kv_heads,
-                                        page_size, cfg.head_dim), dt)}
+                         cfg.kv_lora_rank + cfg.rope_head_dim), pdt)}
+                    if kv_quant:
+                        c["cs"] = jnp.zeros((num_pages,), jnp.float32)
+                    return c
+                c = {"k": jnp.zeros((num_pages, cfg.num_kv_heads,
+                                     page_size, cfg.head_dim), pdt),
+                     "v": jnp.zeros((num_pages, cfg.num_kv_heads,
+                                     page_size, cfg.head_dim), pdt)}
+                if kv_quant:
+                    c["ks"] = jnp.zeros((num_pages,), jnp.float32)
+                    c["vs"] = jnp.zeros((num_pages,), jnp.float32)
+                return c
             if cfg.mla:
                 return {"c": jnp.zeros(
                     (batch, max_len, cfg.kv_lora_rank + cfg.rope_head_dim), dt)}

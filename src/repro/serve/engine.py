@@ -167,6 +167,14 @@ class PageAllocator:
         self._children: dict[int, set] = {}      # parent node -> indexed pages
         self.alloc_count = 0                     # pages ever handed out
         self.evictions = 0                       # cache entries reclaimed
+        # int8-quantized pools: host mirror of the per-page absmax scale
+        # rows (the device truth lives in the cache's "ks"/"vs"/"cs"
+        # leaves).  Lifecycle follows page ownership — 0.0 while a page
+        # is on the free list (a fresh page must never inherit a stale
+        # scale), kept while evictable (prefix revival reuses content
+        # *and* scale), copied on COW.  Unquantized engines simply leave
+        # it all-zero.
+        self.scale_table = np.zeros(self.num_pages, np.float32)
 
     @property
     def free_pages(self) -> int:
@@ -208,6 +216,7 @@ class PageAllocator:
                 self._unindex(p)
                 self.evictions += 1
             self._ref[p] = 1
+            self.scale_table[p] = 0.0   # fresh content, fresh scale
             out.append(p)
         self.alloc_count += n
         return out
@@ -237,6 +246,7 @@ class PageAllocator:
                     self._evictable[p] = None     # most-recently parked
                 else:
                     self._free.append(p)
+                    self.scale_table[p] = 0.0
 
     # ---- prefix index -------------------------------------------------
 
@@ -374,6 +384,19 @@ class PageAllocator:
         if p in self._evictable:
             del self._evictable[p]
             self._free.append(p)
+            self.scale_table[p] = 0.0
+
+    def set_scale(self, pages, values) -> None:
+        """Record the (grown) absmax scales of freshly written pages —
+        the engine mirrors its device-side scale rows here so the
+        invariant checker can see page/scale lifecycle agreement."""
+        self.scale_table[np.asarray(pages, np.int64)] = \
+            np.asarray(values, np.float32)
+
+    def copy_scale(self, src: int, dst: int) -> None:
+        """COW bookkeeping: the fork duplicates page *content*, so the
+        copy dequantizes with the source page's scale."""
+        self.scale_table[dst] = self.scale_table[src]
 
     def check_invariants(self) -> None:
         """Conservation + consistency (the property-test oracle): every
@@ -404,6 +427,13 @@ class PageAllocator:
         # prefix hit from reused (overwritten) storage
         assert not (free & set(self._page_key)), \
             "indexed page on the free list"
+        # quantized pools: a free page's scale row must be zero — a
+        # rolled-back or freed page re-entering circulation with a stale
+        # scale would dequantize its next owner's int8 content wrongly
+        # (live and evictable pages keep theirs: prefix revival reuses
+        # content + scale together)
+        assert not any(self.scale_table[p] for p in free), \
+            "free page holds a stale scale row"
         # interned chain nodes: the two maps mirror; every indexing node
         # exists and holds a full chunk; recorded child counts match; a
         # node with neither an index entry nor descendants is a leak
@@ -568,6 +598,7 @@ class ServeEngine:
                  num_splits: Optional[int] = None,
                  spec_decode: bool = False, draft_k: int = 4,
                  draft_proposer=None,
+                 kv_quant: bool = False,
                  target: str = "v5e"):
         self.cfg = cfg
         self.params = params
@@ -623,6 +654,14 @@ class ServeEngine:
         # (decode_parallelism differs across TPU generations).
         self.num_splits = None if num_splits is None else int(num_splits)
         self.target = target
+        # Int8-quantized KV pages: pools store symmetric int8 with one
+        # f32 absmax scale per page ("ks"/"vs"/"cs" cache leaves); the
+        # attention layer quantizes on scatter and dequantizes per page
+        # inside the kernel KV loop, so the same pool HBM holds ~2x the
+        # tokens (bf16) at a bounded dequant error.  A paged-cache-only
+        # contract (the scale table rides the block table) — like
+        # prefix_cache, the flag silently turns off on dense engines.
+        self.kv_quant = bool(kv_quant and self.paged)
         # Speculative decoding: a draft source proposes up to ``draft_k``
         # continuation tokens per request per step and one batched
         # ``verify`` dispatch (TL mode="verify") scores them all; the
@@ -735,6 +774,21 @@ class ServeEngine:
             return self._map_paged_caches(copy_page,
                                           lambda axis, leaf: leaf, caches)
 
+        # zero one page's per-page scale rows (int8-quantized pools only;
+        # the (…, P) scale leaves are the attn leaves indexed *directly*
+        # by page): called when the allocator re-circulates a page, so
+        # running-max quantization starts fresh instead of inheriting the
+        # previous owner's absmax
+        def zero_scale(caches, page):
+            def z(axis, leaf):
+                if leaf.ndim == axis + 1:
+                    sl = (slice(None),) * axis
+                    return leaf.at[sl + (page,)].set(0.0)
+                return leaf
+
+            return self._map_paged_caches(z, lambda axis, leaf: leaf,
+                                          caches)
+
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode,
                                static_argnames=("kv_bucket", "num_splits"))
@@ -743,6 +797,7 @@ class ServeEngine:
         self._verify = jax.jit(verify,
                                static_argnames=("kv_bucket", "num_splits"))
         self._cow_copy = jax.jit(cow_copy)
+        self._zero_scale = jax.jit(zero_scale)
 
         # continuous-batching state (submit/step API)
         self._queue: list[Request] = []
@@ -999,7 +1054,8 @@ class ServeEngine:
             self._slot_caches = transformer.init_caches(
                 self.cfg, self.max_batch, self.max_len, paged=self.paged,
                 page_size=self.page_size,
-                num_pages=self.num_pages if self.paged else None)
+                num_pages=self.num_pages if self.paged else None,
+                kv_quant=self.kv_quant)
             self._slot_lens = np.zeros((self.max_batch,), np.int32)
             vocab = self.cfg.vocab_size
             self._slot_logits = jnp.zeros((self.max_batch, vocab),
@@ -1089,14 +1145,30 @@ class ServeEngine:
                 big, small, slot, axis),
             self._slot_caches, new)
 
+    def _alloc_pages(self, n: int):
+        """Allocator alloc + quantized-pool hygiene: each page handed out
+        gets its device scale rows zeroed (the allocator already zeroed
+        its host mirror), so a reused page's running-max quantization
+        starts fresh instead of inheriting the previous owner's absmax —
+        which would silently coarsen every new write's quantum."""
+        got = self._allocator.alloc(n)
+        if got and self.kv_quant:
+            for p in got:
+                self._slot_caches = self._zero_scale(self._slot_caches,
+                                                     jnp.int32(p))
+        return got
+
     def _cow(self, slot: int, pidx: int, new_page: int):
         """Copy-on-write: duplicate the shared page at table index
         ``pidx`` into freshly-allocated ``new_page`` (every attention pool
-        leaf), drop this request's reference on the original, and remap
-        the block table.  The other holders keep the original untouched."""
+        leaf — for a quantized pool that includes the per-page scale rows,
+        so the copy dequantizes exactly like the original), drop this
+        request's reference on the original, and remap the block table.
+        The other holders keep the original untouched."""
         old = int(self._slot_tables[slot, pidx])
         self._slot_caches = self._cow_copy(
             self._slot_caches, jnp.int32(old), jnp.int32(new_page))
+        self._allocator.copy_scale(old, new_page)
         self._allocator.free([old])
         self._slot_tables[slot, pidx] = new_page
         self._slot_pages[slot][pidx] = new_page
@@ -1110,7 +1182,7 @@ class ServeEngine:
         none (the caller rolls back or preempts and retries)."""
         page = int(self._slot_tables[slot, pidx])
         if self._allocator.refcount(page) > 1:
-            got = self._allocator.alloc(1)
+            got = self._alloc_pages(1)
             if got is None:
                 return False
             self._cow(slot, pidx, got[0])
@@ -1287,7 +1359,7 @@ class ServeEngine:
                     (r.prompt + r.tokens)[:pos], self._slot_pages[r.slot],
                     start=pidx - 1, resume=self._slot_nodes[r.slot])
             while self._active[r.slot] is r:
-                got = self._allocator.alloc(1)
+                got = self._alloc_pages(1)
                 if got is not None:
                     self._slot_pages[r.slot].append(got[0])
                     self._slot_tables[r.slot, pidx] = got[0]
@@ -1313,7 +1385,7 @@ class ServeEngine:
         room = (first + 1) * ps - pos     # slack in the secured page
         pidx = first + 1
         while room < ntok:
-            got = self._allocator.alloc(1)
+            got = self._alloc_pages(1)
             if got is None:
                 break
             self._slot_pages[r.slot].append(got[0])
@@ -1496,7 +1568,7 @@ class ServeEngine:
                     mlen = min(mlen, plen - 1)
                     matched = matched[:self._allocator.pages_for(mlen)]
                 self._allocator.ref(matched)
-                fresh = self._allocator.alloc(need - len(matched))
+                fresh = self._alloc_pages(need - len(matched))
                 if fresh is None:
                     self._allocator.free(matched)
                     break   # head-of-line waits for pages (FIFO preserved)
@@ -1728,12 +1800,18 @@ class ServeEngine:
         }
 
     def reset_metrics(self) -> None:
-        """Zero the latency samples, throughput totals, and the step
-        counter.  Compile counters and jit caches are deliberately kept —
-        benchmarks call this between a warm-up wave and a measured wave.
-        Only call while the engine is drained (no queued or active
-        requests): in-flight requests carry stamps relative to the old
-        step counter."""
+        """Zero every *workload* metric :meth:`stats` reports — the
+        latency samples, throughput totals, step counter, and the running
+        serving counters (preemptions, prefix lookups/hits/hit-tokens,
+        prefill tokens, COW copies, in-flight dedup pages, and the
+        speculative-decode draft/accept/rollback tallies).  Exactly three
+        fields survive, because they describe the *process*, not the
+        workload: ``prefill_compiles``, ``decode_compiles``, and
+        ``verify_compiles`` (with their jit caches) — benchmarks call
+        this between a warm-up wave and a measured wave precisely so the
+        measured wave reports zero fresh compiles.  Only call while the
+        engine is drained (no queued or active requests): in-flight
+        requests carry stamps relative to the old step counter."""
         self._step_idx = 0
         self._ttft_s, self._ttft_steps = [], []
         self._tpot_s, self._tpot_steps = [], []
@@ -1744,6 +1822,16 @@ class ServeEngine:
         self.accepted_tokens = 0
         self.rollback_pages = 0
         self._accept_rates = []
+        # workload counters that leaked through resets until the bugfix
+        # sweep: a warm-up wave's prefix/COW/prefill traffic inflated the
+        # measured wave's numbers (hit *rates* computed from them were
+        # silently wrong, not just large)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefill_tokens = 0
+        self.inflight_dedup_pages = 0
+        self.cow_count = 0
 
     def _retire(self, r: Request):
         """Release a request's slot and pages (it keeps its tokens)."""

@@ -144,6 +144,88 @@ def test_mla_chunk_prefill_matches_dense(seed):
             err_msg=f"row {bi} hist={hist[bi]}")
 
 
+@pytest.mark.parametrize("seed", range(4))
+def test_chunk_prefill_int8_parity(seed):
+    """Int8 pools + per-page scales: a chunk attending through the table
+    to quantized history stays within the documented bound of the fp-pool
+    result, including the write path (``paged_scatter_chunk_quant`` fills
+    the chunk's own pages before the kernel reads them back)."""
+    from repro.models.attention import (paged_scatter_chunk,
+                                        paged_scatter_chunk_quant)
+    rng = np.random.default_rng(600 + seed)
+    hq, hkv = [(4, 4), (8, 2), (4, 1), (6, 3)][seed % 4]
+    d, ps, tp, b = 32, 16, 4, 2
+    bucket = ps * tp
+    c = ps          # chunk == one page: scatter fills whole pages
+    hist = np.asarray([0, ps], np.int32)
+    pool_pages = b * tp + 2
+    # fp pools hold the history; the int8 pools hold the same values
+    # quantized through the production write path
+    kp, vp, tables, _, _ = _paged_case(
+        rng, b=b, hkv=hkv, d=d, ps=ps, tp=tp, pool_pages=pool_pages,
+        dtype=jnp.float32)
+    ki = jnp.zeros(kp.shape, jnp.int8)
+    vi = jnp.zeros(vp.shape, jnp.int8)
+    ks = jnp.zeros((pool_pages,), jnp.float32)
+    vs = jnp.zeros((pool_pages,), jnp.float32)
+    # replay the pool contents page by page through the quantized scatter
+    # (start = page boundary, chunk = full page) so scales grow exactly as
+    # the engine would have grown them
+    for pi in range(tp):
+        newk = jnp.stack([kp[tables[bi, pi]] for bi in range(b)])
+        newv = jnp.stack([vp[tables[bi, pi]] for bi in range(b)])
+        start = jnp.full((b,), pi * ps, jnp.int32)
+        ki, ks = paged_scatter_chunk_quant(ki, tables, start, newk,
+                                           scale=ks)
+        vi, vs = paged_scatter_chunk_quant(vi, tables, start, newv,
+                                           scale=vs)
+    q = jnp.asarray(rng.standard_normal((b, hq, c, d)) * 0.5, jnp.float32)
+    fp = ops.paged_flash_prefill(q, kp, vp, tables, hist_len=hist)
+    qout = ops.paged_flash_prefill(q, ki, vi, tables, hist_len=hist,
+                                   kv_scales=(ks, vs))
+    np.testing.assert_allclose(np.asarray(qout), np.asarray(fp), atol=5e-2,
+                               rtol=0, err_msg=f"Hq={hq} Hkv={hkv}")
+    # and the quantized scatter wrote where the fp scatter would have
+    kref = paged_scatter_chunk(jnp.zeros(kp.shape, jnp.float32), tables,
+                               jnp.zeros((b,), jnp.int32),
+                               jnp.stack([kp[tables[bi, 0]]
+                                          for bi in range(b)]))
+    deq = np.asarray(ki, np.float32) * np.asarray(ks)[:, None, None, None]
+    for bi in range(b):
+        p0 = tables[bi, 0]
+        np.testing.assert_allclose(deq[p0], np.asarray(kref[p0]), atol=5e-2,
+                                   rtol=0, err_msg=f"row {bi} page write")
+
+
+def test_mla_chunk_prefill_int8_parity():
+    """MLA latent pages quantize with one scale vector through the chunk
+    path too."""
+    rng = np.random.default_rng(71)
+    b, h, r, rr, ps, tp = 2, 4, 64, 16, 16, 4
+    bucket = ps * tp
+    c = 12
+    hist = np.asarray([0, 20], np.int32)
+    pool_pages = b * tp + 2
+    cp = jnp.asarray(rng.standard_normal((pool_pages, ps, r + rr)) * 0.3,
+                     jnp.float32)
+    tables = np.asarray(rng.permutation(pool_pages)[: b * tp],
+                        np.int32).reshape(b, tp)
+    flat = np.asarray(cp, np.float32).reshape(pool_pages, -1)
+    cs = np.abs(flat).max(axis=1) / 127.0
+    ci = jnp.asarray(np.clip(np.round(
+        flat / np.maximum(cs, 1e-30)[:, None]), -127, 127
+    ).astype(np.int8).reshape(cp.shape))
+    ql = jnp.asarray(rng.standard_normal((b, h, c, r + rr)) * 0.3,
+                     jnp.float32)
+    fp = ops.paged_mla_prefill(ql, cp, tables, hist_len=hist,
+                               kv_lora_rank=r, rope_head_dim=rr)
+    qout = ops.paged_mla_prefill(ql, ci, tables, hist_len=hist,
+                                 c_scale=jnp.asarray(cs, jnp.float32),
+                                 kv_lora_rank=r, rope_head_dim=rr)
+    np.testing.assert_allclose(np.asarray(qout), np.asarray(fp), atol=5e-2,
+                               rtol=0)
+
+
 def test_one_kernel_per_chunk_shape():
     """Every (history, table placement) within one (chunk capacity,
     bucket) pair reuses one generated kernel — the history length and the

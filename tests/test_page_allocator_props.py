@@ -30,9 +30,28 @@ def _tokens(seed: int, length: int) -> list[int]:
 
 def _run_interleaving(npages: int, ops: list[tuple[int, int]]) -> None:
     """Interpret an op sequence against a real allocator, asserting the
-    conservation oracle after every operation."""
+    conservation oracle after every operation.
+
+    Every page a "request" writes also gets a distinctive absmax scale
+    row (the int8-KV mirror): the run asserts scale rows follow page
+    ownership exactly — a held page keeps the scale its writer set, a
+    COW copy inherits its source's scale, and a freed / rolled-back page
+    never leaves a stale row behind for the next owner to dequantize
+    with (``check_invariants`` asserts free-list rows are zero)."""
     a = PageAllocator(npages, PS)
     holders: list[list] = []     # [pages, tokens] per live "request"
+    myscale: dict[int, float] = {}     # page -> scale its writer recorded
+    stamp = [0.0]
+
+    def write_scales(pages):
+        # a fresh page must arrive scale-0 (never the prior owner's row)
+        for p in pages:
+            assert a.scale_table[p] == 0.0, (
+                f"page {p} handed out with a stale scale row")
+        stamp[0] += 1.0
+        a.set_scale(pages, [stamp[0]] * len(pages))
+        for p in pages:
+            myscale[p] = stamp[0]
 
     for code, arg in ops:
         if code == 0:
@@ -49,12 +68,16 @@ def _run_interleaving(npages: int, ops: list[tuple[int, int]]) -> None:
             if fresh is None:
                 a.free(pages)          # rollback: the request queues
             else:
+                write_scales(fresh)
+                for p in pages:        # adopt the cached pages' rows
+                    myscale[p] = float(a.scale_table[p])
                 holders.append([pages + fresh, tokens])
         elif code == 1 and holders:
             # decode growth: one more page for a growing cache
             h = holders[arg % len(holders)]
             got = a.alloc(1)
             if got is not None:
+                write_scales(got)
                 h[0].extend(got)
                 h[1].extend(_tokens(arg, PS))
         elif code == 2 and holders:
@@ -72,6 +95,14 @@ def _run_interleaving(npages: int, ops: list[tuple[int, int]]) -> None:
                 if a.refcount(p) > 1:
                     got = a.alloc(1)
                     if got is not None:
+                        # the fork duplicates content, so the copy
+                        # dequantizes with the source page's scale; the
+                        # source row itself must stay untouched for the
+                        # remaining holders
+                        assert a.scale_table[got[0]] == 0.0
+                        a.copy_scale(p, got[0])
+                        assert a.scale_table[got[0]] == a.scale_table[p]
+                        myscale[got[0]] = float(a.scale_table[p])
                         a.free([p])
                         h[0][i] = got[0]
                     break
@@ -86,6 +117,7 @@ def _run_interleaving(npages: int, ops: list[tuple[int, int]]) -> None:
             k = 1 + arg % 4
             got = a.alloc(k)
             if got is not None:
+                write_scales(got)
                 accept = (arg // 7) % (k + 1)
                 h[0].extend(got)
                 h[1].extend(_tokens(arg + 13, accept * PS))
@@ -100,6 +132,9 @@ def _run_interleaving(npages: int, ops: list[tuple[int, int]]) -> None:
         held = {p for h in holders for p in h[0]}
         for p in held:
             assert a.refcount(p) >= 1, "held page lost its refcount"
+            assert a.scale_table[p] == myscale[p], (
+                f"held page {p}'s scale row drifted (COW / rollback / "
+                "free touched a live row)")
 
     # drain everything: the whole pool must come back
     for pages, _ in holders:

@@ -187,6 +187,182 @@ def test_paged_mla_decode_matches_dense_and_ref(seed):
 
 
 # --------------------------------------------------------------------------
+# int8-quantized pages (KV_QUANT): bounded-error parity with the fp pool
+# --------------------------------------------------------------------------
+
+# dequant error bound for unit-scale gaussian KV data: per-element int8
+# absmax quantization is ≤ scale/2 ≈ amax/254, and the attention output is
+# a convex combination of V rows — measured max err is ~1e-2, asserted at
+# 5e-2 so the bound documents the contract without flaking
+QTOL = 5e-2
+
+
+def _quantize_pool(pool):
+    """Per-page symmetric int8 absmax quantization of a float pool —
+    the same math :func:`repro.models.attention.paged_scatter_quant`
+    applies on write.  Returns ``(int8_pool, (P,) f32 scales)``."""
+    p = np.asarray(pool, np.float32)
+    flat = p.reshape(p.shape[0], -1)
+    scale = np.abs(flat).max(axis=1) / 127.0
+    q = np.clip(np.round(flat / np.maximum(scale, 1e-30)[:, None]),
+                -127, 127).astype(np.int8).reshape(p.shape)
+    return jnp.asarray(q), jnp.asarray(scale, jnp.float32)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_paged_decode_int8_parity(seed):
+    """int8 pools + per-page scales decode within the documented bound of
+    the fp pool, across MHA/GQA/MQA, dtypes, permuted tables, and
+    heterogeneous per-row lengths."""
+    rng = np.random.default_rng(300 + seed)
+    hq, hkv = [(4, 4), (8, 2), (4, 1)][seed % 3]
+    dtype = jnp.bfloat16 if seed % 2 else jnp.float32
+    d, ps, tp, b = 32, 32, 2, 2
+    bucket = ps * tp
+    kp, vp, tables, _, _ = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, tp=tp,
+        pool_pages=b * tp + 2, dtype=dtype)
+    ki, ks = _quantize_pool(kp)
+    vi, vs = _quantize_pool(vp)
+    lens = jnp.asarray([int(rng.integers(1, bucket + 1)) for _ in range(b)],
+                       jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)) * 0.5, dtype)
+    fp = ops.paged_flash_decode(q, kp, vp, tables, cache_len=lens)
+    qout = ops.paged_flash_decode(q, ki, vi, tables, cache_len=lens,
+                                  kv_scales=(ks, vs))
+    np.testing.assert_allclose(
+        np.asarray(qout, np.float32), np.asarray(fp, np.float32),
+        atol=QTOL, rtol=0,
+        err_msg=f"int8 decode drift: Hq={hq} Hkv={hkv} dtype={dtype}")
+
+
+def test_paged_decode_int8_split_kv_composes():
+    """Forced split-KV over an int8 pool merges to the same answer as the
+    sequential pass — the scale gather must be split-invariant."""
+    rng = np.random.default_rng(17)
+    b, hq, hkv, d, ps, tp = 2, 4, 2, 32, 16, 4
+    kp, vp, tables, _, _ = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, tp=tp,
+        pool_pages=b * tp + 2, dtype=jnp.float32)
+    ki, ks = _quantize_pool(kp)
+    vi, vs = _quantize_pool(vp)
+    lens = jnp.asarray([49, 64], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)) * 0.5, jnp.float32)
+    seq = ops.paged_flash_decode(q, ki, vi, tables, cache_len=lens,
+                                 kv_scales=(ks, vs), num_splits=1)
+    par = ops.paged_flash_decode(q, ki, vi, tables, cache_len=lens,
+                                 kv_scales=(ks, vs), num_splits=2)
+    np.testing.assert_allclose(np.asarray(par), np.asarray(seq),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_int8_pallas_vs_jnp_oracle():
+    """The Pallas kernel's per-page scale gather + dequant and the jnp
+    oracle's must be the same function on a quantized TL program."""
+    rng = np.random.default_rng(23)
+    b, hq, hkv, d, ps, tp = 2, 4, 2, 32, 32, 2
+    bucket = ps * tp
+    kp, vp, tables, _, _ = _paged_case(
+        rng, b=b, hq=hq, hkv=hkv, d=d, ps=ps, tp=tp,
+        pool_pages=b * tp + 2, dtype=jnp.float32)
+    ki, ks = _quantize_pool(kp)
+    vi, vs = _quantize_pool(vp)
+    lens = np.asarray([39, 64], np.int32)
+    g = hq // hkv
+    spec = AttnSpec(variant="mha", num_q_heads=hkv, num_kv_heads=hkv,
+                    head_dim=d, causal=False, mode="decode", dtype="f32",
+                    page_size=ps, kv_dtype="int8")
+    kern = cached_kernel(spec, g, bucket, "v5e", True, False)
+    assert kern.pallas_fn.kv_quant and kern.oracle_fn.kv_quant
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, d)) * 0.5, jnp.float32)
+    qp = ops._pad_rows(q, 2, kern.blocks.bm)
+    out = kern.pallas_fn(jnp.asarray(lens), jnp.asarray(tables), ks, vs,
+                         qp, ki, vi)
+    for bi in range(b):
+        for h in range(hkv):
+            o = kern.oracle_fn(int(lens[bi]), tables[bi], ks, vs, qp[bi, h],
+                               ki[:, h].reshape(-1, d),
+                               vi[:, h].reshape(-1, d))[:g]
+            np.testing.assert_allclose(
+                np.asarray(out[bi, h, :g], np.float32),
+                np.asarray(o, np.float32), atol=1e-5, rtol=1e-5,
+                err_msg=f"row {bi} kv-head {h}")
+
+
+def test_paged_mla_decode_int8_parity():
+    """MLA: the single latent pool quantizes with one scale vector."""
+    rng = np.random.default_rng(31)
+    b, h, r, rr, ps, tp = 2, 4, 64, 16, 16, 4
+    bucket = ps * tp
+    pool_pages = b * tp + 2
+    cp = jnp.asarray(rng.standard_normal((pool_pages, ps, r + rr)) * 0.3,
+                     jnp.float32)
+    ci, cs = _quantize_pool(cp)
+    tables = np.asarray(rng.permutation(pool_pages)[: b * tp],
+                        np.int32).reshape(b, tp)
+    lens = jnp.asarray([int(rng.integers(1, bucket + 1)) for _ in range(b)],
+                       jnp.int32)
+    ql = jnp.asarray(rng.standard_normal((b, h, 1, r + rr)) * 0.3,
+                     jnp.float32)
+    fp = ops.paged_mla_decode(ql, cp, tables, cache_len=lens,
+                              kv_lora_rank=r, rope_head_dim=rr)
+    qout = ops.paged_mla_decode(ql, ci, tables, cache_len=lens, c_scale=cs,
+                                kv_lora_rank=r, rope_head_dim=rr)
+    np.testing.assert_allclose(np.asarray(qout), np.asarray(fp),
+                               atol=QTOL, rtol=0)
+
+
+def test_kv_quant_spec_reason_roundtrip():
+    """kv_dtype is a validated paged contract: KV_QUANT rides the TL
+    params, the Allocate dtypes shrink to int8, and the printed program
+    re-parses to the same quantized lowering."""
+    from repro.core.tl import parse, to_text
+    with pytest.raises(ValueError, match="page_size"):
+        AttnSpec.mha(4, 32, mode="decode", causal=False, kv_dtype="int8")
+    with pytest.raises(ValueError, match="unsupported"):
+        AttnSpec.mha(4, 32, mode="decode", causal=False, page_size=32,
+                     kv_dtype="fp4")
+    spec = AttnSpec(variant="mha", num_q_heads=2, num_kv_heads=2,
+                    head_dim=32, causal=False, mode="decode", page_size=32,
+                    kv_dtype="int8")
+    prog = reason_parameters(generate_sketch(spec), spec, q_len=8,
+                             kv_len=128)
+    assert prog.params["KV_QUANT"] == 1
+    text = to_text(prog)
+    assert "as int8" in text
+    # print → parse → print is stable on the statements (header comments
+    # carry the param env for humans and are not part of the AST)
+    stmts = lambda t: [l for l in t.splitlines() if not l.startswith("//")]
+    assert stmts(to_text(parse(text, name="rt"))) == stmts(text)
+
+
+def test_one_kernel_per_quantized_bucket():
+    """kv_scales are runtime data: every (cache_len, table, scale) draw
+    within one capacity reuses one compiled quantized kernel, and the
+    quantized spec keys a *separate* cache entry from the fp one (no
+    silent cross-dtype reuse)."""
+    rng = np.random.default_rng(41)
+    b, hq, hkv, d, ps, tp = 1, 4, 2, 32, 32, 2
+    kp = jnp.asarray(rng.standard_normal((6, hkv, ps, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((6, hkv, ps, d)), jnp.float32)
+    ki, ks = _quantize_pool(kp)
+    vi, vs = _quantize_pool(vp)
+    q = jnp.asarray(rng.standard_normal((b, hq, 1, d)), jnp.float32)
+    tbl = np.asarray([[0, 1]], np.int32)
+    ops.paged_flash_decode(q, ki, vi, tbl, cache_len=1,
+                           kv_scales=(ks, vs))      # warm the capacity
+    before = cached_kernel.cache_info()
+    for cl in range(2, 20):
+        t = np.asarray([rng.permutation(6)[:tp]], np.int32)
+        ops.paged_flash_decode(q, ki, vi, t, cache_len=cl,
+                               kv_scales=(ks, vs))
+    after = cached_kernel.cache_info()
+    assert after.misses == before.misses, (
+        "quantized paged decode retraced inside one bucket")
+    assert after.hits > before.hits
+
+
+# --------------------------------------------------------------------------
 # spec / reasoning invariants + bounded compilation
 # --------------------------------------------------------------------------
 

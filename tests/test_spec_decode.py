@@ -163,6 +163,96 @@ def test_spec_counters_reset():
     assert s["verify_compiles"] == compiles
 
 
+@pytest.mark.parametrize("case", ["gqa", "mqa", "mla"])
+def test_spec_decode_with_int8_kv_pages(case):
+    """kv_quant composes with speculation: given the *same* int8 cache
+    numerics, drafting/verify/rollback must stay lossless — the spec
+    engine commits the token stream the non-spec int8 engine commits.
+    (Identity against the fp engine is deliberately not asserted: the
+    documented contract is bounded dequant error, and a bounded error may
+    flip an argmax on random-weight models — the kernel parity suites
+    bound the numerics.)  Drafts still fire, and the allocator's
+    scale-table invariant holds after the draft/verify/rollback churn."""
+    cfg = CASES[case]()
+    params = _params(cfg)
+    prompts = _prompts(cfg, np.random.default_rng(7))
+    ref, _ = _run(cfg, params, prompts, spec=False, kv_quant=True)
+    got, eng = _run(cfg, params, prompts, spec=True, draft_k=6,
+                    kv_quant=True)
+    assert got == ref
+    assert eng.kv_quant
+    s = eng.stats()
+    assert s["drafted_tokens"] > 0 and s["accepted_tokens"] > 0
+    # device scale leaves exist and carry real (grown) scales
+    blocks = eng._slot_caches["blocks"]
+    names = {"cs"} if case == "mla" else {"ks", "vs"}
+    kind = next(k for k, v in blocks.items()
+                if isinstance(v, dict) and names <= set(v))
+    for nm in names:
+        assert float(np.max(np.asarray(blocks[kind][nm]))) > 0.0
+    eng._allocator.check_invariants()    # free pages hold no stale scale
+
+
+def test_kv_quant_gates_off_dense():
+    """kv_quant is a paged-pool contract — a dense engine silently turns
+    it off (mirroring prefix_cache), and init_caches refuses the combo
+    outright."""
+    cfg = CASES["gqa"]()
+    eng = ServeEngine(cfg, _params(cfg), max_batch=1, max_len=64,
+                      paged=False, kv_quant=True)
+    assert not eng.kv_quant
+    with pytest.raises(ValueError, match="paged"):
+        T.init_caches(cfg, 1, 64, kv_quant=True)
+
+
+def test_reset_metrics_clears_workload_counters():
+    """The acceptance criterion of the metrics bugfix: warm-up wave →
+    ``reset_metrics`` → measured wave reports exactly the workload
+    counters a fresh engine reports for the same wave — prefix hit rates
+    and prefill totals no longer inherit warm-up traffic.  Compile
+    counters are the documented exception (the warm engine's whole
+    point is reporting zero *fresh* compiles)."""
+    cfg = CASES["gqa"]()
+    params = _params(cfg)
+    rng = np.random.default_rng(8)
+    base = list(map(int, rng.integers(0, cfg.vocab_size, 4)))
+    wave = [(base * 12)[:44], (base * 12)[:44],
+            list(map(int, rng.integers(0, cfg.vocab_size, 30)))]
+    warm = [list(map(int, 1 + rng.integers(0, cfg.vocab_size - 1, n)))
+            for n in (21, 40)]
+
+    def drive(eng, prompts):
+        for p in prompts:
+            eng.submit(list(p), max_new_tokens=12)
+        eng.run_until_drained(max_steps=4000)
+
+    kw = dict(max_batch=3, max_len=256, page_size=16, spec_decode=True,
+              draft_k=4)
+    warmed = ServeEngine(cfg, params, **kw)
+    drive(warmed, warm)
+    assert warmed.stats()["prefill_tokens"] > 0   # warm-up left residue
+    warmed.reset_metrics()
+    # the warm engine keeps its *evictable* prefix pages; drop them so the
+    # measured wave sees the same cold index a fresh engine sees
+    for p in list(warmed._allocator._evictable):
+        warmed._allocator.unindex(p)
+    warmed._allocator.check_invariants()
+    drive(warmed, wave)
+
+    fresh = ServeEngine(cfg, params, **kw)
+    drive(fresh, wave)
+
+    got, want = warmed.stats(), fresh.stats()
+    # wall-clock percentiles are nondeterministic; compile counters are
+    # the documented survivors of reset_metrics
+    skip = {"ttft_s", "tpot_s", "prefill_compiles", "decode_compiles",
+            "verify_compiles"}
+    for k in set(want) - skip:
+        assert got[k] == want[k], f"stale counter after reset: {k}"
+    assert got["prefix_hits"] > 0        # the wave itself shares a prefix
+    assert got["prefill_tokens"] > 0
+
+
 def test_spec_gates_off_where_unsound():
     """Recurrent state cannot roll back, MoE routing couples drafts into
     committed numerics, and a dense engine has no pages to roll back —
