@@ -46,6 +46,19 @@ at zero acceptance.
 
     PYTHONPATH=src python benchmarks/serve_decode.py --spec
     PYTHONPATH=src python benchmarks/serve_decode.py --spec --tiny
+
+``--mesh N`` A/Bs tensor-parallel sharded serving: the same decode
+workload through ``ServeEngine(mesh=...)`` at model_axis {1, 2, 4}
+(clamped to N), each arm in its own subprocess with
+``--xla_force_host_platform_device_count`` so the mesh is real.  Token
+identity across arms is asserted (sharding must never change the
+stream), steady-state tok/s per arm lands in ``BENCH_shard.json``, and
+at full scale the run asserts the headline contract: >= 1.5x from
+model_axis 1 -> 4.  ``--tiny`` (CI, forced *host* devices timeshare one
+CPU) only warns — the identity assert still holds.
+
+    PYTHONPATH=src python benchmarks/serve_decode.py --mesh 4
+    PYTHONPATH=src python benchmarks/serve_decode.py --mesh 4 --tiny
 """
 
 from __future__ import annotations
@@ -54,6 +67,9 @@ import argparse
 import dataclasses
 import functools
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -403,6 +419,111 @@ def _pow2_at_least(n):
     return b
 
 
+def _mesh_workload(args):
+    if args.tiny:
+        return dict(batch=2, plen=24, new=8, page=16)
+    return dict(batch=4, plen=512, new=64, page=64)
+
+
+def mesh_child(args):
+    """One ``--mesh`` arm, inside the forced-device subprocess: serve the
+    workload on a (devices/m, m) mesh (m=1 keeps the single-device
+    engine as the true baseline), print tokens + steady tok/s as JSON."""
+    from repro.launch.mesh import make_host_mesh
+
+    m = args.mesh_child
+    w = _mesh_workload(args)
+    cfg = dataclasses.replace(registry.get_reduced(args.arch),
+                              attn_impl=args.attn_impl)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, w["plen"])))
+               for _ in range(w["batch"])]
+    mesh = make_host_mesh(model_axis=m) if m > 1 else None
+    max_len = _pow2_at_least(w["plen"] + w["new"] + w["page"])
+
+    def make_engine():
+        return ServeEngine(cfg, params, max_batch=w["batch"],
+                           max_len=max_len, page_size=w["page"],
+                           prefix_cache=False, mesh=mesh)
+
+    eng = make_engine()
+    uids = [eng.submit(list(p), max_new_tokens=w["new"]) for p in prompts]
+    done = {r.uid: list(r.tokens)
+            for r in eng.run_until_drained(max_steps=50_000)}
+    tokens = [done[u] for u in uids]
+    best = max(steady_decode_tps(eng, [list(p) for p in prompts], w["new"])
+               for _ in range(args.passes))
+    out = {"model_axis": m,
+           "plan": eng._tp.plan if eng._tp is not None else "single",
+           "devices": len(jax.devices()),
+           "tok_s": best, "tokens": tokens,
+           "decode_compiles": eng.decode_compiles}
+    print(json.dumps(out))
+
+
+def mesh_bench(args):
+    """Tensor-parallel serving A/B (see module docstring): one subprocess
+    per model_axis arm, token identity asserted across arms, rows written
+    to BENCH_shard.json."""
+    arms = [m for m in (1, 2, 4) if m <= args.mesh]
+    if args.mesh not in arms:
+        arms.append(args.mesh)
+    ndev = max(arms)
+    w = _mesh_workload(args)
+    print(f"[serve-decode --mesh] arch={args.arch} attn={args.attn_impl} "
+          f"batch={w['batch']} prompt={w['plen']} new={w['new']} "
+          f"page={w['page']} arms={arms} "
+          f"({ndev} forced host devices per arm)")
+    rows = []
+    for m in arms:
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--mesh-child", str(m), "--arch", args.arch,
+               "--attn-impl", args.attn_impl, "--passes",
+               str(args.passes)] + (["--tiny"] if args.tiny else [])
+        env = dict(
+            os.environ,
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev} "
+                      + os.environ.get("XLA_FLAGS", ""),
+            PYTHONPATH=os.pathsep.join(
+                [os.path.join(os.path.dirname(os.path.dirname(
+                    os.path.abspath(__file__))), "src")]
+                + ([os.environ["PYTHONPATH"]]
+                   if "PYTHONPATH" in os.environ else [])))
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=1800)
+        assert r.returncode == 0, r.stderr[-4000:]
+        rows.append(json.loads(r.stdout.strip().splitlines()[-1]))
+    base_tokens, base_tps = rows[0]["tokens"], rows[0]["tok_s"]
+    for row in rows:
+        assert row["tokens"] == base_tokens, \
+            f"sharding changed the tokens at model_axis=" \
+            f"{row['model_axis']} — mesh-serving bug"
+        row.pop("tokens")
+        row["speedup_vs_1"] = row["tok_s"] / base_tps
+        print(f"  model_axis={row['model_axis']} plan={row['plan']:>9} "
+              f"{row['tok_s']:>9.1f} tok/s "
+              f"x{row['speedup_vs_1']:.2f} "
+              f"({row['decode_compiles']} decode compiles)")
+    top = rows[-1]["speedup_vs_1"]
+    if args.tiny:
+        if top < 1.5:
+            print("  WARNING: tiny-scale numbers missed the 1.5x sharding "
+                  "target (forced host devices timeshare one CPU; only "
+                  "real accelerators show the win)")
+    else:
+        assert top >= 1.5, \
+            f"model_axis {arms[-1]} must win >=1.5x over 1, got {top:.2f}x"
+    out = {"bench": "serve_sharded", "arch": args.arch,
+           "attn_impl": args.attn_impl, "tiny": bool(args.tiny),
+           "workload": dict(w, devices=ndev), "arms": rows,
+           "summary": {"speedup_max_axis_vs_1": top,
+                       "tokens_identical": True}}
+    with open("BENCH_shard.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("  wrote BENCH_shard.json")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -422,6 +543,12 @@ def main():
                     help="speculative-decode A/B: draft length x "
                          "synthetic acceptance rate vs plain decode "
                          "(writes BENCH_spec.json)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="tensor-parallel serving A/B at model_axis "
+                         "{1, 2, 4} clamped to N, one forced-host-device "
+                         "subprocess per arm (writes BENCH_shard.json)")
+    ap.add_argument("--mesh-child", type=int, default=0,
+                    help=argparse.SUPPRESS)
     ap.add_argument("--passes", type=int, default=3,
                     help="warm passes per sweep cell (best-of filters "
                          "scheduler noise)")
@@ -431,6 +558,12 @@ def main():
     if args.tiny:
         args.batch, args.prompt_len, args.new_tokens = 2, 12, 4
         args.passes = 1
+    if args.mesh_child:
+        mesh_child(args)
+        return
+    if args.mesh:
+        mesh_bench(args)
+        return
     if args.sweep:
         if args.tiny:
             args.new_tokens = 8

@@ -143,7 +143,7 @@ class SplitTune:
 
 @functools.lru_cache(maxsize=2048)
 def _tune_splits_cached(rows: int, kv_len: int, unit: int,
-                        target_name: str) -> SplitTune:
+                        target_name: str, shards: int = 1) -> SplitTune:
     """Score every legal split count and keep the cheapest critical path.
 
     The same napkin reasoning as the block search, one level up: a decode
@@ -161,11 +161,18 @@ def _tune_splits_cached(rows: int, kv_len: int, unit: int,
     dense), so candidates are clamped to whole units and to
     :data:`~repro.core.reason.MAX_KV_SPLITS`.  Ties break toward fewer
     splits (less partial-tile HBM).
+
+    ``shards`` is the model-axis width of a sharded serving mesh: the
+    head grid is divided across ``shards`` devices, so each device sees
+    ``ceil(rows / shards)`` rows and needs proportionally *more* KV
+    splitting to fill its ``decode_parallelism`` slots.  Scoring the
+    per-shard rows keeps the decision device-local (every shard makes the
+    same choice — the inputs are replicated scalars).
     """
     target = get_target(target_name)
     par = max(1, int(target.decode_parallelism))
     units = max(1, _ceil_div(max(1, int(kv_len)), max(1, int(unit))))
-    rows = max(1, int(rows))
+    rows = max(1, _ceil_div(max(1, int(rows)), max(1, int(shards))))
 
     best: tuple[float, int] | None = None
     table = []
@@ -183,14 +190,18 @@ def _tune_splits_cached(rows: int, kv_len: int, unit: int,
 
 
 def tune_splits(*, rows: int, kv_len: int, page_size=None,
-                target: TPUTarget | str = "v5e") -> SplitTune:
+                target: TPUTarget | str = "v5e",
+                shards: int = 1) -> SplitTune:
     """Split-KV partition search for a decode/verify dispatch.
 
     ``reason.choose_num_splits`` delegates here — the split decision lives
     in the same scored-search framework as the (BM, BN) decision, keyed by
     the same :class:`~repro.core.target.TPUTarget` calibration
-    (``decode_parallelism``).
+    (``decode_parallelism``).  ``shards`` (model-axis width of a serving
+    mesh) scores waves against per-shard rows — see
+    :func:`_tune_splits_cached`.
     """
     name = target if isinstance(target, str) else target.name
     unit = int(page_size) if page_size else LANE
-    return _tune_splits_cached(int(rows), int(kv_len), unit, name)
+    return _tune_splits_cached(int(rows), int(kv_len), unit, name,
+                               int(shards))

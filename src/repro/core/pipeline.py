@@ -64,6 +64,7 @@ def generate_attention_kernel(
     interpret: bool = True,
     causal_block_skip: bool = True,
     strict: bool = True,
+    shard_axis: Optional[str] = None,
 ) -> GeneratedKernel:
     """Generate a fused attention kernel for ``spec`` via the TL workflow.
 
@@ -71,7 +72,12 @@ def generate_attention_kernel(
     Flash-Decoding) — ``None``/1 keeps the sequential KV loop; larger
     values are clamped by the reasoning stage (see
     :func:`repro.core.reason.split_layout`) and lowered by both backends
-    as parallel KV partitions plus an LSE-merge combine."""
+    as parallel KV partitions plus an LSE-merge combine.
+
+    ``shard_axis``: named mesh axis for sequence-sharded execution inside
+    ``shard_map`` — the Pallas backend all-gathers the per-rank partial
+    online-softmax states into its LSE-merge combine (tensor-parallel
+    serving's cross-shard reduction)."""
 
     if isinstance(target, str):
         target = get_target(target)
@@ -114,7 +120,8 @@ def generate_attention_kernel(
     blocks = prog.meta.get("blocks", blocks)
 
     pallas_fn = translate_pallas(
-        prog, interpret=interpret, causal_block_skip=causal_block_skip)
+        prog, interpret=interpret, causal_block_skip=causal_block_skip,
+        shard_axis=shard_axis)
     oracle_fn = translate_jnp(prog)
 
     return GeneratedKernel(
@@ -144,11 +151,14 @@ def _reparse_params(spec, q_len, kv_len, target, blocks, backend,
 def cached_kernel(spec: AttnSpec, q_len: int, kv_len: int,
                   target_name: str = "v5e", interpret: bool = True,
                   causal_block_skip: bool = True,
-                  num_splits: int = 1) -> GeneratedKernel:
+                  num_splits: int = 1,
+                  shard_axis: Optional[str] = None) -> GeneratedKernel:
     """lru-cached kernel factory used by the model layer.
 
-    Keyed on the *requested* ``num_splits`` — one compiled kernel per
-    (spec, shape bucket, splits), the serving compile contract."""
+    Keyed on the *requested* ``num_splits`` (and the shard axis, for
+    sequence-sharded serving) — one compiled kernel per (spec, shape
+    bucket, splits, mesh axis), the serving compile contract."""
     return generate_attention_kernel(
         spec, q_len, kv_len, target=target_name, interpret=interpret,
-        causal_block_skip=causal_block_skip, num_splits=num_splits)
+        causal_block_skip=causal_block_skip, num_splits=num_splits,
+        shard_axis=shard_axis)

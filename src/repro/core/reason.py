@@ -111,7 +111,8 @@ def split_layout(num_splits: int, tkv: int, unit: int = 1) -> tuple[int, int]:
 
 def choose_num_splits(*, rows: int, kv_len: int, mode: str = "decode",
                       page_size: Optional[int] = None,
-                      target: TPUTarget | str = "v5e") -> int:
+                      target: TPUTarget | str = "v5e",
+                      shards: int = 1) -> int:
     """The reasoning stage's split-KV decision (Flash-Decoding; FA-2's
     "parallelism and work partitioning" axis).
 
@@ -131,6 +132,11 @@ def choose_num_splits(*, rows: int, kv_len: int, mode: str = "decode",
     scoring — a K-token verify program has decode's shape problem (few
     rows, long cache); prefill modes never split (they already parallelise
     over q tiles).
+
+    ``shards`` is the model-axis width when serving on a mesh: each shard
+    dispatches ``ceil(rows / shards)`` of the head rows, so the wave count
+    is scored against the per-shard launch width — wider meshes want more
+    KV splitting to stay full.
     """
     if mode not in ("decode", "verify"):
         return 1
@@ -140,23 +146,28 @@ def choose_num_splits(*, rows: int, kv_len: int, mode: str = "decode",
 
     return int(autotune.tune_splits(rows=rows, kv_len=kv_len,
                                     page_size=page_size,
-                                    target=target).num_splits)
+                                    target=target,
+                                    shards=shards).num_splits)
 
 
 def resolve_num_splits(num_splits: Optional[int], *, rows: int, kv_len: int,
                        mode: str = "decode",
                        page_size: Optional[int] = None,
-                       target: TPUTarget | str = "v5e") -> int:
+                       target: TPUTarget | str = "v5e",
+                       shards: int = 1) -> int:
     """A caller's explicit split request, or the heuristic default.
 
     The single resolution point for every lowering (TL/Pallas, jnp
     oracle, XLA scan): one decision, N lowerings.  Explicit requests are
     honoured up to :data:`MAX_KV_SPLITS` — the combine-overhead cap is a
-    property of the lowering, not of who asked."""
+    property of the lowering, not of who asked.  ``shards`` (model-axis
+    mesh width) rescales the heuristic's launch width only; explicit
+    requests are already a per-shard statement."""
     if num_splits is not None:
         return max(1, min(int(num_splits), MAX_KV_SPLITS))
     return choose_num_splits(rows=rows, kv_len=kv_len, mode=mode,
-                             page_size=page_size, target=target)
+                             page_size=page_size, target=target,
+                             shards=shards)
 
 
 def _vmem_bytes(spec: AttnSpec, bm: int, bn: int) -> int:

@@ -43,7 +43,7 @@ def _pad_to(x, rows):
     return jnp.pad(x, pad)
 
 
-def translate_jnp(prog: TLProgram):
+def translate_jnp(prog: TLProgram, *, shard_axis: str | None = None):
     """Return ``fn(*global_inputs) -> output`` implementing ``prog``.
 
     Runtime-length programs (``meta['runtime_kv_len']`` — decode mode) take
@@ -78,6 +78,14 @@ def translate_jnp(prog: TLProgram):
     before the epilogue — the identical split/merge the Pallas backend
     launches as a parallel grid dimension plus combine kernel, so parity
     tests exercise the same partition arithmetic on both backends.
+
+    ``shard_axis`` makes the translation shard-aware for use inside
+    ``shard_map``: each mesh rank runs the KV loop over its *local* KV
+    slice (the program's ``N`` is the per-rank capacity; a rank whose
+    runtime length is 0 contributes nothing), then the online-softmax
+    state is LSE-merged across the named axis
+    (:func:`semantics.lse_merge_axis`) before the epilogue — the
+    sequence-parallel form of the split-KV combine.
     """
 
     p = dict(prog.params)
@@ -172,10 +180,17 @@ def translate_jnp(prog: TLProgram):
                                 jnp.stack([a for a, _, _ in parts]),
                                 jnp.stack([m for _, m, _ in parts]),
                                 jnp.stack([l for _, _, l in parts]))
-                        continue
-                    for it in range(start, end):
-                        loop_env[s.var] = it
-                        exec_stmts(s.body)
+                    else:
+                        for it in range(start, end):
+                            loop_env[s.var] = it
+                            exec_stmts(s.body)
+                    if shard_axis is not None:
+                        # sequence-parallel ranks: merge the per-rank
+                        # online-softmax state before the epilogue
+                        state["acc"], state["m"], state["l"] = \
+                            semantics.lse_merge_axis(
+                                state["acc"], state["m"], state["l"],
+                                shard_axis)
                     continue
                 if isinstance(s, If):
                     raise TranslateError("If unsupported in jnp backend")
@@ -242,9 +257,13 @@ def translate_jnp(prog: TLProgram):
                 scores = state[s_nm]
                 if kv_limit is not None and not chunked:
                     # runtime cache length (chunked prefill's scalar is the
-                    # history length — the shifted causal mask bounds it)
+                    # history length — the shifted causal mask bounds it).
+                    # A sequence-parallel rank may hold a local length past
+                    # its own capacity (the global remainder); clamp so the
+                    # zero-padded columns beyond N stay dead either way.
                     scores = semantics.mask_bounds(
-                        scores, k_positions(i), kv_limit)
+                        scores, k_positions(i),
+                        jnp.minimum(kv_limit, n_real))
                 elif kv_limit is None and n_pad != n_real:  # padded KV cols
                     scores = semantics.mask_bounds(
                         scores, k_positions(i), n_real)

@@ -116,6 +116,7 @@ def translate_pallas(
     interpret: bool = True,
     causal_block_skip: bool = True,
     debug: bool = False,
+    shard_axis: str | None = None,
 ):
     """Compile ``prog`` into a batched attention callable.
 
@@ -177,6 +178,16 @@ def translate_pallas(
     dead-block skip keeps KV tiles past ``hist + (qi+1)*BM - 1`` off the
     MXU.  Rows past the chunk's true length are garbage (finite, never
     NaN) and the caller discards them.
+
+    ``shard_axis`` makes the launch shard-aware for use inside
+    ``shard_map``: every rank of the named mesh axis holds a *local* KV
+    slice (its head shard's pages, or a sequence shard), the main kernel
+    is forced into the partial-state (split) launch even at
+    ``NUM_SPLITS == 1``, the per-rank partial ``(acc, m, l)`` tiles are
+    ``all_gather``ed along the axis (a collective between the two
+    ``pallas_call``s, never inside a kernel), and the LSE-combine kernel
+    merges ``ranks * NUM_SPLITS`` partials — the distributed form of the
+    Flash-Decoding combine.
     """
 
     p = dict(prog.params)
@@ -201,7 +212,9 @@ def translate_pallas(
     # re-derived through the same fixed-point layout the reasoning stage
     # used (whole tiles; page-aligned in paged layouts)
     ns, tps = split_layout(int(p.get("NUM_SPLITS", 1)), tkv, mpp or 1)
-    split = ns > 1
+    # a shard axis forces the partial-state launch even at one split: the
+    # rank-local state must survive the kernel so it can be gathered
+    split = ns > 1 or shard_axis is not None
     allocs = prog.allocations()
     structure = _split(prog)
     out_name = prog.outputs[0]
@@ -622,6 +635,14 @@ def translate_pallas(
             """LSE-merge the per-split partials — the 'separate small
             kernel' realisation of the TL epilogue (one grid program per
             (batch-head, q-tile); the split axis is reduced in VMEM)."""
+            if shard_axis is not None:
+                # the collective lives between the two pallas_calls: stack
+                # every rank's partial state along the split axis, so the
+                # combine below merges ranks * NUM_SPLITS partials
+                partials = tuple(
+                    jax.lax.all_gather(x, shard_axis, axis=2, tiled=True)
+                    for x in partials)
+            nsp = int(partials[0].shape[2])
             ckw = {}
             ccp = _compiler_params(("parallel", "parallel"))
             if ccp is not None and not interpret:
@@ -631,9 +652,9 @@ def translate_pallas(
                 make_combine_kernel(),
                 grid=(bsz * hq, tq),
                 in_specs=[
-                    pl.BlockSpec((1, 1, ns, bm, dv), cmap),
-                    pl.BlockSpec((1, 1, ns, bm, lane), cmap),
-                    pl.BlockSpec((1, 1, ns, bm, lane), cmap),
+                    pl.BlockSpec((1, 1, nsp, bm, dv), cmap),
+                    pl.BlockSpec((1, 1, nsp, bm, lane), cmap),
+                    pl.BlockSpec((1, 1, nsp, bm, lane), cmap),
                 ],
                 out_specs=pl.BlockSpec(
                     (1, 1, bm, dv),

@@ -9,6 +9,7 @@ the repo's analogue of the paper's per-statement translation table
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30  # finite -inf stand-in; keeps exp()/max() NaN-free in bf16
@@ -96,6 +97,25 @@ def lse_merge(acc, m, l):
     width = m.shape[-1]
     bcast = lambda x: jnp.broadcast_to(x, x.shape[:-1] + (width,))
     return acc_c, bcast(m_max), bcast(l_c)
+
+
+def lse_merge_axis(acc, m, l, axis_name: str):
+    """Shard-aware :func:`lse_merge` — merge online-softmax partials held
+    by the ranks of a named mesh axis (inside ``shard_map``).
+
+    Each rank ran an independent online softmax over its KV slice (a
+    sequence shard of a replicated latent cache, or the local portion of a
+    split-KV launch); ``all_gather`` stacks the per-rank ``(acc, m, l)``
+    along a fresh leading axis and the ordinary :func:`lse_merge` reduces
+    it — the same rescale-to-global-max algebra, so every rank computes the
+    identical merged state deterministically (gather order is the fixed
+    axis order, not arrival order).
+
+    Returns the merged ``(acc, m, l)`` *without* dividing — callers hold
+    arbitrary-rank state, and the epilogue divide stays theirs.
+    """
+    ga = lambda x: jax.lax.all_gather(x, axis_name, axis=0, tiled=False)
+    return lse_merge(ga(acc), ga(m), ga(l))
 
 
 def divide(acc, l):

@@ -128,6 +128,7 @@ def flash_decode(
     q, k_cache, v_cache, *,
     cache_len=None,
     num_splits: Optional[int] = None,
+    shards: int = 1,
     interpret: bool = True,
     target: str = "v5e",
 ):
@@ -147,7 +148,9 @@ def flash_decode(
     ``None`` lets the reasoning stage split the KV axis when
     ``B * Hkv`` under-fills the device for this bucket (Flash-Decoding);
     an explicit int forces that many splits (clamped to whole KV tiles).
-    One kernel is compiled per (bucket, splits).
+    One kernel is compiled per (bucket, splits).  ``shards`` (model-axis
+    mesh width of a sharded serving engine) rescales the reasoned choice
+    to per-shard rows — pass the *global* row count, not the local one.
     """
     b, hq, one, d = q.shape
     assert one == 1, "decode takes exactly one new token"
@@ -159,7 +162,8 @@ def flash_decode(
                     head_dim=d, causal=False, mode="decode",
                     dtype=_DT[q.dtype])
     splits = resolve_num_splits(num_splits, rows=b * hkv, kv_len=n,
-                                page_size=None, target=target)
+                                page_size=None, target=target,
+                                shards=shards)
     kern = cached_kernel(spec, g, n, target, interpret, False, splits)
     bm, bn = kern.blocks.bm, kern.blocks.bn
     qp = _pad_rows(q_rows, 2, bm)
@@ -175,6 +179,7 @@ def paged_flash_decode(
     cache_len=None,
     kv_scales=None,
     num_splits: Optional[int] = None,
+    shards: int = 1,
     interpret: bool = True,
     target: str = "v5e",
 ):
@@ -211,7 +216,7 @@ def paged_flash_decode(
                     dtype=_DT[q.dtype], page_size=ps, kv_dtype=kv_dt)
     splits = resolve_num_splits(num_splits, rows=b * hkv,
                                 kv_len=bucket, page_size=ps,
-                                target=target)
+                                target=target, shards=shards)
     kern = cached_kernel(spec, g, bucket, target, interpret, False, splits)
     qp = _pad_rows(q_rows, 2, kern.blocks.bm)
     lens = _norm_cache_len(cache_len, b, bucket)
@@ -278,12 +283,16 @@ def paged_mla_prefill(
     target: str = "v5e",
     kv_lora_rank: int = 512,
     rope_head_dim: int = 64,
+    shard_axis: Optional[str] = None,
 ):
     """One prompt chunk of causal MLA attention against a paged latent
     cache.  q_latent: (B, H, C, R+Rr); ``c_pool``/``block_tables``/
     ``hist_len``/``chunk_cap`` follow :func:`paged_flash_prefill`;
     ``c_scale`` is the (P,) f32 per-page scale vector, required iff the
-    latent pool is int8."""
+    latent pool is int8.  ``shard_axis``: sequence-sharded serving — the
+    caller passes this rank's table slice and *local* ``hist_len`` (global
+    minus the rank's page offset; may go negative past the valid region)
+    and the kernel LSE-merges partial states across the mesh axis."""
     b, h, c, dq = q_latent.shape
     ps = c_pool.shape[1]
     if chunk_cap is not None:
@@ -297,7 +306,8 @@ def paged_mla_prefill(
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=True,
                         mode="chunk_prefill", dtype=_DT[q_latent.dtype],
                         page_size=ps, kv_dtype=kv_dt)
-    kern = cached_kernel(spec, cap, bucket, target, interpret, True)
+    kern = cached_kernel(spec, cap, bucket, target, interpret, True, 1,
+                         shard_axis)
     qp = _pad_rows(q_latent, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
     out = kern.pallas_fn(lens, tbl, *scales, qp, c_pool)
@@ -310,6 +320,7 @@ def paged_flash_verify(
     chunk_cap: Optional[int] = None,
     kv_scales=None,
     num_splits: Optional[int] = None,
+    shards: int = 1,
     interpret: bool = True,
     target: str = "v5e",
 ):
@@ -346,7 +357,8 @@ def paged_flash_verify(
                     mode="verify", dtype=_DT[q.dtype], page_size=ps,
                     kv_dtype=kv_dt)
     splits = resolve_num_splits(num_splits, rows=b * hq, kv_len=bucket,
-                                mode="verify", page_size=ps, target=target)
+                                mode="verify", page_size=ps, target=target,
+                                shards=shards)
     kern = cached_kernel(spec, cap, bucket, target, interpret, True, splits)
     qp = _pad_rows(q, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
@@ -360,15 +372,17 @@ def paged_mla_verify(
     chunk_cap: Optional[int] = None,
     c_scale=None,
     num_splits: Optional[int] = None,
+    shards: int = 1,
     interpret: bool = True,
     target: str = "v5e",
     kv_lora_rank: int = 512,
     rope_head_dim: int = 64,
+    shard_axis: Optional[str] = None,
 ):
     """Speculative-decode verification against a paged latent cache.
     q_latent: (B, H, C, R+Rr); everything else follows
     :func:`paged_flash_verify` (MLA verify grids expose ``B * H``
-    programs)."""
+    programs); ``shard_axis`` follows :func:`paged_mla_prefill`."""
     b, h, c, dq = q_latent.shape
     ps = c_pool.shape[1]
     if chunk_cap is not None:
@@ -383,8 +397,10 @@ def paged_mla_verify(
                         mode="verify", dtype=_DT[q_latent.dtype],
                         page_size=ps, kv_dtype=kv_dt)
     splits = resolve_num_splits(num_splits, rows=b * h, kv_len=bucket,
-                                mode="verify", page_size=ps, target=target)
-    kern = cached_kernel(spec, cap, bucket, target, interpret, True, splits)
+                                mode="verify", page_size=ps, target=target,
+                                shards=shards)
+    kern = cached_kernel(spec, cap, bucket, target, interpret, True, splits,
+                         shard_axis)
     qp = _pad_rows(q_latent, 2, kern.blocks.bm)
     lens = _norm_cache_len(hist_len, b, 0)
     out = kern.pallas_fn(lens, tbl, *scales, qp, c_pool)
@@ -396,10 +412,12 @@ def paged_mla_decode(
     cache_len=None,
     c_scale=None,
     num_splits: Optional[int] = None,
+    shards: int = 1,
     interpret: bool = True,
     target: str = "v5e",
     kv_lora_rank: int = 512,
     rope_head_dim: int = 64,
+    shard_axis: Optional[str] = None,
 ):
     """Single-token MLA decode against a paged latent cache.
 
@@ -419,8 +437,9 @@ def paged_mla_decode(
                         mode="decode", dtype=_DT[q_latent.dtype],
                         page_size=ps, kv_dtype=kv_dt)
     splits = resolve_num_splits(num_splits, rows=b, kv_len=bucket,
-                                page_size=ps, target=target)
-    kern = cached_kernel(spec, h, bucket, target, interpret, False, splits)
+                                page_size=ps, target=target, shards=shards)
+    kern = cached_kernel(spec, h, bucket, target, interpret, False, splits,
+                         shard_axis)
     # heads -> rows: (B, H, 1, Dq) -> (B, 1, H, Dq)
     q_rows = q_latent.reshape(b, 1, h, dq)
     qp = _pad_rows(q_rows, 2, kern.blocks.bm)
@@ -433,6 +452,7 @@ def mla_decode(
     q_latent, c_cache, *,
     cache_len=None,
     num_splits: Optional[int] = None,
+    shards: int = 1,
     interpret: bool = True,
     target: str = "v5e",
     kv_lora_rank: int = 512,
@@ -449,7 +469,8 @@ def mla_decode(
     spec = AttnSpec.mla(h, kv_lora_rank, rope_head_dim, causal=False,
                         mode="decode", dtype=_DT[q_latent.dtype])
     splits = resolve_num_splits(num_splits, rows=b, kv_len=n,
-                                page_size=None, target=target)
+                                page_size=None, target=target,
+                                shards=shards)
     kern = cached_kernel(spec, h, n, target, interpret, False, splits)
     bm, bn = kern.blocks.bm, kern.blocks.bn
     # heads -> rows: (B, H, 1, Dq) -> (B, 1, H, Dq)

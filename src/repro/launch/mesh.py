@@ -20,9 +20,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model_axis: int = 1):
-    """Whatever this process actually has (tests / examples)."""
+    """Whatever this process actually has (tests / examples).
+
+    The model axis must tile the device count; when the request doesn't
+    divide n we fall back to the largest divisor of n that is <= the
+    request, so (n // model_axis, model_axis) always covers all devices.
+    """
     n = len(jax.devices())
-    model_axis = min(model_axis, n)
+    model_axis = max(1, min(model_axis, n))
+    while n % model_axis != 0:
+        model_axis -= 1
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 

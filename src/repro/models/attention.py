@@ -35,7 +35,7 @@ from .config import ModelConfig
 def xla_flash(q, k, v, *, causal: bool, scale: float,
               window: Optional[int] = None, kv_valid=None,
               chunk: int = 1024, prechunked: bool = False,
-              num_splits: int = 1):
+              num_splits: int = 1, return_state: bool = False):
     """Chunked online-softmax attention.  q: (B,Hq,M,D), k/v: (B,Hkv,N,Dv).
 
     ``kv_valid``: number of valid KV entries — None (all), a scalar, or a
@@ -54,7 +54,13 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
     softmax states are LSE-merged (:func:`semantics.lse_merge`) before
     normalisation.  Requests are clamped to whole chunks (a divisor of
     the chunk count), so the merged result is numerically the single-scan
-    answer."""
+    answer.
+
+    ``return_state``: return the *pre-divide* online-softmax state
+    ``(acc, m, l)`` — f32, shaped ``(B,Hq,M,Dv)`` / ``(B,Hq,M,1)`` — instead
+    of the normalised output.  Sequence-sharded callers LSE-merge these
+    states across mesh ranks (:func:`semantics.lse_merge_axis`) before the
+    epilogue divide."""
     b, hq, m, d = q.shape
     if prechunked:
         nc, _, hkv, chunk, dv = v.shape
@@ -147,6 +153,9 @@ def xla_flash(q, k, v, *, causal: bool, scale: float,
             acc.reshape((ns, b) + acc.shape[1:]),
             m_f.reshape((ns, b) + m_f.shape[1:]),
             l_f.reshape((ns, b) + l_f.shape[1:]))
+    if return_state:
+        return (acc.reshape(b, hq, m, dv),
+                m_f.reshape(b, hq, m, 1), l_f.reshape(b, hq, m, 1))
     out = acc / jnp.where(l_f == 0.0, 1.0, l_f)
     return out.reshape(b, hq, m, dv).astype(q.dtype)
 
@@ -298,7 +307,7 @@ def _quantize(new32, s_tok):
     return jnp.clip(jnp.round(new32 / s), -_QMAX, _QMAX).astype(jnp.int8)
 
 
-def paged_scatter_quant(pool, tables, pos, new, *, scale):
+def paged_scatter_quant(pool, tables, pos, new, *, scale, amax_axis=None):
     """Quantizing :func:`paged_scatter` for int8 page pools.
 
     ``pool``: int8 (P, Hkv, ps, D) / (P, ps, D); ``scale``: (P,) f32
@@ -307,13 +316,21 @@ def paged_scatter_quant(pool, tables, pos, new, *, scale):
     page grows that page's scale, renormalising the page's existing int8
     content to the new scale before the token is quantized in (bounded
     requantization error ≤ half a quantum of the grown scale).  Returns
-    ``(pool, scale)`` — the caller threads both through the cache."""
+    ``(pool, scale)`` — the caller threads both through the cache.
+
+    ``amax_axis``: named mesh axis to ``pmax`` the per-token absmax over
+    before growing scales.  Head-sharded pools (tensor-parallel serving)
+    hold disjoint head slices per shard, but the per-page scale table is
+    *replicated* — maxing the absmax across the axis keeps every shard's
+    scales byte-identical to the single-device pool's."""
     ps = pool.shape[-2]
     pos = jnp.asarray(pos, jnp.int32).reshape(-1)
     pages = jnp.take_along_axis(
         jnp.asarray(tables, jnp.int32), (pos // ps)[:, None], axis=1)[:, 0]
     new32 = jnp.asarray(new, jnp.float32)
     amax = jnp.abs(new32).reshape(new32.shape[0], -1).max(axis=1)   # (B,)
+    if amax_axis is not None:
+        amax = jax.lax.pmax(amax, amax_axis)
     pool, grown = _quant_rescale(pool, scale, pages, amax)
     q = _quantize(new32, grown[pages])
     if pool.ndim == 4:
@@ -321,12 +338,13 @@ def paged_scatter_quant(pool, tables, pos, new, *, scale):
     return pool.at[pages, pos % ps].set(q), grown
 
 
-def paged_scatter_chunk_quant(pool, tables, start, new, *, scale, valid=None):
-    """Quantizing :func:`paged_scatter_chunk`.  ``scale``/``valid`` follow
-    :func:`paged_scatter_quant` / :func:`paged_scatter_chunk`; positions
-    past ``valid`` neither write the pool nor bump any page's scale (a
-    padded tail chunk may not touch pages another request already owns).
-    Returns ``(pool, scale)``."""
+def paged_scatter_chunk_quant(pool, tables, start, new, *, scale, valid=None,
+                              amax_axis=None):
+    """Quantizing :func:`paged_scatter_chunk`.  ``scale``/``valid``/
+    ``amax_axis`` follow :func:`paged_scatter_quant` /
+    :func:`paged_scatter_chunk`; positions past ``valid`` neither write the
+    pool nor bump any page's scale (a padded tail chunk may not touch pages
+    another request already owns).  Returns ``(pool, scale)``."""
     ps = pool.shape[-2]
     c = new.shape[-2]
     start = jnp.asarray(start, jnp.int32).reshape(-1)
@@ -343,6 +361,8 @@ def paged_scatter_chunk_quant(pool, tables, start, new, *, scale, valid=None):
     amax = jnp.abs(upd).reshape(upd.shape[0], c, -1).max(axis=-1)   # (B, C)
     if keep is not None:
         amax = jnp.where(keep, amax, 0.0)
+    if amax_axis is not None:
+        amax = jax.lax.pmax(amax, amax_axis)
     pool, grown = _quant_rescale(pool, scale, pages, amax)
     q = _quantize(upd, grown[pages])
     if pool.ndim == 4:
@@ -532,7 +552,7 @@ def _cache_append(buf, new, start, axis: int):
 def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
                cross_kv=None, causal=True, head_sharding=None,
                kv_bucket=None, block_tables=None, page_size=None,
-               num_splits=None, chunk_valid=None, verify=False):
+               num_splits=None, chunk_valid=None, verify=False, tp=None):
     """x: (B, T, d).  ``cache``: optional dict(k, v, len) for decode;
     ``cache['len']`` may be a scalar or a per-request (B,) vector.
     ``kv_bucket``: static length bucket — attention reads only the first
@@ -560,7 +580,13 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
     ``head_sharding``: PartitionSpec for (B, H, T, D) tensors — pins the
     q/o head dim to the 'model' axis so GSPMD never resolves the attention
     einsums by partial-summing a mis-sharded KV operand (a measured 2.7 TB
-    of per-step all-reduce on deepseek-v2-lite, EXPERIMENTS.md §Perf)."""
+    of per-step all-reduce on deepseek-v2-lite, EXPERIMENTS.md §Perf).
+    ``tp``: tensor-parallel serving context (``parallel.sharding.ServeTP``)
+    when running *inside* ``shard_map`` — the params/pools this shard holds
+    are already head slices under the 'kv'/'q' plans, so the math here is
+    unchanged except that int8 scale growth maxes absmax across the axis
+    (replicated scale tables stay byte-identical per shard); the caller
+    (transformer) psums the wo output across the axis."""
     b, t, d = x.shape
     hd = cfg.head_dim
     q = _constrain(jnp.einsum("btd,dhk->bhtk", x, params["wq"]),
@@ -586,20 +612,25 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             raise ValueError("block_tables given without page_size — the "
                              "paged cache layout needs both")
         hist = cache["len"]
-        tp = ((kv_bucket if kv_bucket is not None
-               else block_tables.shape[1] * page_size) // page_size)
+        tpc = ((kv_bucket if kv_bucket is not None
+                else block_tables.shape[1] * page_size) // page_size)
         # int8-quantized pools carry per-page scale leaves ("ks"/"vs");
         # the quantizing scatter threads them, attention dequantizes
         quant = "ks" in cache
+        # head-sharded pools (kv plan): scale growth maxes across the axis
+        amax_axis = (tp.axis if tp is not None and tp.plan == "kv"
+                     and tp.size > 1 else None)
         scales = None
         if t == 1:
             if quant:
                 kp, ksc = paged_scatter_quant(cache["k"], block_tables,
                                               hist, k[:, :, 0],
-                                              scale=cache["ks"])
+                                              scale=cache["ks"],
+                                              amax_axis=amax_axis)
                 vp, vsc = paged_scatter_quant(cache["v"], block_tables,
                                               hist, v[:, :, 0],
-                                              scale=cache["vs"])
+                                              scale=cache["vs"],
+                                              amax_axis=amax_axis)
                 scales = (ksc, vsc)
             else:
                 kp = paged_scatter(cache["k"], block_tables, hist,
@@ -610,17 +641,19 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             if quant:
                 cache["ks"], cache["vs"] = scales
             kv_valid = cache["len"]
-            o = run_paged_decode(q, kp, vp, block_tables[:, :tp], cfg=cfg,
+            o = run_paged_decode(q, kp, vp, block_tables[:, :tpc], cfg=cfg,
                                  cache_len=kv_valid, scale=hd ** -0.5,
                                  num_splits=num_splits, kv_scales=scales)
         else:
             if quant:
                 kp, ksc = paged_scatter_chunk_quant(
                     cache["k"], block_tables, hist, k,
-                    scale=cache["ks"], valid=chunk_valid)
+                    scale=cache["ks"], valid=chunk_valid,
+                    amax_axis=amax_axis)
                 vp, vsc = paged_scatter_chunk_quant(
                     cache["v"], block_tables, hist, v,
-                    scale=cache["vs"], valid=chunk_valid)
+                    scale=cache["vs"], valid=chunk_valid,
+                    amax_axis=amax_axis)
                 scales = (ksc, vsc)
             else:
                 kp = paged_scatter_chunk(cache["k"], block_tables, hist, k,
@@ -631,13 +664,13 @@ def attn_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
             if quant:
                 cache["ks"], cache["vs"] = scales
             if verify:
-                o = run_paged_verify(q, kp, vp, block_tables[:, :tp],
+                o = run_paged_verify(q, kp, vp, block_tables[:, :tpc],
                                      cfg=cfg, hist_len=hist,
                                      scale=hd ** -0.5,
                                      num_splits=num_splits,
                                      kv_scales=scales)
             else:
-                o = run_paged_prefill(q, kp, vp, block_tables[:, :tp],
+                o = run_paged_prefill(q, kp, vp, block_tables[:, :tpc],
                                       cfg=cfg, hist_len=hist,
                                       scale=hd ** -0.5, kv_scales=scales)
     elif cache is not None:
@@ -727,14 +760,23 @@ def mla_init(key, cfg: ModelConfig):
 def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
               causal=True, head_sharding=None, latent_sharding=None,
               kv_bucket=None, block_tables=None, page_size=None,
-              num_splits=None, chunk_valid=None, verify=False):
+              num_splits=None, chunk_valid=None, verify=False, tp=None):
     """Absorbed MLA.  The latent cache (R + Rr per token, head-independent)
     is both K and V — read once for both GEMMs (paper Table 2 workload).
     ``cache['len']``/``kv_bucket``/``block_tables``/``page_size``/
     ``num_splits``/``chunk_valid``/``verify`` follow :func:`attn_apply`;
     the paged pool is (P, page_size, R+Rr).  MLA decode launches only B
     programs (one latent KV head), so the split heuristic engages earliest
-    here."""
+    here.
+
+    ``tp``: tensor-parallel serving context inside ``shard_map``.  MLA has
+    one latent KV head, so head sharding cannot help — the ``'seq'`` plan
+    keeps the pool, tables and params replicated and splits the *sequence*:
+    each rank attends over its contiguous slice of table columns with a
+    rank-local history length, and the per-rank online-softmax states
+    LSE-merge across the axis (:func:`semantics.lse_merge_axis`) before the
+    epilogue divide — exactly split-KV decode with the mesh axis as the
+    split grid, so the merged result is bit-identical to one device."""
     b, t, d = x.shape
     h, r, rr = cfg.num_q_heads, cfg.kv_lora_rank, cfg.rope_head_dim
     nope = cfg.nope_head_dim
@@ -804,48 +846,84 @@ def mla_apply(params, x, *, cfg: ModelConfig, positions=None, cache=None,
 
     scale = (nope + rr) ** -0.5
     if paged:
-        tp = ((kv_bucket if kv_bucket is not None
-               else block_tables.shape[1] * page_size) // page_size)
-        tbl = block_tables[:, :tp]
+        tpc = ((kv_bucket if kv_bucket is not None
+                else block_tables.shape[1] * page_size) // page_size)
+        tbl = block_tables[:, :tpc]
+        # 'seq' plan: this rank covers a contiguous slice of the bucket's
+        # table columns; lengths shift by the rank's token offset (they may
+        # go negative past the valid region — those ranks mask everything
+        # and their NEG_INF states merge with zero weight)
+        seq = (tp is not None and tp.plan == "seq" and tp.size > 1)
+        seq_off = None
+        if seq:
+            if tpc % tp.size:
+                raise ValueError(
+                    f"seq-plan bucket ({tpc} pages) must divide over the "
+                    f"model axis ({tp.size}) — the engine floors the "
+                    "bucket at page_size * axis size")
+            tpr = tpc // tp.size
+            rank = jax.lax.axis_index(tp.axis)
+            tbl = jax.lax.dynamic_slice_in_dim(tbl, rank * tpr, tpr, axis=1)
+            seq_off = rank * (tpr * page_size)
         if cfg.attn_impl == "tl_pallas":
             from ..kernels import ops
+            axis = tp.axis if seq else None
+            lens_d = kv_valid if not seq else jnp.asarray(kv_valid) - seq_off
+            lens_h = hist if not seq else jnp.asarray(hist) - seq_off
             if t == 1:
                 o_lat = ops.paged_mla_decode(q_full, pool, tbl,
-                                             cache_len=kv_valid,
+                                             cache_len=lens_d,
                                              c_scale=c_scale,
                                              num_splits=num_splits,
                                              kv_lora_rank=r,
-                                             rope_head_dim=rr)
+                                             rope_head_dim=rr,
+                                             shard_axis=axis)
             elif verify:
                 o_lat = ops.paged_mla_verify(q_full, pool, tbl,
-                                             hist_len=hist,
+                                             hist_len=lens_h,
                                              c_scale=c_scale,
                                              num_splits=num_splits,
                                              kv_lora_rank=r,
-                                             rope_head_dim=rr)
+                                             rope_head_dim=rr,
+                                             shard_axis=axis)
             else:
                 o_lat = ops.paged_mla_prefill(q_full, pool, tbl,
-                                              hist_len=hist,
+                                              hist_len=lens_h,
                                               c_scale=c_scale,
                                               kv_lora_rank=r,
-                                              rope_head_dim=rr)
+                                              rope_head_dim=rr,
+                                              shard_axis=axis)
         else:
             # page gather straight into the flash scan: one chunk per page
             # (dequantizing an int8 latent pool on the way)
             lat = gather_prechunked(pool, tbl, c_scale)[:, :, None]
             ps = pool.shape[-2]
-            splits = 1
-            if t == 1:
-                splits = _resolve_splits(num_splits, rows=b,
-                                         kv_len=tbl.shape[-1] * ps,
-                                         page_size=ps)
-            elif verify:
-                splits = _resolve_splits(num_splits, rows=b * h,
-                                         kv_len=tbl.shape[-1] * ps,
-                                         page_size=ps, mode="verify")
-            o_lat = xla_flash(q_full, lat, lat[..., :r], causal=t > 1,
-                              scale=scale, kv_valid=kv_valid,
-                              prechunked=True, num_splits=splits)
+            if seq:
+                # per-rank flash scan over the local slice, then the
+                # cross-rank LSE merge; local kv_valid keeps the causal
+                # diagonal aligned (both q and k positions shift by the
+                # same rank offset)
+                acc, m_f, l_f = xla_flash(
+                    q_full, lat, lat[..., :r], causal=t > 1, scale=scale,
+                    kv_valid=jnp.asarray(kv_valid) - seq_off,
+                    prechunked=True, num_splits=1, return_state=True)
+                acc, m_f, l_f = semantics.lse_merge_axis(
+                    acc, m_f, l_f, tp.axis)
+                o_lat = (acc / jnp.where(l_f == 0.0, 1.0, l_f)) \
+                    .astype(q_full.dtype)
+            else:
+                splits = 1
+                if t == 1:
+                    splits = _resolve_splits(num_splits, rows=b,
+                                             kv_len=tbl.shape[-1] * ps,
+                                             page_size=ps)
+                elif verify:
+                    splits = _resolve_splits(num_splits, rows=b * h,
+                                             kv_len=tbl.shape[-1] * ps,
+                                             page_size=ps, mode="verify")
+                o_lat = xla_flash(q_full, lat, lat[..., :r], causal=t > 1,
+                                  scale=scale, kv_valid=kv_valid,
+                                  prechunked=True, num_splits=splits)
     elif cfg.attn_impl == "tl_pallas":
         from ..kernels import ops
         if cache is not None and t == 1:

@@ -109,7 +109,7 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                 page_size=ctx.get("page_size"),
                 num_splits=ctx.get("num_splits"),
                 chunk_valid=ctx.get("chunk_valid"),
-                verify=bool(ctx.get("verify")))
+                verify=bool(ctx.get("verify")), tp=ctx.get("tp"))
         else:
             o, new_cache = attention.attn_apply(
                 p["mix"], h, cfg=cfg, positions=ctx.get("positions"),
@@ -119,9 +119,15 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                 page_size=ctx.get("page_size"),
                 num_splits=ctx.get("num_splits"),
                 chunk_valid=ctx.get("chunk_valid"),
-                verify=bool(ctx.get("verify")))
+                verify=bool(ctx.get("verify")), tp=ctx.get("tp"))
         if new_cache is not None:
             new_cache.pop("len", None)  # length tracked by the caller
+        tp = ctx.get("tp")
+        if tp is not None and kind in ("attn", "self") \
+                and tp.plan in ("kv", "q") and tp.size > 1:
+            # head-sharded wo: each shard contracted its head slice — the
+            # residual contribution is a partial sum over the model axis
+            o = jax.lax.psum(o, tp.axis)
     elif kind == "cross":
         o, new_cache = attention.cross_attn_apply(
             p["mix"], h, cfg=cfg, vision=ctx.get("vision"),
@@ -143,6 +149,10 @@ def _sublayer_apply(p, x, kind: str, use_moe: bool, cfg: ModelConfig, ctx):
                                    ep_sharding=ctx.get("ep_sharding"))
     else:
         f = layers.swiglu(p["ffn"], h2)
+        tp = ctx.get("tp")
+        if tp is not None and tp.ffn and tp.size > 1:
+            # ff-sharded w_down: partial sum over the model axis
+            f = jax.lax.psum(f, tp.axis)
     return x + f, new_cache, aux
 
 
@@ -202,7 +212,7 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
           block_tables=None, page_size=None, num_splits=None,
           chunk_valid=None, verify=False, act_sharding=None,
           ep_sharding=None, head_sharding=None, latent_sharding=None,
-          moe_mesh=None):
+          moe_mesh=None, tp=None):
     """tokens: (B, T) int32 -> logits (B, T, V) f32.
 
     ``caches``: pytree from :func:`init_caches` for decode; ``cache_len``
@@ -235,6 +245,14 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
     per-position logits are the draft-acceptance oracle.  Semantically
     identical to chunked prefill of the same tokens; only the
     work-partitioning differs.
+
+    ``tp``: tensor-parallel serving context (``parallel.sharding.ServeTP``)
+    — only meaningful when ``apply`` runs *inside* ``shard_map`` on a
+    device mesh: attention params are per-shard head slices ('kv'/'q'
+    plans; their wo contribution psums over the axis), MLA sequence-splits
+    its replicated latent cache ('seq' plan), and a sharded dense FFN
+    psums its w_down contraction.  ``None`` (the default) is the ordinary
+    single-device/GSPMD path.
 
     ``act_sharding``: optional PartitionSpec for the (B, T, d) residual
     stream.  Constraining it *inside* the period scan is what shards the
@@ -284,7 +302,7 @@ def apply(params, tokens, cfg: ModelConfig, *, vision_embeds=None,
                 "ep_sharding": ep_sharding,
                 "head_sharding": head_sharding,
                 "latent_sharding": latent_sharding,
-                "moe_mesh": moe_mesh}
+                "moe_mesh": moe_mesh, "tp": tp}
 
     # leading dense layers
     new_first_caches = []

@@ -1,8 +1,14 @@
 from .sharding import (  # noqa: F401
     DP_AXES,
+    ServeTP,
     batch_pspec,
     cache_pspec,
+    choose_serve_plan,
     named_sharding_tree,
     param_pspec,
     param_sharding_tree,
+    permute_q_heads,
+    q_head_permutation,
+    serve_cache_pspec,
+    serve_param_pspec,
 )

@@ -21,8 +21,12 @@ dims (periods) are automatically skipped.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
 
 DP_AXES = ("pod", "data")   # FSDP group (pod axis present only multi-pod)
 
@@ -197,3 +201,149 @@ def named_sharding_tree(abstract_tree, mesh: Mesh, pspec_fn):
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: NamedSharding(mesh, pspec_fn(path, leaf, mesh)),
         abstract_tree)
+
+
+# --------------------------------------------------------------------------
+# tensor-parallel serving (head-sharded paged attention under shard_map)
+# --------------------------------------------------------------------------
+#
+# The serving engine runs its whole hot path (decode / chunk prefill /
+# verify) inside shard_map over a ('data', 'model') mesh.  Unlike the
+# training rules above (GSPMD annotations), serving shards *explicitly*:
+# every shard executes the same program on its slice, and the only
+# cross-shard communication is one psum per block (head plans) or one
+# LSE-merge all-gather per attention (MLA's sequence plan).  Host-side
+# state — the page allocator, block tables, scale tables, prefix index —
+# stays replicated and byte-identical: one allocator, one admission
+# decision, N shards.
+#
+# Plan ladder (``choose_serve_plan``):
+#   'kv'        GQA/MQA, Hkv % mp == 0: shard KV heads (and their whole
+#               query groups) contiguously; page pools shard on their head
+#               axis, so each shard's pool is the head slice of the
+#               single-device pool.
+#   'q'         Hkv doesn't divide but Hq and the group size do: KV stays
+#               replicated, query heads shard after a group-interleaved
+#               permutation (``q_head_permutation``) so each shard's
+#               contiguous head slice still reshapes to (Hkv, G/mp).
+#   'seq'       MLA (one latent KV head): pool/tables/params replicated,
+#               each rank attends over its slice of the table columns and
+#               the online-softmax states LSE-merge across the axis.
+#   'replicate' fallback — every shard does the full computation (also
+#               forced for padded-head configs, whose pad masking is not
+#               slice-invariant).
+
+@dataclasses.dataclass(frozen=True)
+class ServeTP:
+    """Tensor-parallel serving context, threaded into ``transformer.apply``
+    (inside shard_map) so sub-layers know which axis to reduce over."""
+    axis: str = "model"
+    size: int = 1
+    plan: str = "replicate"      # 'kv' | 'q' | 'seq' | 'replicate'
+    ffn: bool = False            # dense-FFN w_down contraction is sharded
+
+
+def choose_serve_plan(cfg: ModelConfig, model_axis: int,
+                      axis: str = "model") -> ServeTP:
+    """Pick the head-sharding plan for serving ``cfg`` over ``model_axis``
+    shards (the fallback ladder above)."""
+    mp = max(1, int(model_axis))
+    ffn = (mp > 1 and not cfg.rwkv and cfg.d_ff % mp == 0)
+    if mp == 1:
+        return ServeTP(axis=axis, size=1, plan="replicate", ffn=False)
+    if cfg.rwkv or cfg.hybrid_period or cfg.cross_attn_period:
+        # non-attention mixers keep their own state layouts — replicate
+        return ServeTP(axis=axis, size=mp, plan="replicate", ffn=ffn)
+    if cfg.pad_q_heads_to > cfg.num_q_heads:
+        return ServeTP(axis=axis, size=mp, plan="replicate", ffn=ffn)
+    if cfg.mla:
+        # power-of-two axis keeps every power-of-two KV bucket divisible
+        plan = "seq" if mp & (mp - 1) == 0 else "replicate"
+        return ServeTP(axis=axis, size=mp, plan=plan, ffn=ffn)
+    hq, hkv = cfg.num_q_heads, cfg.num_kv_heads
+    if hkv % mp == 0:
+        return ServeTP(axis=axis, size=mp, plan="kv", ffn=ffn)
+    if hq % mp == 0 and (hq // hkv) % mp == 0:
+        return ServeTP(axis=axis, size=mp, plan="q", ffn=ffn)
+    return ServeTP(axis=axis, size=mp, plan="replicate", ffn=ffn)
+
+
+def q_head_permutation(cfg: ModelConfig, mp: int) -> list[int]:
+    """Group-interleaved query-head order for the 'q' plan.
+
+    Contiguous head slices break GQA's grouped reshape when Hkv stays
+    replicated; reordering heads so shard ``s`` holds, for every KV head,
+    the ``s``-th sub-group of its queries restores it: the local head
+    index ``kv * gl + j`` maps to KV head ``idx // gl`` exactly like the
+    unsharded layout.  (Identity for MQA, where Hkv == 1.)"""
+    hq, hkv = cfg.num_q_heads, cfg.num_kv_heads
+    g = hq // hkv
+    gl = g // mp
+    return [kv * g + s * gl + j
+            for s in range(mp) for kv in range(hkv) for j in range(gl)]
+
+
+def permute_q_heads(params, cfg: ModelConfig, mp: int):
+    """Apply :func:`q_head_permutation` to every wq (head axis -2) and wo
+    (head axis -3) leaf — done once, host-side, before placing the params
+    on the mesh under the 'q' plan."""
+    import jax.numpy as jnp
+    perm = jnp.asarray(q_head_permutation(cfg, mp))
+
+    def fix(path, leaf):
+        name = _leaf_name(path)
+        if name == "wq":
+            return jnp.take(leaf, perm, axis=leaf.ndim - 2)
+        if name == "wo":
+            return jnp.take(leaf, perm, axis=leaf.ndim - 3)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+# serving rules: leaf name -> per-dim spec on the *base* (unstacked) shape;
+# leading period/stack dims replicate.  Only the model axis is used — data
+# parallelism in serving is request routing, not tensor slicing.
+_SERVE_RULES: dict[str, dict[str, tuple]] = {
+    "kv": {
+        "wq": (None, "model", None), "wk": (None, "model", None),
+        "wv": (None, "model", None), "wo": ("model", None, None),
+    },
+    "q": {
+        "wq": (None, "model", None), "wo": ("model", None, None),
+    },
+}
+_SERVE_FFN_RULES: dict[str, tuple] = {
+    "w_gate": (None, "model"), "w_up": (None, "model"),
+    "w_down": ("model", None),
+}
+
+
+def serve_param_pspec(path, leaf, tp: ServeTP) -> P:
+    """PartitionSpec for one parameter leaf under a serving plan."""
+    if tp.size <= 1:
+        return P()
+    name = _leaf_name(path)
+    rule = _SERVE_RULES.get(tp.plan, {}).get(name)
+    if rule is None and tp.ffn:
+        rule = _SERVE_FFN_RULES.get(name)
+    if rule is None:
+        return P()
+    lead = len(leaf.shape) - len(rule)
+    if lead < 0:
+        return P()
+    return P(*([None] * lead + [a for a in rule]))
+
+
+def serve_cache_pspec(path, leaf, tp: ServeTP) -> P:
+    """PartitionSpec for one paged-cache leaf under a serving plan.
+
+    Only the 'kv' plan shards device state: the k/v page pools split on
+    their head axis (ndim-3).  Scale leaves, MLA latent pools and every
+    recurrent state stay replicated."""
+    name = _leaf_name(path)
+    if tp.size > 1 and tp.plan == "kv" and name in ("k", "v") \
+            and len(leaf.shape) >= 4:
+        spec: list = [None] * len(leaf.shape)
+        spec[len(leaf.shape) - 3] = "model"
+        return P(*spec)
+    return P()

@@ -76,7 +76,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
+from .. import parallel
 from ..core.reason import resolve_num_splits
 from ..models import transformer
 from ..models.config import ModelConfig
@@ -599,7 +602,8 @@ class ServeEngine:
                  spec_decode: bool = False, draft_k: int = 4,
                  draft_proposer=None,
                  kv_quant: bool = False,
-                 target: str = "v5e"):
+                 target: str = "v5e",
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -654,6 +658,52 @@ class ServeEngine:
         # (decode_parallelism differs across TPU generations).
         self.num_splits = None if num_splits is None else int(num_splits)
         self.target = target
+        # Tensor-parallel serving mesh (None = single device).  Heads — or,
+        # for MLA, the per-rank page-table column range — shard over the
+        # mesh's ``model`` axis per :func:`parallel.choose_serve_plan`;
+        # every dispatch on the hot path (decode / chunk prefill / verify)
+        # runs inside shard_map while the host-side scheduler (allocator,
+        # block tables, scale mirrors, prefix index) stays replicated and
+        # byte-identical to the single-device engine.
+        self.mesh = mesh
+        if mesh is not None:
+            axes = tuple(getattr(mesh, "axis_names", ()))
+            if "model" not in axes:
+                raise ValueError(
+                    f"serving mesh needs a 'model' axis (got {axes}); "
+                    "build one with launch.make_host_mesh or "
+                    "jax.make_mesh((data, model), ('data', 'model'))")
+            if not self.paged:
+                raise ValueError(
+                    "mesh serving is paged-only (the sharded dispatches "
+                    "run over page pools); construct with paged=True on "
+                    "an attention-cache architecture")
+            self._tp = parallel.choose_serve_plan(
+                cfg, int(mesh.shape["model"]))
+            self._mesh_key = tuple(int(mesh.shape[a]) for a in axes)
+            if self._tp.plan == "seq":
+                unit = self.page_size * self._tp.size
+                if self.max_len % unit:
+                    raise ValueError(
+                        "the MLA seq plan splits page-table columns "
+                        f"evenly across ranks: max_len {self.max_len} "
+                        "must be a multiple of page_size * model_axis "
+                        f"({unit})")
+            if self._tp.plan == "q" and self._tp.size > 1:
+                # group-interleaved head order (host-side, once) so each
+                # rank's contiguous q slice still reshapes into GQA groups
+                params = parallel.permute_q_heads(params, cfg,
+                                                  self._tp.size)
+            pspec = jax.tree_util.tree_map_with_path(
+                lambda pth, leaf: parallel.serve_param_pspec(
+                    pth, leaf, self._tp), params)
+            params = jax.device_put(params, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), pspec,
+                is_leaf=lambda x: isinstance(x, P)))
+            self.params = params
+        else:
+            self._tp = None
+            self._mesh_key = None
         # Int8-quantized KV pages: pools store symmetric int8 with one
         # f32 absmax scale per page ("ks"/"vs"/"cs" cache leaves); the
         # attention layer quantizes on scatter and dequantizes per page
@@ -729,7 +779,7 @@ class ServeEngine:
                 kv_bucket=kv_bucket, num_splits=num_splits,
                 block_tables=tables,
                 page_size=self.page_size if tables is not None else None,
-                vision_embeds=self.vision)
+                vision_embeds=self.vision, tp=self._tp)
             return logits[:, -1], caches
 
         # one chunk of chunked prefill, written straight into the pages:
@@ -743,7 +793,8 @@ class ServeEngine:
             logits, _, caches = transformer.apply(
                 params, tokens, cfg, caches=caches, cache_len=cache_len,
                 kv_bucket=kv_bucket, block_tables=tables,
-                page_size=self.page_size, chunk_valid=chunk_valid)
+                page_size=self.page_size, chunk_valid=chunk_valid,
+                tp=self._tp)
             return logits, caches
 
         # speculative verify: one K+1-token causal window per row (the
@@ -760,7 +811,7 @@ class ServeEngine:
                 params, toks, cfg, caches=caches, cache_len=cache_len,
                 kv_bucket=kv_bucket, num_splits=num_splits,
                 block_tables=tables, page_size=self.page_size,
-                chunk_valid=chunk_valid, verify=True)
+                chunk_valid=chunk_valid, verify=True, tp=self._tp)
             return logits, caches
 
         # copy one pool page (COW): page ``src`` -> ``dst`` in every
@@ -790,12 +841,80 @@ class ServeEngine:
                                           caches)
 
         self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(decode,
-                               static_argnames=("kv_bucket", "num_splits"))
-        self._chunk_step = jax.jit(chunk_prefill,
-                                   static_argnames=("kv_bucket",))
-        self._verify = jax.jit(verify,
-                               static_argnames=("kv_bucket", "num_splits"))
+        if mesh is None:
+            self._decode = jax.jit(
+                decode, static_argnames=("kv_bucket", "num_splits"))
+            self._chunk_step = jax.jit(chunk_prefill,
+                                       static_argnames=("kv_bucket",))
+            self._verify = jax.jit(
+                verify, static_argnames=("kv_bucket", "num_splits"))
+        else:
+            shard_map = getattr(jax, "shard_map", None)
+            if shard_map is None:  # pragma: no cover - version fallback
+                from jax.experimental.shard_map import shard_map
+            tp = self._tp
+
+            # shard_map wrapper for one hot-path dispatch: params and
+            # cache leaves shard per the serve plan, every other operand
+            # (tokens, lens, tables, chunk_valid) is replicated, and the
+            # logits come back replicated — the attention/FFN psums (and
+            # the seq plan's LSE merge) make every rank's output the full
+            # result, so downstream sampling is rank-independent.
+            def _sharded(fn, n_rep):
+                def call(params, toks, caches, *rest, **static):
+                    pspec = jax.tree_util.tree_map_with_path(
+                        lambda pth, leaf: parallel.serve_param_pspec(
+                            pth, leaf, tp), params)
+                    cspec = jax.tree_util.tree_map_with_path(
+                        lambda pth, leaf: parallel.serve_cache_pspec(
+                            pth, leaf, tp), caches)
+
+                    def local(p, t, c, *r):
+                        return fn(p, t, c, *r, **static)
+
+                    kwargs = dict(
+                        mesh=mesh,
+                        in_specs=(pspec, P(), cspec) + (P(),) * n_rep,
+                        out_specs=(P(), cspec))
+                    try:
+                        mapped = shard_map(local, check_vma=False,
+                                           **kwargs)
+                    except TypeError:  # pragma: no cover - older spelling
+                        mapped = shard_map(local, check_rep=False,
+                                           **kwargs)
+                    return mapped(params, toks, caches, *rest)
+                return call
+
+            dec = _sharded(decode, 2)
+
+            def decode_sharded(params, tok, caches, cache_len, tables,
+                               kv_bucket, num_splits):
+                return dec(params, tok, caches, cache_len, tables,
+                           kv_bucket=kv_bucket, num_splits=num_splits)
+
+            chk = _sharded(chunk_prefill, 3)
+
+            def chunk_sharded(params, tokens, caches, cache_len, tables,
+                              chunk_valid, kv_bucket):
+                return chk(params, tokens, caches, cache_len, tables,
+                           chunk_valid, kv_bucket=kv_bucket)
+
+            ver = _sharded(verify, 3)
+
+            def verify_sharded(params, toks, caches, cache_len, tables,
+                               chunk_valid, kv_bucket, num_splits):
+                return ver(params, toks, caches, cache_len, tables,
+                           chunk_valid, kv_bucket=kv_bucket,
+                           num_splits=num_splits)
+
+            self._decode = jax.jit(
+                decode_sharded,
+                static_argnames=("kv_bucket", "num_splits"))
+            self._chunk_step = jax.jit(chunk_sharded,
+                                       static_argnames=("kv_bucket",))
+            self._verify = jax.jit(
+                verify_sharded,
+                static_argnames=("kv_bucket", "num_splits"))
         self._cow_copy = jax.jit(cow_copy)
         self._zero_scale = jax.jit(zero_scale)
 
@@ -828,6 +947,11 @@ class ServeEngine:
         lo = self.decode_bucket_lo
         if self.paged:
             lo = max(lo, self.page_size)
+            if self._tp is not None and self._tp.plan == "seq":
+                # each rank owns an equal page-table column range, so the
+                # page count (bucket / page_size) must divide by the axis;
+                # both are powers of two, so flooring the bucket suffices
+                lo = max(lo, self.page_size * self._tp.size)
         return min(_bucket(needed, lo), self.max_len)
 
     def _decode_splits(self, bucket: int, batch: int,
@@ -842,10 +966,20 @@ class ServeEngine:
         autotuner search (``mode="verify"``)."""
         rows = batch * (1 if getattr(self.cfg, "mla", False)
                         else self.cfg.num_kv_heads)
+        shards, kv_len = 1, bucket
+        if self._tp is not None and self._tp.size > 1:
+            if self._tp.plan == "kv":
+                # each rank launches rows/size kernel rows (its head slice)
+                shards = self._tp.size
+            elif self._tp.plan == "seq":
+                # rows stay whole; each rank scans bucket/size KV entries
+                kv_len = max(self.page_size, bucket // self._tp.size)
+            # 'q' plan: KV heads replicated — the local launch width is
+            # unchanged, so the single-device reasoning already applies
         return resolve_num_splits(
-            self.num_splits, rows=rows, kv_len=bucket, mode=mode,
+            self.num_splits, rows=rows, kv_len=kv_len, mode=mode,
             page_size=self.page_size if paged_dispatch else None,
-            target=self.target)
+            target=self.target, shards=shards)
 
     def _run_decode(self, toks, caches, lens, tables, bucket: int):
         """One decode jit dispatch, with every shape-relevant knob —
@@ -855,13 +989,14 @@ class ServeEngine:
         splits = self._decode_splits(bucket, int(toks.shape[0]),
                                      tables is not None)
         self._decode_keys.add(
-            (int(toks.shape[0]), bucket, splits, tables is not None))
+            (int(toks.shape[0]), bucket, splits, tables is not None,
+             self._mesh_key))
         out = self._decode(self.params, toks, caches, lens, tables,
                            kv_bucket=bucket, num_splits=splits)
         assert self.decode_compiles == len(self._decode_keys), \
             f"decode retraced outside its key set: {self.decode_compiles} " \
             f"compiles for {len(self._decode_keys)} distinct " \
-            f"(batch, bucket, splits, paged) keys"
+            f"(batch, bucket, splits, paged, mesh-shape) keys"
         return out
 
     def _run_verify(self, toks, caches, lens, tables, valid, bucket: int):
@@ -874,14 +1009,14 @@ class ServeEngine:
         splits = self._decode_splits(bucket, int(toks.shape[0]), True,
                                      mode="verify")
         self._verify_keys.add((int(toks.shape[0]), cap, bucket, splits,
-                               True))
+                               True, self._mesh_key))
         out = self._verify(self.params, toks, caches, lens, tables, valid,
                            kv_bucket=bucket, num_splits=splits)
         assert self.verify_compiles == len(self._verify_keys), \
             f"verify retraced outside its key set: " \
             f"{self.verify_compiles} compiles for " \
             f"{len(self._verify_keys)} distinct " \
-            f"(batch, cap, bucket, splits, paged) keys"
+            f"(batch, cap, bucket, splits, paged, mesh-shape) keys"
         return out
 
     def _sample(self, logits, temperature: float, key):
@@ -910,6 +1045,10 @@ class ServeEngine:
         This one-shot path keeps the dense per-row cache (see module
         docstring); the paged storage belongs to the submit/step loop.
         """
+        if self.mesh is not None:
+            raise ValueError(
+                "generate() keeps a dense per-row cache; the mesh engine "
+                "serves through the paged submit()/step() path only")
         if len(prompts) > self.max_batch:
             raise ValueError(f"batch {len(prompts)} > max_batch "
                              f"{self.max_batch}")
@@ -1056,6 +1195,17 @@ class ServeEngine:
                 page_size=self.page_size,
                 num_pages=self.num_pages if self.paged else None,
                 kv_quant=self.kv_quant)
+            if self.mesh is not None:
+                # place pools on the mesh up front ('kv' plan: head-axis
+                # slices per rank; everything else replicated) so the
+                # first dispatch doesn't pay a layout-change transfer
+                cspec = jax.tree_util.tree_map_with_path(
+                    lambda pth, leaf: parallel.serve_cache_pspec(
+                        pth, leaf, self._tp), self._slot_caches)
+                self._slot_caches = jax.device_put(
+                    self._slot_caches, jax.tree.map(
+                        lambda s: NamedSharding(self.mesh, s), cspec,
+                        is_leaf=lambda x: isinstance(x, P)))
             self._slot_lens = np.zeros((self.max_batch,), np.int32)
             vocab = self.cfg.vocab_size
             self._slot_logits = jnp.zeros((self.max_batch, vocab),

@@ -1,0 +1,523 @@
+"""Tensor-parallel sharded serving: head-sharded paged attention on a mesh.
+
+The contract under test (this PR's tentpole): ``ServeEngine(mesh=...)``
+runs its whole hot path — decode, chunked prefill, speculative verify,
+split-KV combine — inside ``shard_map`` over a ``('data', 'model')`` mesh,
+sharding attention heads (GQA 'kv'/'q' plans) or the KV sequence (MLA
+'seq' plan) over the model axis, and the *committed token streams are
+bit-identical* to the single-device engine.  Host-side scheduler state
+(allocator, block tables, scale tables, prefix index) stays replicated, so
+every serving feature — prefix cache, COW, preemption, kv_quant,
+spec-decode — composes with the mesh unchanged.
+
+Anything needing >1 device runs in a subprocess with
+``--xla_force_host_platform_device_count=8`` (in-process tests keep one
+device, per the dry-run isolation rule).  Plan selection, the q-head
+permutation, and the PartitionSpec rules are pure and test in-process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+
+from repro.launch.mesh import make_host_mesh
+from repro.models import registry, transformer
+from repro.parallel import (
+    choose_serve_plan,
+    param_pspec,
+    q_head_permutation,
+    serve_cache_pspec,
+    serve_param_pspec,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# --------------------------------------------------------------------------
+# token-stream identity: sharded engine == single-device engine
+# --------------------------------------------------------------------------
+
+_IDENTITY_PRELUDE = """
+    import json
+    import jax
+    from repro.models import registry, transformer
+    from repro.serve.engine import ServeEngine
+    from repro.launch.mesh import make_host_mesh
+
+    PROMPTS = [[1, 2, 3, 4, 5, 6, 7], [3, 1, 4, 1, 5, 9, 2, 6, 5, 3],
+               [7, 7, 7], [2, 7, 1, 8, 2, 8]]
+
+    def serve(mesh, cfg, params, steps=6, **kw):
+        eng = ServeEngine(cfg, params, max_batch=4, max_len=256,
+                          page_size=16, decode_bucket_lo=16, mesh=mesh,
+                          **kw)
+        for p in PROMPTS:
+            eng.submit(p, max_new_tokens=steps)
+        done = eng.run_until_drained()
+        return {r.uid: list(r.tokens) for r in done}, eng
+
+    res = {}
+    for name, arch, over, mp, expect_plan, kw in CASES:
+        cfg = registry.get_reduced(arch, **over)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        ref, _ = serve(None, cfg, params, **kw)
+        out, eng = serve(make_host_mesh(model_axis=mp), cfg, params, **kw)
+        entry = {"plan": eng._tp.plan,
+                 "plan_ok": eng._tp.plan == expect_plan,
+                 "size_ok": eng._tp.size == mp,
+                 "match": ref == out,
+                 "decode_keys_ok":
+                     eng.decode_compiles == len(eng._decode_keys),
+                 "verify_keys_ok":
+                     eng.verify_compiles == len(eng._verify_keys)}
+        if not entry["match"]:
+            entry["ref"], entry["out"] = ref, out
+        res[name] = entry
+    print(json.dumps(res))
+"""
+
+
+def _identity(cases) -> dict:
+    out = _run(f"CASES = {cases!r}\n" + textwrap.dedent(_IDENTITY_PRELUDE))
+    return json.loads(out.strip().splitlines()[-1])
+
+
+def _assert_all(res: dict):
+    for name, e in res.items():
+        assert e["plan_ok"] and e["size_ok"], (name, e)
+        assert e["decode_keys_ok"] and e["verify_keys_ok"], \
+            (name, "silent retrace under mesh")
+        assert e["match"], (name, e)
+
+
+def test_sharded_token_identity_head_plans():
+    """GQA/MQA head plans at model_axis 2 and 4: committed tokens are
+    bit-identical to the single-device engine, and the compile-count
+    contract (no silent retraces) holds under the mesh."""
+    _assert_all(_identity([
+        ("gqa-kv-mp2", "deepseek-7b", {}, 2, "kv", {}),
+        ("gqa-kv-mp4", "deepseek-7b", {}, 4, "kv", {}),
+        ("mqa-q-mp2", "deepseek-7b", {"num_kv_heads": 1}, 2, "q", {}),
+    ]))
+
+
+def test_sharded_token_identity_q_plan_group_permutation():
+    """Hkv=2 over a 4-wide axis: KV heads can't shard, so the 'q' plan
+    splits each KV head's query group — valid only through the
+    group-interleaved head permutation (a contiguous slice would pair
+    shard 1's queries with the wrong KV head)."""
+    _assert_all(_identity([
+        ("gqa-qperm-mp4", "mistral-nemo-12b",
+         {"num_q_heads": 8, "num_kv_heads": 2}, 4, "q", {}),
+    ]))
+
+
+def test_sharded_token_identity_mla_seq_plan():
+    """MLA has one latent KV head, so the 'seq' plan shards the page-table
+    columns instead: each rank attends over its sequence slice and the
+    per-rank online-softmax states LSE-merge — split-KV decode with the
+    mesh axis as the split grid, bit-identical by the same algebra.
+    Covers both attention backends (xla flash + TL-generated Pallas)."""
+    _assert_all(_identity([
+        ("mla-seq-mp2", "deepseek-v2-lite-16b", {"moe": False}, 2, "seq",
+         {}),
+        ("mla-seq-mp4-tl", "deepseek-v2-lite-16b",
+         {"moe": False, "attn_impl": "tl_pallas"}, 4, "seq", {}),
+    ]))
+
+
+def test_sharded_token_identity_spec_decode_and_kv_quant():
+    """Serving features compose with the mesh: int8-quantized KV pages
+    (per-page scales stay replicated — the kv plan cross-shard-maxes the
+    amax so every rank quantizes with the same scale) and speculative
+    decoding (sharded verify dispatch + replicated rollback) both keep
+    the committed stream bit-identical.  One TL-Pallas arm covers the
+    generated kernels' shard path under the kv plan."""
+    _assert_all(_identity([
+        ("gqa-kv-quant-spec-mp2", "deepseek-7b", {}, 2, "kv",
+         {"kv_quant": True, "spec_decode": True}),
+        ("mla-seq-quant-spec-mp2", "deepseek-v2-lite-16b", {"moe": False},
+         2, "seq", {"kv_quant": True, "spec_decode": True}),
+        ("gqa-kv-mp2-tl", "deepseek-7b", {"attn_impl": "tl_pallas"}, 2,
+         "kv", {}),
+    ]))
+
+
+def test_sharded_engine_contracts_and_replicated_scheduler():
+    """Mesh-engine API contract: dense paths refuse (generate(), paged
+    off), a mesh without a 'model' axis refuses, the MLA seq plan
+    validates max_len divisibility up front — and the host-side
+    scheduler counters (prefix cache, COW) are *equal* between the
+    sharded and single-device arms, the replicated-scheduler invariant."""
+    out = _run("""
+        import json
+        import jax
+        from repro.models import registry, transformer
+        from repro.serve.engine import ServeEngine
+        from repro.launch.mesh import make_host_mesh
+
+        cfg = registry.get_reduced("deepseek-7b")
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        mesh = make_host_mesh(model_axis=2)
+        res = {}
+
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=128,
+                          page_size=16, mesh=mesh)
+        try:
+            eng.generate([[1, 2, 3]])
+            res["generate_raises"] = False
+        except ValueError:
+            res["generate_raises"] = True
+        try:
+            ServeEngine(cfg, params, paged=False, mesh=mesh)
+            res["dense_raises"] = False
+        except ValueError:
+            res["dense_raises"] = True
+        try:
+            ServeEngine(cfg, params, mesh=jax.make_mesh((8,), ("x",)))
+            res["no_model_axis_raises"] = False
+        except ValueError:
+            res["no_model_axis_raises"] = True
+        mla = registry.get_reduced("deepseek-v2-lite-16b", moe=False)
+        mla_params = transformer.init_params(jax.random.PRNGKey(0), mla)
+        try:
+            # 48 is a page multiple but not a page_size*model_axis multiple
+            ServeEngine(mla, mla_params, max_len=48, page_size=16,
+                        mesh=make_host_mesh(model_axis=4))
+            res["seq_max_len_raises"] = False
+        except ValueError:
+            res["seq_max_len_raises"] = True
+
+        # replicated scheduler: identical shared-prefix workload on both
+        # arms -> identical prefix/COW counters and token streams
+        shared = list(range(1, 33))
+        def serve(mesh):
+            e = ServeEngine(cfg, params, max_batch=4, max_len=256,
+                            page_size=16, decode_bucket_lo=16, mesh=mesh)
+            for tail in ([40], [40], [41, 42]):
+                e.submit(shared + tail, max_new_tokens=4)
+            done = e.run_until_drained()
+            toks = {r.uid: list(r.tokens) for r in done}
+            s = e.stats()
+            ctr = {k: s[k] for k in ("prefix_hits", "prefix_hit_tokens",
+                                     "prefill_tokens", "cow_count",
+                                     "preemptions")}
+            return toks, ctr
+        t_ref, c_ref = serve(None)
+        t_out, c_out = serve(make_host_mesh(model_axis=2))
+        res["prefix_reused"] = c_out["prefix_hits"] > 0
+        res["counters_match"] = c_ref == c_out
+        res["tokens_match"] = t_ref == t_out
+        print(json.dumps(res))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert all(res.values()), res
+
+
+# --------------------------------------------------------------------------
+# TL-backend level: shard-aware translation under shard_map
+# --------------------------------------------------------------------------
+
+def test_tl_backends_shard_axis_matches_unsharded():
+    """The TL translation layer's shard contract, below the engine: a
+    decode program translated with ``shard_axis`` and run inside
+    shard_map — each rank scanning its KV slice with a rank-local length
+    — matches the unsharded program over the full cache.  Covers the jnp
+    oracle (lse_merge_axis before the epilogue) and the Pallas backend
+    (per-rank partial states all-gathered into the combine), paged MLA
+    included; a rank whose local length goes negative masks everything
+    and merges with zero weight."""
+    out = _run("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.pipeline import cached_kernel
+        from repro.core.spec import AttnSpec
+        from repro.core.translate import translate_jnp
+        from repro.kernels import ops
+        from repro.launch.mesh import make_host_mesh
+
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:
+            from jax.experimental.shard_map import shard_map
+        mesh = make_host_mesh(model_axis=2)
+        rng = np.random.default_rng(0)
+        res = {}
+
+        # --- jnp oracle: dense runtime-length decode, KV row-sharded ----
+        bucket, d, g = 128, 32, 4
+        loc = bucket // 2
+        spec = AttnSpec(variant="mha", num_q_heads=1, num_kv_heads=1,
+                        head_dim=d, causal=False, mode="decode",
+                        dtype="f32")
+        full = cached_kernel(spec, g, bucket, "v5e", True, False)
+        part = cached_kernel(spec, g, loc, "v5e", True, False)
+        oracle_sh = translate_jnp(part.program, shard_axis="model")
+        q = jnp.asarray(rng.standard_normal((g, d)) * 0.5, jnp.float32)
+        k = jnp.asarray(rng.standard_normal((bucket, d)) * 0.5,
+                        jnp.float32)
+        v = jnp.asarray(rng.standard_normal((bucket, d)) * 0.5,
+                        jnp.float32)
+        for cache_len in (1, loc - 3, loc, bucket - 5, bucket):
+            gold = full.oracle_fn(cache_len, q, k, v)
+
+            def local(q, k, v):
+                rank = jax.lax.axis_index("model")
+                return oracle_sh(cache_len - rank * loc, q, k, v)
+
+            try:
+                f = shard_map(local, mesh=mesh,
+                              in_specs=(P(), P("model", None),
+                                        P("model", None)),
+                              out_specs=P(), check_vma=False)
+            except TypeError:
+                f = shard_map(local, mesh=mesh,
+                              in_specs=(P(), P("model", None),
+                                        P("model", None)),
+                              out_specs=P(), check_rep=False)
+            got = f(q, k, v)
+            ok = np.allclose(np.asarray(got), np.asarray(gold),
+                             atol=1e-5, rtol=1e-5)
+            res[f"oracle_len{cache_len}"] = bool(ok)
+
+        # --- Pallas backend: paged MLA decode, table columns sharded ----
+        b, h, r, rr, ps = 2, 4, 32, 16, 16
+        pool_pages, tpc = 24, bucket // ps
+        ql = jnp.asarray(rng.standard_normal((b, h, 1, r + rr)) * 0.5,
+                         jnp.float32)
+        pool = jnp.asarray(
+            rng.standard_normal((pool_pages, ps, r + rr)) * 0.5,
+            jnp.float32)
+        tables = jnp.asarray(
+            rng.permutation(pool_pages)[: b * tpc].reshape(b, tpc))
+        lens = jnp.asarray([bucket - 7, loc - 3])
+        gold = ops.paged_mla_decode(ql, pool, tables, cache_len=lens,
+                                    kv_lora_rank=r, rope_head_dim=rr)
+
+        def mla_local(ql, pool, tables, lens):
+            rank = jax.lax.axis_index("model")
+            tpr = tables.shape[1] // 2
+            tbl = jax.lax.dynamic_slice_in_dim(tables, rank * tpr, tpr,
+                                               axis=1)
+            return ops.paged_mla_decode(
+                ql, pool, tbl, cache_len=lens - rank * (tpr * ps),
+                kv_lora_rank=r, rope_head_dim=rr, shard_axis="model")
+
+        specs = dict(mesh=mesh, in_specs=(P(), P(), P(), P()),
+                     out_specs=P())
+        try:
+            f = shard_map(mla_local, check_vma=False, **specs)
+        except TypeError:
+            f = shard_map(mla_local, check_rep=False, **specs)
+        got = f(ql, pool, tables, lens)
+        res["pallas_paged_mla"] = bool(np.allclose(
+            np.asarray(got), np.asarray(gold), atol=1e-5, rtol=1e-5))
+        print(json.dumps(res))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert all(res.values()), res
+
+
+# --------------------------------------------------------------------------
+# satellite: make_host_mesh divisor fallback
+# --------------------------------------------------------------------------
+
+def test_make_host_mesh_divisor_fallback():
+    """A model_axis request that doesn't divide the device count falls
+    back to the largest divisor <= the request, so (data, model) always
+    covers all devices — no crash, no dropped devices."""
+    out = _run("""
+        import json, jax
+        from repro.launch.mesh import make_host_mesh
+        shapes = {}
+        for req in (1, 2, 3, 5, 8):
+            m = make_host_mesh(model_axis=req)
+            shapes[str(req)] = [int(m.shape["data"]), int(m.shape["model"])]
+        print(json.dumps(shapes))
+    """)
+    shapes = json.loads(out.strip().splitlines()[-1])
+    assert shapes == {"1": [8, 1], "2": [4, 2], "3": [4, 2],
+                      "5": [2, 4], "8": [1, 8]}, shapes
+
+
+def test_make_host_mesh_single_device_in_process():
+    mesh = make_host_mesh(model_axis=3)
+    assert dict(mesh.shape) == {"data": len(jax.devices()), "model": 1}
+
+
+# --------------------------------------------------------------------------
+# satellite: plan ladder / permutation / pspec rules (pure, in-process)
+# --------------------------------------------------------------------------
+
+def test_choose_serve_plan_ladder():
+    gqa = registry.get_reduced("deepseek-7b")             # 4q / 4kv
+    mqa = registry.get_reduced("deepseek-7b", num_kv_heads=1)
+    nemo = registry.get_reduced("mistral-nemo-12b",
+                                num_q_heads=8, num_kv_heads=2)
+    mla = registry.get_reduced("deepseek-v2-lite-16b", moe=False)
+
+    tp = choose_serve_plan(gqa, 1)
+    assert (tp.plan, tp.size, tp.ffn) == ("replicate", 1, False)
+    assert choose_serve_plan(gqa, 2).plan == "kv"
+    assert choose_serve_plan(gqa, 4).plan == "kv"
+    assert choose_serve_plan(gqa, 2).ffn          # d_ff=128 divides
+    # Hkv doesn't divide -> fall through to the q plan when the group does
+    assert choose_serve_plan(mqa, 2).plan == "q"
+    assert choose_serve_plan(nemo, 4).plan == "q"
+    # neither heads nor groups divide -> replicate (still valid)
+    assert choose_serve_plan(mqa, 3).plan == "replicate"
+    # MLA: seq on power-of-two axes only (bucket divisibility)
+    assert choose_serve_plan(mla, 2).plan == "seq"
+    assert choose_serve_plan(mla, 4).plan == "seq"
+    assert choose_serve_plan(mla, 3).plan == "replicate"
+    # padded q heads (56 -> 64 coder): the pad is a kernel-layout fiction,
+    # sharding it would split a partial head -> replicate
+    coder = registry.get_config("deepseek-coder-33b")
+    assert coder.pad_q_heads_to > coder.num_q_heads
+    assert choose_serve_plan(coder, 2).plan == "replicate"
+    # recurrent mixers keep their own layouts -> replicate, no FFN split
+    rwkv = registry.get_reduced("rwkv6-1.6b")
+    tp = choose_serve_plan(rwkv, 2)
+    assert (tp.plan, tp.ffn) == ("replicate", False)
+
+
+def test_q_head_permutation_grouped_reshape_invariant():
+    """The permutation's defining property: shard ``s``'s local head
+    ``kv * gl + j`` is global head ``perm[s * hl + kv * gl + j]`` and must
+    belong to KV head ``kv`` — then the local grouped reshape
+    (hq_loc -> (hkv, gl)) pairs every query with its true KV head."""
+    nemo = registry.get_reduced("mistral-nemo-12b",
+                                num_q_heads=8, num_kv_heads=2)
+    for cfg, mp in ((nemo, 2), (nemo, 4),
+                    (registry.get_reduced("deepseek-7b",
+                                          num_kv_heads=1), 2)):
+        hq, hkv = cfg.num_q_heads, cfg.num_kv_heads
+        g, gl = hq // hkv, hq // hkv // mp
+        hl = hq // mp
+        perm = q_head_permutation(cfg, mp)
+        assert sorted(perm) == list(range(hq))
+        for s in range(mp):
+            for kv in range(hkv):
+                for j in range(gl):
+                    assert perm[s * hl + kv * gl + j] // g == kv
+    # MQA: one KV head, any contiguous slice works -> identity
+    mqa = registry.get_reduced("deepseek-7b", num_kv_heads=1)
+    assert q_head_permutation(mqa, 2) == list(range(4))
+
+
+def _collect_specs(tree, fn):
+    """name -> set of PartitionSpecs across the tree (stacked layers give
+    the same base rule, so each name maps to one spec)."""
+    out = {}
+    jax.tree_util.tree_map_with_path(
+        lambda p, l: out.setdefault(
+            _name(p), set()).add(tuple(fn(p, l))), tree)
+    return out
+
+
+def _name(path):
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            return str(e.key)
+    return ""
+
+
+def test_serve_pspec_rules():
+    cfg = registry.get_reduced("deepseek-7b")
+    abs_p = transformer.abstract_params(cfg)
+    kv = choose_serve_plan(cfg, 2)
+    specs = _collect_specs(abs_p, lambda p, l: serve_param_pspec(p, l, kv))
+    # kv plan: q/k/v column-parallel on the head dim, wo row-parallel
+    # (leading axis = the scan-stacked layer dim, always replicated)
+    assert specs["wq"] == {(None, None, "model", None)}
+    assert specs["wk"] == {(None, None, "model", None)}
+    assert specs["wo"] == {(None, "model", None, None)}
+    assert specs["w_gate"] == {(None, None, "model")}
+    assert specs["w_down"] == {(None, "model", None)}
+    assert specs["table"] == {()} and specs["lm_head"] == {()}
+
+    q = choose_serve_plan(registry.get_reduced("deepseek-7b",
+                                               num_kv_heads=1), 2)
+    qs = _collect_specs(abs_p, lambda p, l: serve_param_pspec(p, l, q))
+    # q plan: KV projections stay replicated, only wq/wo shard
+    assert qs["wq"] == {(None, None, "model", None)}
+    assert qs["wk"] == {()} and qs["wv"] == {()}
+    assert qs["wo"] == {(None, "model", None, None)}
+
+    caches = transformer.init_caches(cfg, 2, 64, paged=True, page_size=16,
+                                     num_pages=9, kv_quant=True)
+    cs = _collect_specs(caches, lambda p, l: serve_cache_pspec(p, l, kv))
+    # kv plan: pools shard the head axis of (layers, P, Hkv, page, d);
+    # per-page scale tables replicate — they must stay host-identical
+    assert cs["k"] == {(None, None, "model", None, None)}
+    assert cs["v"] == {(None, None, "model", None, None)}
+    assert cs["ks"] == {()} and cs["vs"] == {()}
+    # seq plan (MLA): everything replicated on-device
+    mla = registry.get_reduced("deepseek-v2-lite-16b", moe=False)
+    seq = choose_serve_plan(mla, 2)
+    mcaches = transformer.init_caches(mla, 2, 64, paged=True, page_size=16,
+                                      num_pages=9)
+    ms = _collect_specs(mcaches,
+                        lambda p, l: serve_cache_pspec(p, l, seq))
+    assert all(v == {()} for v in ms.values()), ms
+
+
+class _FakeMesh:
+    """shape/axis_names stand-in: param_pspec only reads those, and a real
+    16x16 Mesh needs 256 devices."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_param_pspec_fallback_ladder_full_configs():
+    """The training-side rules on awkward *full* configs over a 16-wide
+    model axis: every sharded dim must divide its axis (the fallback
+    ladder's whole job), 56-head coder and kv=4 Qwen included."""
+    mesh = _FakeMesh(data=16, model=16)
+
+    def axis_size(ax):
+        return 16
+
+    for arch in ("deepseek-coder-33b", "qwen3-moe-235b-a22b"):
+        cfg = registry.get_config(arch)
+        abs_p = transformer.abstract_params(cfg)
+
+        def check(path, leaf):
+            spec = param_pspec(path, leaf, mesh)
+            for dim, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                assert leaf.shape[dim] % axis_size(ax) == 0, \
+                    (arch, _name(path), leaf.shape, tuple(spec))
+            return spec
+
+        specs = _collect_specs(abs_p, check)
+        if arch == "deepseek-coder-33b":
+            # 56 q heads pad to 64 in the kernel layout (pad_q_heads_to),
+            # and the *padded* dim divides 16 — so the parameter sharding
+            # keeps TP on the head dim while *serving* must replicate
+            # (choose_serve_plan's padded rung, tested above)
+            assert specs["wq"] == {(None, "data", "model", None)}, \
+                specs["wq"]
+        else:
+            # kv=4 Qwen: wk/wv head dim can't take the 16-wide axis
+            assert all("model" not in s for s in specs["wk"]), specs["wk"]
+            # but experts (E=128) shard expert-parallel on it
+            assert any("model" in s for s in specs["we_gate"])
